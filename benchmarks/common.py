@@ -1,0 +1,27 @@
+"""Shared benchmark utilities."""
+import time
+
+import numpy as np
+
+
+def time_call(fn, *args, warmup=2, iters=5):
+    for _ in range(warmup):
+        r = fn(*args)
+    _block(r)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+    _block(r)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def _block(r):
+    try:
+        import jax
+        jax.block_until_ready(r)
+    except Exception:
+        pass
+
+
+def csv_row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,77 @@
+"""Beyond-paper (paper §8 'Limitations'): dedicated attention-server
+pools vs in-place time-sharing, at a fixed chip budget.
+
+The paper uses in-place servers to keep memory utilization high and
+conjectures that, memory permitting, dedicating chips to CA could reduce
+compute time further. We quantify that with the cost model + the real
+scheduler:
+
+  in-place (paper): N chips each run linear layers on T/N tokens AND
+      serve a 1/N share of balanced CA.
+      T_iter = lin(T/N) + ca_total/N
+  dedicated (k servers): N-k chips run linear layers on T/(N-k) tokens;
+      k chips serve all CA. With ping-pong nano-batches the CA of one
+      nano overlaps the linear compute of the other:
+      T_iter = max(lin(T/(N-k)), ca_total/k) + dispatch
+  (activation memory per compute chip grows by N/(N-k) — the paper's
+  reason for in-place; we report it alongside.)
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cost_model import (CommModel, CostModel, ICI_BW,
+                                   PEAK_FLOPS_BF16, linear_flops_per_token)
+from repro.data.distributions import sample_lengths
+from repro.data.packing import BLOCK, pack_documents
+from benchmarks.e2e_sim import MFU_LINEAR, _chunks_to_segs, \
+    _per_rank_ca_time
+
+
+def run(arch="llama3-8b", n_chips=16, tokens_total=16 * 262144,
+        max_doc=262144, n_batches=4, seed=0):
+    cfg = get_config(arch)
+    cm = CostModel.analytic(cfg.n_heads, cfg.head_dim)
+    rng = np.random.default_rng(seed)
+    lin_tok = linear_flops_per_token(cfg) / (MFU_LINEAR * PEAK_FLOPS_BF16)
+    rows = []
+    # sample CA totals once per batch at a reference packing
+    ca_totals = []
+    for _ in range(n_batches):
+        lens = []
+        while sum(lens) < tokens_total * 1.2:
+            lens.extend(sample_lengths("pretrain", rng, 64,
+                                       max_doc).tolist())
+        tpr = tokens_total // n_chips
+        chunks = pack_documents(lens, tpr, n_chips, rng=rng)
+        segs = _chunks_to_segs(chunks, tpr)
+        home = np.arange(n_chips * (tpr // BLOCK)) // (tpr // BLOCK)
+        ca_totals.append(
+            _per_rank_ca_time(cm, segs, home, BLOCK, n_chips).sum())
+    ca_total = float(np.mean(ca_totals))
+
+    for k in (0, 1, 2, 4, 8):
+        n_comp = n_chips - k
+        if n_comp <= 0:
+            continue
+        lin = (tokens_total / n_comp) * lin_tok
+        if k == 0:  # in-place (the paper's design)
+            t = lin + ca_total / n_chips
+            mode = "in-place"
+        else:
+            t = max(lin, ca_total / k)
+            mode = f"dedicated k={k}"
+        rows.append({"mode": mode, "k": k, "t_iter": t,
+                     "mem_blowup": n_chips / n_comp,
+                     "lin_s": lin, "ca_share_s": ca_total / max(k, 1)})
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"dedicated_pool,{r['t_iter']*1e6:.1f},mode={r['mode']};"
+              f"t={r['t_iter']:.3f};mem_blowup={r['mem_blowup']:.2f};"
+              f"lin={r['lin_s']:.3f};ca_on_pool={r['ca_share_s']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper Figure 5 analogue: CA kernel throughput vs document-shard length.
+
+A 32K-token fused chunk is packed with shards of a fixed length (context
+sizes sampled); throughput should be flat down to the 128-token kernel
+tile and collapse below it (sub-tile shards waste their whole tile).
+
+Two columns: measured us/call of the jitted blockwise XLA kernel on this
+CPU (relative shape of the curve), and the cost-model-predicted TPU v5e
+throughput (absolute, used by the scheduler).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core.attention import xla_flash_attention
+from repro.core.cost_model import CostModel, ca_flops
+
+
+def run(chunk=8192, hq=4, hkv=2, dh=64):
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+    cm = CostModel.analytic(n_heads=hq, head_dim=dh)
+    rows = []
+    for shard_len in (32, 64, 128, 256, 512, 1024, 4096):
+        n = chunk // shard_len
+        seg = np.repeat(np.arange(1, n + 1), shard_len)[None]
+        pos = np.tile(np.arange(shard_len), n)[None]
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, chunk, hq, dh), jnp.float32)
+        k = jax.random.normal(ks[1], (1, chunk, hkv, dh), jnp.float32)
+        v = jax.random.normal(ks[2], (1, chunk, hkv, dh), jnp.float32)
+        segj, posj = jnp.asarray(seg), jnp.asarray(pos)
+        fn = jax.jit(lambda a, b, c: xla_flash_attention(
+            a, b, c, segj, posj, segj, posj, q_block=128, kv_block=128))
+        us = time_call(fn, q, k, v, warmup=1, iters=3)
+        flops = float(n * ca_flops(shard_len, shard_len / 2, hq, dh))
+        meas_tput = flops / (us * 1e-6)
+        # cost model: per-shard predicted time at (q=kv=shard_len)
+        pred_t = float(n * cm.predict(shard_len, shard_len))
+        pred_tput = flops / max(pred_t, 1e-12)
+        rows.append({"shard_len": shard_len, "us": us,
+                     "measured_flops_s": meas_tput,
+                     "model_tpu_flops_s": pred_tput})
+    return rows
+
+
+def main():
+    rows = run()
+    base = rows[-1]["model_tpu_flops_s"]
+    for r in rows:
+        d = (f"shard={r['shard_len']};cpu_tput={r['measured_flops_s']:.3e};"
+             f"tpu_model_tput={r['model_tpu_flops_s']:.3e};"
+             f"rel_model={r['model_tpu_flops_s']/base:.2f}")
+        print(f"fig5_kernel_throughput,{r['us']:.1f},{d}")
+
+
+if __name__ == "__main__":
+    main()

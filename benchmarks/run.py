@@ -1,0 +1,88 @@
+"""Benchmark driver — one benchmark per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py format).
+
+  table1_scaling        Table 1   — CA quadratic vs linear scaling
+  fig4_imbalance        Fig. 1/4  — packing-induced load/memory divergence
+  fig5_kernel_tput      Fig. 5    — CA throughput vs shard length
+  fig9_e2e              Fig. 9/10 — DistCA vs fixed/WLB throughput
+  fig11_overlap         Fig. 11   — ping-pong communication hiding
+  fig12_tolerance       Fig. 12   — tolerance factor sweep (real scheduler)
+  sched_microbench      §4.2      — scheduler wall-time per batch
+
+Run: PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+import numpy as np
+
+
+def sched_microbench(fast=False):
+    """Scheduler wall time — it must keep up with training steps (the
+    paper prefetches the next batch's plan on CPU)."""
+    from repro.configs import get_config
+    from repro.core.cost_model import CommModel
+    from repro.core.scheduler import Caps, schedule
+    from repro.data.distributions import sample_lengths
+    from repro.data.packing import BLOCK, pack_documents
+    from benchmarks.e2e_sim import _chunks_to_segs
+    cfg = get_config("llama3-8b")
+    comm = CommModel(cfg.n_heads, cfg.head_dim, cfg.n_kv_heads)
+    rng = np.random.default_rng(0)
+    for n_ranks, tpr in ((8, 65536), (16, 65536)):
+        nb = tpr // BLOCK
+        lens = []
+        while sum(lens) < n_ranks * tpr * 1.2:
+            lens.extend(sample_lengths("pretrain", rng, 64,
+                                       65536).tolist())
+        segs = _chunks_to_segs(
+            pack_documents(lens, tpr, n_ranks, rng=rng), tpr)
+        t0 = time.perf_counter()
+        iters = 1 if fast else 3
+        for _ in range(iters):
+            sch = schedule(segs, blk=BLOCK, n_servers=n_ranks, comm=comm,
+                           caps=Caps(cq=nb, ckv=2 * nb, nkv=4 * nb),
+                           tolerance=0.1)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        print(f"sched_microbench,{us:.1f},ranks={n_ranks};"
+              f"blocks={n_ranks*nb};moves={sch.n_moves}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (cp_overheads, dedicated_pool, e2e_sim,
+                            imbalance, kernel_throughput, overlap,
+                            pp_bubbles, table1_scaling, tolerance_sweep)
+    benches = {
+        "table1": table1_scaling.main,
+        "fig3": cp_overheads.main,
+        "fig4": imbalance.main,
+        "fig5": kernel_throughput.main,
+        "fig9": lambda: e2e_sim.main(fast=args.fast),
+        "fig10": lambda: pp_bubbles.main(fast=args.fast),
+        "fig11": lambda: overlap.main(fast=args.fast),
+        "fig12": lambda: tolerance_sweep.main(fast=args.fast),
+        "sched": lambda: sched_microbench(fast=args.fast),
+        "dedicated": dedicated_pool.main,
+    }
+    failed = 0
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn()
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},nan,ERROR")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

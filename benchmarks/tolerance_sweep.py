@@ -1,0 +1,61 @@
+"""Paper Figure 12 analogue: the scheduler tolerance factor trades CA load
+balance against communication volume.  Runs the REAL greedy scheduler."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cost_model import CommModel, CostModel, ICI_BW, \
+    PEAK_FLOPS_BF16, linear_flops_per_token
+from repro.core.scheduler import Caps, imbalance, schedule
+from repro.data.distributions import sample_lengths
+from repro.data.packing import BLOCK, pack_documents
+from benchmarks.e2e_sim import MFU_LINEAR, _chunks_to_segs, \
+    _per_rank_ca_time
+
+
+def run(arch="llama3-8b", n_ranks=8, tokens_per_rank=131072,
+        max_doc=131072, n_batches=4, seed=0):
+    cfg = get_config(arch)
+    cm = CostModel.analytic(cfg.n_heads, cfg.head_dim)
+    comm = CommModel(cfg.n_heads, cfg.head_dim, cfg.n_kv_heads)
+    lin = tokens_per_rank * linear_flops_per_token(cfg) \
+        / (MFU_LINEAR * PEAK_FLOPS_BF16)
+    rng = np.random.default_rng(seed)
+    blk = BLOCK
+    nb = tokens_per_rank // blk
+    batches = []
+    for _ in range(n_batches):
+        lens = []
+        while sum(lens) < n_ranks * tokens_per_rank * 1.2:
+            lens.extend(sample_lengths("pretrain", rng, 64,
+                                       max_doc).tolist())
+        chunks = pack_documents(lens, tokens_per_rank, n_ranks, rng=rng)
+        batches.append(_chunks_to_segs(chunks, tokens_per_rank))
+
+    rows = []
+    for tol in (0.0, 0.05, 0.10, 0.15, 0.20, 0.30, 0.50):
+        imb, comm_gb, lat = [], [], []
+        for segs in batches:
+            sch = schedule(segs, blk=blk, n_servers=n_ranks, comm=comm,
+                           caps=Caps(cq=nb, ckv=2 * nb, nkv=4 * nb),
+                           tolerance=tol)
+            ca = _per_rank_ca_time(cm, segs, sch.assign, blk, n_ranks)
+            t_comm = sch.comm_bytes / n_ranks / ICI_BW
+            lat.append(max(lin + ca.max(), t_comm))
+            imb.append(imbalance(sch.loads))
+            comm_gb.append(sch.comm_bytes / 2 ** 30)
+        rows.append({"tolerance": tol,
+                     "imbalance": float(np.mean(imb)),
+                     "comm_gib": float(np.mean(comm_gb)),
+                     "latency_s": float(np.mean(lat))})
+    return rows
+
+
+def main(fast=False):
+    for r in run(n_batches=2 if fast else 4):
+        d = (f"tol={r['tolerance']};imb={r['imbalance']:.3f};"
+             f"comm_gib={r['comm_gib']:.2f};lat={r['latency_s']:.4f}")
+        print(f"fig12_tolerance,{r['latency_s']*1e6:.1f},{d}")
+
+
+if __name__ == "__main__":
+    main()

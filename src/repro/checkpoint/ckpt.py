@@ -1,0 +1,65 @@
+"""Sharding-aware pytree checkpointing (no external deps).
+
+Layout: one .npz per checkpoint step holding flattened leaves keyed by
+their tree path, plus a metadata json.  On restore the arrays are
+device_put with the caller's shardings (or left as host arrays).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return paths, leaves, treedef
+
+
+def save(path: str, step: int, params: Any, opt_state: Any = None,
+         extra: Optional[dict] = None) -> str:
+    os.makedirs(path, exist_ok=True)
+    tree = {"params": params}
+    if opt_state is not None:
+        tree["opt_state"] = opt_state
+    paths, leaves, _ = _flatten(tree)
+    arrays = {f"a{i}": np.asarray(jax.device_get(l))
+              for i, l in enumerate(leaves)}
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    np.savez(fname, **arrays)
+    meta = {"step": step, "paths": paths,
+            "extra": extra or {}}
+    with open(fname + ".json", "w") as f:
+        json.dump(meta, f)
+    return fname
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(path)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, like: Any,
+            shardings: Any = None) -> Any:
+    """``like`` provides the target treedef (e.g. init params/opt_state)."""
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    data = np.load(fname)
+    leaves, treedef = jax.tree.flatten(like)
+    assert len(leaves) == len(data.files), \
+        f"checkpoint has {len(data.files)} leaves, model has {len(leaves)}"
+    new_leaves = [data[f"a{i}"] for i in range(len(leaves))]
+    for old, new in zip(leaves, new_leaves):
+        assert old.shape == new.shape, (old.shape, new.shape)
+    restored = jax.tree.unflatten(treedef, new_leaves)
+    if shardings is not None:
+        restored = jax.device_put(restored, shardings)
+    return restored

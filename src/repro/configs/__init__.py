@@ -1,0 +1,23 @@
+"""Architecture config registry.  ``get_config("<arch-id>")`` or
+``get_config("<arch-id>-reduced")`` for smoke-test variants."""
+from .base import (EncoderConfig, ModelConfig, MoEConfig, RGLRUConfig,
+                   SSMConfig, get_config, list_archs, register)
+
+ASSIGNED_ARCHS = (
+    "gemma2-2b",
+    "mamba2-370m",
+    "llama4-maverick-400b-a17b",
+    "qwen2-moe-a2.7b",
+    "smollm-360m",
+    "llama-3.2-vision-11b",
+    "mistral-large-123b",
+    "nemotron-4-340b",
+    "whisper-large-v3",
+    "recurrentgemma-9b",
+)
+
+PAPER_ARCHS = ("llama3-8b", "llama3-34b")
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "RGLRUConfig",
+           "EncoderConfig", "get_config", "list_archs", "register",
+           "ASSIGNED_ARCHS", "PAPER_ARCHS"]

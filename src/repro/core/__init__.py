@@ -1,0 +1,24 @@
+"""Core attention disaggregation (the paper's contribution).
+
+- attention:   the CA boundary — ref / xla-flash / pallas / cad impls
+- cost_model:  CA FLOPs + profiler-grid latency + comm bytes (App. A/B)
+- scheduler:   communication-aware greedy balancing (§4.2)
+- plan:        static-shape dispatch plans (identity / per-doc CP / sched)
+- dispatch:    shard_map all-to-all runtime + in-place attention servers
+"""
+from repro.core.attention import core_attention, ref_attention, \
+    xla_flash_attention
+from repro.core.cost_model import CommModel, CostModel, ca_flops, \
+    causal_doc_flops
+from repro.core.dispatch import CADContext, cad_attention
+from repro.core.plan import CADConfig, identity_plan, per_document_cp_plan, \
+    plan_from_schedule
+from repro.core.scheduler import Caps, Schedule, imbalance, schedule
+
+__all__ = [
+    "core_attention", "ref_attention", "xla_flash_attention",
+    "CommModel", "CostModel", "ca_flops", "causal_doc_flops",
+    "CADContext", "cad_attention", "CADConfig", "identity_plan",
+    "per_document_cp_plan", "plan_from_schedule", "Caps", "Schedule",
+    "imbalance", "schedule",
+]

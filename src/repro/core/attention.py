@@ -1,0 +1,405 @@
+"""Core attention (CA) — the paper's disaggregation boundary.
+
+``core_attention`` is the single entry point every model layer calls.  It
+computes ``softmax(QK^T)V`` with packed-document (segment) masking, causal
+or bidirectional, optional sliding window and logit softcap, under one of
+four interchangeable implementations:
+
+  ref     — materialized-mask jnp oracle (small shapes, tests)
+  xla     — blockwise online-softmax flash attention in pure jnp/lax
+            (memory-O(S·blk), the dry-run/compile path)
+  pallas  — the Pallas TPU kernel (kernels/packed_flash)
+  cad     — core attention disaggregation: CA-tasks dispatched across the
+            attention-server pool per a scheduler plan (core/dispatch)
+
+All impls share the exact same semantics; the test suite asserts their
+pairwise agreement.
+
+Shapes: q [B,Sq,Hq,dh], k/v [B,Skv,Hkv,dh] with Hq % Hkv == 0 (GQA).
+segment ids: int32 [B,S]; 0 marks padding (attends nothing / is masked
+out of loss anyway), equal nonzero ids attend within the same document.
+positions: absolute position within the *packed chunk* (used for causal
+and window tests together with segments).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30  # large-but-finite: keeps padded rows NaN-free
+
+
+def _softcap(x, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(x / cap) * cap
+    return x
+
+
+def mask_fn(seg_q, pos_q, seg_kv, pos_kv, *, causal: bool, window: int):
+    """Boolean mask [.., Sq, Skv]: True = may attend."""
+    same = (seg_q[..., :, None] == seg_kv[..., None, :])
+    valid = (seg_q[..., :, None] > 0) & (seg_kv[..., None, :] > 0)
+    m = same & valid
+    if causal:
+        m &= pos_q[..., :, None] >= pos_kv[..., None, :]
+    if window and window > 0:
+        m &= (pos_q[..., :, None] - pos_kv[..., None, :]) < window
+    return m
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+# --------------------------------------------------------------------- ref
+def ref_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
+                  window=0, softcap=0.0, scale: Optional[float] = None):
+    """O(Sq·Skv) materialized oracle."""
+    hq, hkv = q.shape[2], k.shape[2]
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = _softcap(logits, softcap)
+    m = mask_fn(seg_q, pos_q, seg_kv, pos_kv, causal=causal, window=window)
+    logits = jnp.where(m[:, None, :, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (padding) -> zero output instead of uniform garbage
+    any_valid = m.any(axis=-1)[:, None, :, None]
+    p = jnp.where(any_valid, p, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------- xla
+def xla_flash_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *,
+                        causal=True, window=0, softcap=0.0,
+                        scale: Optional[float] = None,
+                        q_block: int = 512, kv_block: int = 512,
+                        skip_masked_blocks: bool = True, shard_hint=None):
+    """Blockwise online-softmax attention in pure jnp/lax with a
+    flash-style recompute backward (memory O(S·blk) in both passes).
+
+    Baseline enumerates the full (q_block x kv_block) rectangle; with
+    ``skip_masked_blocks`` (the paper-faithful causal-triangle variant,
+    and a §Perf iteration) only block pairs that can contain unmasked
+    entries are visited, via a static lower-triangle pair list.
+
+    ``shard_hint``: optional (mesh, batch_axes, heads_axis) tuple.  The
+    scan accumulators are pinned to batch/head sharding; without this
+    GSPMD may shard them on the q-block dim, turning every per-pair
+    dynamic-slice into a full all-gather (EXPERIMENTS.md §Perf P7).
+    """
+    return _xla_flash(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal,
+                      window, softcap, scale, q_block, kv_block,
+                      skip_masked_blocks, shard_hint)
+
+
+def _hint_cons(x, shard_hint, dims):
+    """Pin dims (logical: 'b'atch, 'h'eads, None) when a hint is given."""
+    if shard_hint is None:
+        return x
+    mesh, batch_ax, heads_ax = shard_hint
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def ok(ax, size):
+        if ax is None:
+            return None
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axs:
+            n *= sizes.get(a, 1)
+        return ax if size % n == 0 else None
+
+    spec = []
+    for i, d in enumerate(dims):
+        ax = {"b": batch_ax, "h": heads_ax, None: None}[d]
+        spec.append(ok(ax, x.shape[i]))
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*spec)))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=tuple(range(7, 15)))
+def _xla_flash(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal, window,
+               softcap, scale, q_block, kv_block, skip_masked_blocks,
+               shard_hint):
+    out, _ = _xla_flash_fwd_impl(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
+                                 causal, window, softcap, scale, q_block,
+                                 kv_block, skip_masked_blocks, shard_hint)
+    return out
+
+
+def _prep_blocks(q, k, v, seg_q, pos_q, seg_kv, pos_kv, q_block, kv_block,
+                 causal, skip_masked_blocks):
+    b, sq, hq, dh = q.shape
+    skv = k.shape[1]
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    nq = -(-sq // q_block)
+    nk = -(-skv // kv_block)
+    pad_q = nq * q_block - sq
+    pad_k = nk * kv_block - skv
+
+    def padq(x, val=0):
+        return jnp.pad(x, [(0, 0), (0, pad_q)] + [(0, 0)] * (x.ndim - 2),
+                       constant_values=val) if pad_q else x
+
+    def padk(x, val=0):
+        return jnp.pad(x, [(0, 0), (0, pad_k)] + [(0, 0)] * (x.ndim - 2),
+                       constant_values=val) if pad_k else x
+
+    qb = padq(q).reshape(b, nq, q_block, hq, dh)
+    kb = padk(k).reshape(b, nk, kv_block, k.shape[2], dh)
+    vb = padk(v).reshape(b, nk, kv_block, k.shape[2], dh)
+    sqb = padq(seg_q).reshape(b, nq, q_block)
+    pqb = padq(pos_q).reshape(b, nq, q_block)
+    skb = padk(seg_kv).reshape(b, nk, kv_block)
+    pkb = padk(pos_kv).reshape(b, nk, kv_block)
+
+    # static (i, j) pair list.  Packed chunks lay documents out in order,
+    # so causal triangle pruning is sound on chunk-position blocks.
+    if skip_masked_blocks and causal and sq == skv:
+        pairs = [(i, j) for i in range(nq) for j in range(nk)
+                 if j * kv_block < (i + 1) * q_block]
+    else:
+        pairs = [(i, j) for i in range(nq) for j in range(nk)]
+    return (qb, kb, vb, sqb, pqb, skb, pkb,
+            jnp.asarray(pairs, jnp.int32), (b, sq, hq, dh, nq, nk,
+                                            q_block, kv_block))
+
+
+def _pair_logits(qi, kj, sqi, pqi, skj, pkj, scale, softcap, causal,
+                 window):
+    """logits + mask for one (q-block, kv-block) pair."""
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qi.astype(jnp.float32),
+                        kj.astype(jnp.float32)) * scale
+    logits = _softcap(logits, softcap)
+    msk = mask_fn(sqi, pqi, skj, pkj, causal=causal, window=window)
+    return jnp.where(msk[:, None], logits, NEG_INF), msk
+
+
+def _xla_flash_fwd_impl(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal,
+                        window, softcap, scale, q_block, kv_block,
+                        skip_masked_blocks, shard_hint=None):
+    hq, hkv = q.shape[2], k.shape[2]
+    n_rep = hq // hkv
+    dh = q.shape[-1]
+    scale = scale if scale is not None else dh ** -0.5
+    (qb, kb, vb, sqb, pqb, skb, pkb, pairs,
+     (b, sq, _, _, nq, nk, qbk, kbk)) = _prep_blocks(
+        q, k, v, seg_q, pos_q, seg_kv, pos_kv, q_block, kv_block, causal,
+        skip_masked_blocks)
+    qb = _hint_cons(qb, shard_hint, ("b", None, None, "h", None))
+    kb = _hint_cons(kb, shard_hint, ("b", None, None, "h", None))
+    vb = _hint_cons(vb, shard_hint, ("b", None, None, "h", None))
+
+    m0 = _hint_cons(jnp.full((b, nq, hq, qbk), NEG_INF, jnp.float32),
+                    shard_hint, ("b", None, "h", None))
+    l0 = _hint_cons(jnp.zeros((b, nq, hq, qbk), jnp.float32),
+                    shard_hint, ("b", None, "h", None))
+    a0 = _hint_cons(jnp.zeros((b, nq, hq, qbk, dh), jnp.float32),
+                    shard_hint, ("b", None, "h", None, None))
+
+    def body(carry, pair):
+        m_acc, l_acc, o_acc = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qb, i, 1, False)
+        kj = _repeat_kv(jax.lax.dynamic_index_in_dim(kb, j, 1, False),
+                        n_rep)
+        vj = _repeat_kv(jax.lax.dynamic_index_in_dim(vb, j, 1, False),
+                        n_rep)
+        logits, msk = _pair_logits(
+            qi, kj,
+            jax.lax.dynamic_index_in_dim(sqb, i, 1, False),
+            jax.lax.dynamic_index_in_dim(pqb, i, 1, False),
+            jax.lax.dynamic_index_in_dim(skb, j, 1, False),
+            jax.lax.dynamic_index_in_dim(pkb, j, 1, False),
+            scale, softcap, causal, window)
+        mi = jax.lax.dynamic_index_in_dim(m_acc, i, 1, False)
+        li = jax.lax.dynamic_index_in_dim(l_acc, i, 1, False)
+        oi = jax.lax.dynamic_index_in_dim(o_acc, i, 1, False)
+        m_new = jnp.maximum(mi, logits.max(axis=-1))
+        p = jnp.where(msk[:, None], jnp.exp(logits - m_new[..., None]), 0.0)
+        corr = jnp.exp(mi - m_new)
+        l_new = li * corr + p.sum(axis=-1)
+        o_new = oi * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vj.astype(jnp.float32))
+        m_acc = jax.lax.dynamic_update_index_in_dim(m_acc, m_new, i, 1)
+        l_acc = jax.lax.dynamic_update_index_in_dim(l_acc, l_new, i, 1)
+        o_acc = jax.lax.dynamic_update_index_in_dim(o_acc, o_new, i, 1)
+        return (m_acc, l_acc, o_acc), None
+
+    (m_acc, l_acc, o_acc), _ = jax.lax.scan(body, (m0, l0, a0), pairs)
+    out = o_acc / jnp.maximum(l_acc, 1e-30)[..., None]
+    live = m_acc > NEG_INF / 2
+    out = jnp.where(live[..., None], out, 0.0)
+    # logsumexp per row; dead rows get +big so recomputed p underflows to 0
+    lse = jnp.where(live, m_acc + jnp.log(jnp.maximum(l_acc, 1e-30)),
+                    jnp.float32(2.0 ** 30))          # [b, nq, hq, qbk]
+    out = out.transpose(0, 1, 3, 2, 4).reshape(b, nq * qbk, hq, dh)
+    return out[:, :sq].astype(q.dtype), lse
+
+
+def _xla_flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal, window,
+                   softcap, scale, q_block, kv_block, skip_masked_blocks,
+                   shard_hint):
+    out, lse = _xla_flash_fwd_impl(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
+                                   causal, window, softcap, scale, q_block,
+                                   kv_block, skip_masked_blocks, shard_hint)
+    return out, (q, k, v, seg_q, pos_q, seg_kv, pos_kv, out, lse)
+
+
+def _xla_flash_bwd(causal, window, softcap, scale, q_block, kv_block,
+                   skip_masked_blocks, shard_hint, res, g):
+    """Flash-style recompute backward: per (i, j) pair recompute p from the
+    saved logsumexp, accumulate dq/dk/dv.  Memory O(S·blk)."""
+    q, k, v, seg_q, pos_q, seg_kv, pos_kv, out, lse = res
+    hq, hkv = q.shape[2], k.shape[2]
+    n_rep = hq // hkv
+    dh = q.shape[-1]
+    scale_v = scale if scale is not None else dh ** -0.5
+    (qb, kb, vb, sqb, pqb, skb, pkb, pairs,
+     (b, sq, _, _, nq, nk, qbk, kbk)) = _prep_blocks(
+        q, k, v, seg_q, pos_q, seg_kv, pos_kv, q_block, kv_block, causal,
+        skip_masked_blocks)
+    qb = _hint_cons(qb, shard_hint, ("b", None, None, "h", None))
+    kb = _hint_cons(kb, shard_hint, ("b", None, None, "h", None))
+    vb = _hint_cons(vb, shard_hint, ("b", None, None, "h", None))
+    pad_q = nq * qbk - sq
+
+    def padq(x):
+        return jnp.pad(x, [(0, 0), (0, pad_q)] + [(0, 0)] * (x.ndim - 2)) \
+            if pad_q else x
+
+    gb = padq(g.astype(jnp.float32)).reshape(b, nq, qbk, hq, dh)
+    ob = padq(out.astype(jnp.float32)).reshape(b, nq, qbk, hq, dh)
+    # delta_i = rowsum(do * o)   [b, nq, hq, qbk]
+    delta = jnp.einsum("biqhd,biqhd->bihq", gb, ob)
+
+    dq0 = _hint_cons(jnp.zeros((b, nq, qbk, hq, dh), jnp.float32),
+                     shard_hint, ("b", None, None, "h", None))
+    dk0 = _hint_cons(jnp.zeros((b, nk, kbk, hkv, dh), jnp.float32),
+                     shard_hint, ("b", None, None, "h", None))
+    dv0 = _hint_cons(jnp.zeros((b, nk, kbk, hkv, dh), jnp.float32),
+                     shard_hint, ("b", None, None, "h", None))
+
+    def body(carry, pair):
+        dq_acc, dk_acc, dv_acc = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qb, i, 1, False)
+        kj = _repeat_kv(jax.lax.dynamic_index_in_dim(kb, j, 1, False),
+                        n_rep)
+        vj = _repeat_kv(jax.lax.dynamic_index_in_dim(vb, j, 1, False),
+                        n_rep)
+        logits, msk = _pair_logits(
+            qi, kj,
+            jax.lax.dynamic_index_in_dim(sqb, i, 1, False),
+            jax.lax.dynamic_index_in_dim(pqb, i, 1, False),
+            jax.lax.dynamic_index_in_dim(skb, j, 1, False),
+            jax.lax.dynamic_index_in_dim(pkb, j, 1, False),
+            scale_v, softcap, causal, window)
+        lse_i = jax.lax.dynamic_index_in_dim(lse, i, 1, False)
+        p = jnp.where(msk[:, None], jnp.exp(logits - lse_i[..., None]), 0.0)
+        gi = jax.lax.dynamic_index_in_dim(gb, i, 1, False)   # [b,qbk,hq,dh]
+        di = jax.lax.dynamic_index_in_dim(delta, i, 1, False)  # [b,hq,qbk]
+        # dv_j += p^T do_i
+        dvj = jnp.einsum("bhqk,bqhd->bkhd", p, gi)
+        # dp = do_i v_j^T ; ds = p (dp - delta)
+        dp = jnp.einsum("bqhd,bkhd->bhqk", gi, vj.astype(jnp.float32))
+        ds = p * (dp - di[..., None])
+        if softcap and softcap > 0:
+            # s = cap*tanh(s_raw/cap); ds_raw = ds * (1 - (s/cap)^2)
+            sc = jnp.where(msk[:, None], logits / softcap, 0.0)
+            ds = ds * (1.0 - sc * sc)
+        ds = ds * scale_v
+        dqi = jnp.einsum("bhqk,bkhd->bqhd", ds, kj.astype(jnp.float32))
+        dkj = jnp.einsum("bhqk,bqhd->bkhd", ds, qi.astype(jnp.float32))
+        # fold GQA repeats back onto kv heads
+        dkj = dkj.reshape(b, kbk, hkv, n_rep, dh).sum(3)
+        dvj = dvj.reshape(b, kbk, hkv, n_rep, dh).sum(3)
+        dq_acc = jax.lax.dynamic_update_index_in_dim(
+            dq_acc, jax.lax.dynamic_index_in_dim(dq_acc, i, 1, False)
+            + dqi, i, 1)
+        dk_acc = jax.lax.dynamic_update_index_in_dim(
+            dk_acc, jax.lax.dynamic_index_in_dim(dk_acc, j, 1, False)
+            + dkj, j, 1)
+        dv_acc = jax.lax.dynamic_update_index_in_dim(
+            dv_acc, jax.lax.dynamic_index_in_dim(dv_acc, j, 1, False)
+            + dvj, j, 1)
+        return (dq_acc, dk_acc, dv_acc), None
+
+    (dqb, dkb, dvb), _ = jax.lax.scan(body, (dq0, dk0, dv0), pairs)
+    skv = k.shape[1]
+    dq = dqb.reshape(b, nq * qbk, hq, dh)[:, :sq].astype(q.dtype)
+    dk = dkb.reshape(b, nk * kbk, hkv, dh)[:, :skv].astype(k.dtype)
+    dv = dvb.reshape(b, nk * kbk, hkv, dh)[:, :skv].astype(v.dtype)
+    return dq, dk, dv, None, None, None, None
+
+
+_xla_flash.defvjp(_xla_flash_fwd, _xla_flash_bwd)
+
+
+# ---------------------------------------------------------------- decoding
+def decode_attention(q, k_cache, v_cache, cache_len_mask, pos_q, pos_kv, *,
+                     window=0, softcap=0.0, scale: Optional[float] = None):
+    """One-token (or few-token) query against a cache.
+
+    q [B,1,Hq,dh]; caches [B,S,Hkv,dh]; cache_len_mask [B,S] bool (True =
+    slot holds a real token); pos_kv [B,S] absolute positions (supports
+    ring buffers where slot order != position order).
+    """
+    b, sq, hq, dh = q.shape
+    hkv = k_cache.shape[2]
+    n_rep = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    k = _repeat_kv(k_cache, n_rep)
+    v = _repeat_kv(v_cache, n_rep)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = _softcap(logits, softcap)
+    m = cache_len_mask[:, None, None, :] & (
+        pos_q[:, None, :, None] >= pos_kv[:, None, None, :])
+    if window and window > 0:
+        m &= (pos_q[:, None, :, None] - pos_kv[:, None, None, :]) < window
+    logits = jnp.where(m, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(m.any(-1)[..., None], p, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------------ router
+def core_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
+                   window=0, softcap=0.0, ctx=None, scale=None):
+    """Dispatch by ``ctx.attn_impl`` (default ref)."""
+    impl = getattr(ctx, "attn_impl", "ref") if ctx is not None else "ref"
+    kw = dict(causal=causal, window=window, softcap=softcap, scale=scale)
+    if impl == "ref":
+        return ref_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, **kw)
+    if impl == "xla":
+        hint = None
+        mesh = getattr(ctx, "mesh", None)
+        if mesh is not None and "model" in mesh.axis_names:
+            msize = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+            heads_ax = "model" if q.shape[2] % msize == 0 else None
+            hint = (mesh, ctx.rules.batch, heads_ax)
+        return xla_flash_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
+                                   shard_hint=hint, **kw)
+    if impl == "pallas":
+        from repro.kernels.packed_flash import ops as pf_ops
+        return pf_ops.packed_flash_attention(
+            q, k, v, seg_q, pos_q, seg_kv, pos_kv, **kw)
+    if impl == "cad":
+        from repro.core import dispatch as cad_dispatch
+        return cad_dispatch.cad_attention(
+            q, k, v, seg_q, pos_q, seg_kv, pos_kv, ctx=ctx, **kw)
+    raise ValueError(f"unknown attn impl {impl!r}")

@@ -1,0 +1,153 @@
+"""Cost model for CA-tasks and communication (paper §4.2 "Profiler" +
+Appendix A/B).
+
+On real hardware the paper benchmarks a (q_len, kv_len) latency grid and
+bilinearly interpolates.  We keep exactly that interface (``from_grid``)
+but default to an analytic roofline-calibrated model, since this container
+has no TPU to measure.  Everything downstream (scheduler, benchmarks,
+e2e simulator) consumes only this interface, so a measured grid drops in.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+# TPU v5e hardware constants (per chip) — single source of truth, also used
+# by launch/roofline.py
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link
+BYTES_PER_EL = 2                  # bf16
+
+
+def ca_flops(q_tokens: int | np.ndarray, kv_tokens: int | np.ndarray,
+             n_heads: int, head_dim: int) -> np.ndarray:
+    """FLOPs of core attention for q tokens against kv context:
+    2·q·kv·H·dh (QK^T) + 2·q·kv·H·dh (PV)."""
+    return 4.0 * np.asarray(q_tokens, np.float64) * kv_tokens \
+        * n_heads * head_dim
+
+
+def causal_doc_flops(doc_len: int | np.ndarray, n_heads: int,
+                     head_dim: int) -> np.ndarray:
+    """Total CA FLOPs of a causal document: sum_t 4·t·H·dh ≈ 2·l²·H·dh."""
+    l = np.asarray(doc_len, np.float64)
+    return 2.0 * l * (l + 1) * n_heads * head_dim
+
+
+def linear_flops_per_token(cfg) -> float:
+    """FLOPs per token of the context-independent layers (App. A formula:
+    2·h·(2h + h_kv + 3i) per layer, adapted per arch)."""
+    d = cfg.d_model
+    hq = cfg.n_heads * cfg.head_dim
+    hkv = cfg.n_kv_heads * cfg.head_dim
+    total = 0.0
+    for t in cfg.layer_pattern:
+        if t in ("global", "local", "cross", "enc"):
+            attn = 2 * (d * hq * 2 + d * hkv * 2)
+            if t == "cross":
+                attn *= 2
+            total += attn + 2 * cfg._ffn_active_flops_per_token()
+        elif t == "rglru":
+            w = cfg.rglru.lru_width or d
+            total += 2 * (2 * d * w + 2 * w * w + w * d) \
+                + 2 * cfg._ffn_active_flops_per_token()
+        elif t == "ssd":
+            s = cfg.ssm
+            d_in = s.expand * d
+            total += 2 * d * (2 * d_in + 2 * s.n_groups * s.d_state
+                              + d_in // s.head_dim) + 2 * d_in * d
+    return total * cfg.n_layers / len(cfg.layer_pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommModel:
+    """Bytes of moving CA-task inputs/outputs (App. B)."""
+    n_heads: int
+    head_dim: int
+    n_kv_heads: int
+    bytes_per_el: int = BYTES_PER_EL
+
+    @property
+    def size_q(self) -> int:          # bytes per q token (q + returned o)
+        return 2 * self.n_heads * self.head_dim * self.bytes_per_el
+
+    @property
+    def size_kv(self) -> int:         # bytes per kv token (k and v)
+        return 2 * self.n_kv_heads * self.head_dim * self.bytes_per_el
+
+    def migration_bytes(self, n_q_tokens: int, n_kv_tokens: int) -> float:
+        return n_q_tokens * self.size_q + n_kv_tokens * self.size_kv
+
+
+class CostModel:
+    """Predicts CA-task execution time.  Bilinear interpolation over a
+    (q_len, kv_len) grid — the paper's profiler — with an analytic default
+    grid derived from the roofline constants."""
+
+    def __init__(self, q_grid: np.ndarray, kv_grid: np.ndarray,
+                 time_grid: np.ndarray, n_heads: int, head_dim: int,
+                 peak_flops: float = PEAK_FLOPS_BF16):
+        self.q_grid = np.asarray(q_grid, np.float64)
+        self.kv_grid = np.asarray(kv_grid, np.float64)
+        self.time_grid = np.asarray(time_grid, np.float64)
+        self.n_heads, self.head_dim = n_heads, head_dim
+        self.peak_flops = peak_flops
+
+    # -------------------------------------------------------- constructors
+    @classmethod
+    def analytic(cls, n_heads: int, head_dim: int,
+                 peak_flops: float = PEAK_FLOPS_BF16,
+                 mfu_saturated: float = 0.4, tile: int = 128):
+        """Latency = flops / (mfu(q)·peak); small shards (< tile) waste
+        their thread block — the Fig. 5 throughput cliff.
+
+        mfu_saturated defaults to 0.4: masked varlen flash attention runs
+        well below GEMM efficiency (FA2-class kernels reach ~35-45% of
+        peak on packed variable-length batches; cf. the paper's Fig. 5 and
+        our benchmarks/kernel_throughput.py reproduction).  GEMM-dominated
+        linear layers use MFU_LINEAR=0.5 in the simulators."""
+        q_grid = np.array([16, 32, 64, 128, 256, 512, 1024, 4096, 32768])
+        kv_grid = np.array([128, 512, 2048, 8192, 32768, 131072, 524288])
+        tg = np.zeros((len(q_grid), len(kv_grid)))
+        for i, q in enumerate(q_grid):
+            # sub-tile shards are padded to the tile -> mfu ∝ q/tile
+            eff = mfu_saturated * min(1.0, q / tile)
+            for j, kv in enumerate(kv_grid):
+                f = ca_flops(q, kv, n_heads, head_dim)
+                tg[i, j] = f / (eff * peak_flops)
+        return cls(q_grid, kv_grid, tg, n_heads, head_dim, peak_flops)
+
+    @classmethod
+    def from_grid(cls, q_grid, kv_grid, time_grid, n_heads, head_dim):
+        """Drop-in for a measured profiler grid."""
+        return cls(q_grid, kv_grid, time_grid, n_heads, head_dim)
+
+    # ------------------------------------------------------------- predict
+    def predict(self, q_len, kv_len) -> np.ndarray:
+        """Bilinear interpolation; saturation region falls back to peak
+        throughput (paper §4.2)."""
+        q = np.clip(np.asarray(q_len, np.float64), self.q_grid[0],
+                    self.q_grid[-1])
+        kv = np.clip(np.asarray(kv_len, np.float64), self.kv_grid[0],
+                     self.kv_grid[-1])
+        qi = np.clip(np.searchsorted(self.q_grid, q) - 1, 0,
+                     len(self.q_grid) - 2)
+        ki = np.clip(np.searchsorted(self.kv_grid, kv) - 1, 0,
+                     len(self.kv_grid) - 2)
+        q0, q1 = self.q_grid[qi], self.q_grid[qi + 1]
+        k0, k1 = self.kv_grid[ki], self.kv_grid[ki + 1]
+        tq = (q - q0) / (q1 - q0)
+        tk = (kv - k0) / (k1 - k0)
+        t00 = self.time_grid[qi, ki]
+        t01 = self.time_grid[qi, ki + 1]
+        t10 = self.time_grid[qi + 1, ki]
+        t11 = self.time_grid[qi + 1, ki + 1]
+        interp = (t00 * (1 - tq) * (1 - tk) + t01 * (1 - tq) * tk
+                  + t10 * tq * (1 - tk) + t11 * tq * tk)
+        # saturation: never below peak-throughput time
+        floor = ca_flops(q, kv, self.n_heads, self.head_dim) \
+            / self.peak_flops
+        return np.maximum(interp, floor)

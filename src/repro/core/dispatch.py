@@ -1,0 +1,418 @@
+"""CAD runtime: dispatch CA-tasks to the attention-server pool.
+
+Dataflow per transformer layer (paper §4.1, Figure 2):
+
+  local q/k/v blocks --gather--> per-destination send buffers
+      --all_to_all--> attention servers (in-place: same devices)
+      --fused CA kernel over the task batch--> outputs
+      --all_to_all (transposed)--> home ranks --scatter--> local layout
+
+Everything is linear except the CA kernel, so JAX transposes the backward
+pass to the mirror-image communication automatically (the paper's
+"backward reuses the schedule" property holds by construction).
+
+Two execution paths with identical math (shared helpers):
+  * shard_map over the mesh's data axes with lax.all_to_all — the real
+    distributed path (dry-run / TPU).
+  * a "global simulation" on a single device where the exchange is a
+    transpose on stacked [D, ...] arrays — used by tests & CPU examples;
+    it IS the same per-rank code vmapped.
+
+Ping-pong (paper §4.1): the layer's rows are split into two nano-batches
+whose dispatch/compute phases are interleaved so XLA's async collectives
+can overlap the A2A of one with the CA compute of the other.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.attention import NEG_INF, xla_flash_attention
+from repro.core.plan import CADConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CADContext:
+    """Static CAD pool description + the (traced) plan for this step."""
+    cfg: CADConfig
+    plan: Any = None          # dict of int32 arrays, or (ping, pong) tuple
+    kernel: str = "pallas"    # "pallas" | "xla" server implementation
+    jmax: int = 0             # max kv blocks any task touches (0 -> nkv)
+    pingpong: bool = False
+
+    def bind_plan(self, ctx, plan):
+        new_cad = dataclasses.replace(self, plan=plan)
+        return dataclasses.replace(ctx, cad=new_cad)
+
+
+# ------------------------------------------------------------ helpers
+def _to_blocks(x, blk):
+    """[Bl, S, ...] -> [NB, blk, ...] (row-major token stream)."""
+    bl, s = x.shape[:2]
+    nb = bl * s // blk
+    return x.reshape((nb, blk) + x.shape[2:])
+
+
+def _gather_blocks(xb, idx, fill=0.0):
+    """xb [NB, ...]; idx [...] with -1 padding -> gathered, pad = fill."""
+    safe = jnp.maximum(idx, 0)
+    out = xb[safe]
+    mask = (idx >= 0).reshape(idx.shape + (1,) * (xb.ndim - 1))
+    return jnp.where(mask, out, fill)
+
+
+def _make_sends(qb, kb, vb, posb, plan):
+    """Per-rank send buffers.  plan rows are this rank's (as src)."""
+    q_send = _gather_blocks(qb, plan["q_send_idx"])      # [D, CQ, blk, H, dh]
+    qpos_send = _gather_blocks(posb, plan["q_send_idx"], fill=-1)
+    k_send = _gather_blocks(kb, plan["kv_send_idx"])     # [D, CKV, blk, Hk, dh]
+    v_send = _gather_blocks(vb, plan["kv_send_idx"])
+    kpos_send = _gather_blocks(posb, plan["kv_send_idx"], fill=-1)
+    return q_send, qpos_send, k_send, v_send, kpos_send
+
+
+def _server_tasks(qb, kb, vb, posb, recv, plan, cfg: CADConfig):
+    """Assemble the fused CA-task batch on this server."""
+    q_recv, qpos_recv, k_recv, v_recv, kpos_recv = recv
+    d, cq, ckv = cfg.n_servers, cfg.cq, cfg.ckv
+    # task list: home tasks then received tasks
+    q_home = _gather_blocks(qb, plan["q_home_idx"])
+    qpos_home = _gather_blocks(posb, plan["q_home_idx"], fill=-1)
+    q_tasks = jnp.concatenate(
+        [q_home, q_recv.reshape((d * cq,) + q_recv.shape[2:])], axis=0)
+    qpos_tasks = jnp.concatenate(
+        [qpos_home, qpos_recv.reshape(d * cq, -1)], axis=0)
+    # dense kv buffer: concat(local blocks, received slots), then gather
+    k_all = jnp.concatenate(
+        [kb, k_recv.reshape((d * ckv,) + k_recv.shape[2:])], axis=0)
+    v_all = jnp.concatenate(
+        [vb, v_recv.reshape((d * ckv,) + v_recv.shape[2:])], axis=0)
+    kpos_all = jnp.concatenate(
+        [posb, kpos_recv.reshape(d * ckv, -1)], axis=0)
+    k_buf = _gather_blocks(k_all, plan["kv_gather"])
+    v_buf = _gather_blocks(v_all, plan["kv_gather"])
+    kpos_buf = _gather_blocks(kpos_all, plan["kv_gather"], fill=-1)
+    return q_tasks, qpos_tasks, k_buf, v_buf, kpos_buf
+
+
+def _server_pair(qf, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, j, *,
+                 softcap, window, scale, rep, n):
+    """logits/mask/value block for relative kv index j of every task."""
+    idx = jnp.clip(kv_start + j, 0, n - 1)                  # [T]
+    kj = k_buf[idx]                                         # [T, blk, Hkv, dh]
+    vj = v_buf[idx]
+    pkj = kv_pos[idx]                                       # [T, blk]
+    if rep > 1:
+        kj = jnp.repeat(kj, rep, axis=2)
+        vj = jnp.repeat(vj, rep, axis=2)
+    logits = jnp.einsum("tqhd,tkhd->thqk", qf,
+                        kj.astype(jnp.float32)) * scale
+    if softcap and softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    live = (j < kv_len)[:, None, None, None]
+    msk = (q_pos[:, None, :, None] >= pkj[:, None, None, :]) \
+        & (q_pos[:, None, :, None] >= 0) \
+        & (pkj[:, None, None, :] >= 0) & live
+    if window and window > 0:
+        msk &= (q_pos[:, None, :, None] - pkj[:, None, None, :]) < window
+    return jnp.where(msk, logits, NEG_INF), msk, kj, vj, idx
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def _xla_server(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
+                jmax, softcap, window, scale):
+    out, _ = _xla_server_fwd_impl(q_tasks, k_buf, v_buf, kv_start, kv_len,
+                                  q_pos, kv_pos, jmax, softcap, window,
+                                  scale)
+    return out
+
+
+def _xla_server_fwd_impl(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
+                         kv_pos, jmax, softcap, window, scale):
+    """Blockwise jnp attention-server (the compile/dry-run path): scan over
+    relative kv-block index j, gathering each task's j-th context block."""
+    T, blk, hq, dh = q_tasks.shape
+    n = k_buf.shape[0]
+    rep = hq // k_buf.shape[2]
+    scale = scale if scale is not None else dh ** -0.5
+    qf = q_tasks.astype(jnp.float32)
+    m0 = jnp.full((T, hq, blk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((T, hq, blk), jnp.float32)
+    a0 = jnp.zeros((T, hq, blk, dh), jnp.float32)
+
+    def body(carry, j):
+        m_acc, l_acc, acc = carry
+        logits, msk, kj, vj, _ = _server_pair(
+            qf, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, j,
+            softcap=softcap, window=window, scale=scale, rep=rep, n=n)
+        m_new = jnp.maximum(m_acc, logits.max(-1))
+        p = jnp.where(msk, jnp.exp(logits - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_acc - m_new)
+        l_new = l_acc * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "thqk,tkhd->thqd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    (m_acc, l_acc, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                          jnp.arange(jmax))
+    out = acc / jnp.maximum(l_acc, 1e-30)[..., None]
+    live = m_acc > NEG_INF / 2
+    out = jnp.where(live[..., None], out, 0.0)
+    lse = jnp.where(live, m_acc + jnp.log(jnp.maximum(l_acc, 1e-30)),
+                    jnp.float32(2.0 ** 30))
+    return out.transpose(0, 2, 1, 3).astype(q_tasks.dtype), lse
+
+
+def _xla_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
+                    jmax, softcap, window, scale):
+    out, lse = _xla_server_fwd_impl(q_tasks, k_buf, v_buf, kv_start,
+                                    kv_len, q_pos, kv_pos, jmax, softcap,
+                                    window, scale)
+    return out, (q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
+                 out, lse)
+
+
+def _xla_server_bwd(jmax, softcap, window, scale, res, g):
+    """Flash-style recompute backward: nothing quadratic is saved."""
+    q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, out, lse = res
+    T, blk, hq, dh = q_tasks.shape
+    n = k_buf.shape[0]
+    hkv = k_buf.shape[2]
+    rep = hq // hkv
+    scale_v = scale if scale is not None else dh ** -0.5
+    qf = q_tasks.astype(jnp.float32)
+    gf = g.astype(jnp.float32)                              # [T,blk,hq,dh]
+    of = out.astype(jnp.float32)
+    delta = jnp.einsum("tqhd,tqhd->thq", gf, of)            # [T,hq,blk]
+
+    dq0 = jnp.zeros((T, blk, hq, dh), jnp.float32)
+    dk0 = jnp.zeros((n, blk, hkv, dh), jnp.float32)
+    dv0 = jnp.zeros((n, blk, hkv, dh), jnp.float32)
+
+    def body(carry, j):
+        dq_acc, dk_acc, dv_acc = carry
+        logits, msk, kj, vj, idx = _server_pair(
+            qf, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, j,
+            softcap=softcap, window=window, scale=scale_v, rep=rep, n=n)
+        p = jnp.where(msk, jnp.exp(logits - lse[..., None]), 0.0)
+        dvj = jnp.einsum("thqk,tqhd->tkhd", p, gf)          # [T,blk,hq,dh]
+        dp = jnp.einsum("tqhd,tkhd->thqk", gf, vj.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        if softcap and softcap > 0:
+            sc = jnp.where(msk, logits / softcap, 0.0)
+            ds = ds * (1.0 - sc * sc)
+        ds = ds * scale_v
+        dq_acc = dq_acc + jnp.einsum("thqk,tkhd->tqhd", ds,
+                                     kj.astype(jnp.float32))
+        dkj = jnp.einsum("thqk,tqhd->tkhd", ds, qf)
+        # fold GQA repeats, scatter-add into kv buffer rows
+        dkj = dkj.reshape(T, blk, hkv, rep, dh).sum(3)
+        dvj = dvj.reshape(T, blk, hkv, rep, dh).sum(3)
+        live = (j < kv_len).astype(jnp.float32)[:, None, None, None]
+        dk_acc = dk_acc.at[idx].add(dkj * live)
+        dv_acc = dv_acc.at[idx].add(dvj * live)
+        return (dq_acc, dk_acc, dv_acc), None
+
+    (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0),
+                                   jnp.arange(jmax))
+    return (dq.astype(q_tasks.dtype), dk.astype(k_buf.dtype),
+            dv.astype(v_buf.dtype), None, None, None, None)
+
+
+_xla_server.defvjp(_xla_server_fwd, _xla_server_bwd)
+
+
+def _serve(q_tasks, qpos_tasks, k_buf, v_buf, kpos_buf, plan, cad,
+           softcap, window, scale):
+    jmax = cad.jmax or cad.cfg.nkv
+    if cad.kernel == "pallas":
+        from repro.kernels.packed_flash.ops import ca_server_attention
+        return ca_server_attention(
+            q_tasks, k_buf, v_buf, plan["task_kv_start"],
+            plan["task_kv_len"], qpos_tasks, kpos_buf,
+            True, window, softcap, scale)
+    return _xla_server(q_tasks, k_buf, v_buf, plan["task_kv_start"],
+                       plan["task_kv_len"], qpos_tasks, kpos_buf,
+                       jmax, softcap, window, scale)
+
+
+def _scatter_outputs(out_tasks, ret_recv, plan, cfg: CADConfig, nb, blk,
+                     hq, dh, dtype):
+    """Home-rank reassembly: home task slots + returned remote outputs."""
+    out = jnp.zeros((nb, blk, hq, dh), jnp.float32)
+    # home tasks: slot i corresponds to local block q_home_idx[i]
+    idx_home = plan["q_home_idx"]
+    safe = jnp.maximum(idx_home, 0)
+    contrib = jnp.where((idx_home >= 0)[:, None, None, None],
+                        out_tasks[:nb].astype(jnp.float32), 0.0)
+    out = out.at[safe].add(contrib)
+    # remote returns: ret_recv [D, CQ, blk, H, dh]; slot (s, c) is the
+    # output of local block q_send_idx[s, c] (this rank's row as src)
+    idx_rem = plan["q_send_idx"]                          # [D, CQ]
+    safe_r = jnp.maximum(idx_rem, 0)
+    contrib_r = jnp.where((idx_rem >= 0)[:, :, None, None, None],
+                          ret_recv.astype(jnp.float32), 0.0)
+    out = out.at[safe_r.reshape(-1)].add(
+        contrib_r.reshape((-1,) + contrib_r.shape[2:]))
+    return out.astype(dtype)
+
+
+# ------------------------------------------------------- execution paths
+def _rank_fn(q, k, v, pos, plan, cad, softcap, scale, axis_names):
+    """Body run per rank inside shard_map.  q/k/v [Bl, S, H(l), dh]."""
+    cfg = cad.cfg
+    blk = cfg.blk
+    qb = _to_blocks(q, blk)
+    kb = _to_blocks(k, blk)
+    vb = _to_blocks(v, blk)
+    posb = _to_blocks(pos, blk)
+    nb = qb.shape[0]
+
+    sends = _make_sends(qb, kb, vb, posb, plan)
+    a2a = functools.partial(jax.lax.all_to_all, axis_name=axis_names,
+                            split_axis=0, concat_axis=0)
+    recv = tuple(a2a(s) for s in sends)
+    q_tasks, qpos_tasks, k_buf, v_buf, kpos_buf = _server_tasks(
+        qb, kb, vb, posb, recv, plan, cfg)
+    out_tasks = _serve(q_tasks, qpos_tasks, k_buf, v_buf, kpos_buf, plan,
+                       cad, softcap, 0, scale)
+    ret_send = out_tasks[nb:].reshape((cfg.n_servers, cfg.cq)
+                                      + out_tasks.shape[1:])
+    ret_recv = a2a(ret_send)
+    out = _scatter_outputs(out_tasks, ret_recv, plan, cfg, nb, blk,
+                           q.shape[2], q.shape[3], q.dtype)
+    return out.reshape(q.shape)
+
+
+def _sim_exchange(x):
+    """Global-simulation all_to_all: [D_src, D_dst, C, ...] ->
+    [D_dst, D_src, C, ...]."""
+    return jnp.swapaxes(x, 0, 1)
+
+
+def _global_sim(q, k, v, pos, plan, cad, softcap, scale):
+    """Single-device semantics-equivalent execution over stacked ranks.
+    q [D*Bl, S, H, dh] with rank-major rows."""
+    cfg = cad.cfg
+    d = cfg.n_servers
+    blk = cfg.blk
+
+    def stack_ranks(x):
+        return x.reshape((d, x.shape[0] // d) + x.shape[1:])
+
+    qs, ks, vs, ps = map(stack_ranks, (q, k, v, pos))
+    qb = jax.vmap(lambda t: _to_blocks(t, blk))(qs)
+    kb = jax.vmap(lambda t: _to_blocks(t, blk))(ks)
+    vb = jax.vmap(lambda t: _to_blocks(t, blk))(vs)
+    posb = jax.vmap(lambda t: _to_blocks(t, blk))(ps)
+    nb = qb.shape[1]
+
+    sends = jax.vmap(_make_sends)(qb, kb, vb, posb, plan)
+    recv = tuple(_sim_exchange(s) for s in sends)
+    q_tasks, qpos_tasks, k_buf, v_buf, kpos_buf = jax.vmap(
+        lambda a, b, c, dd, r, pr: _server_tasks(a, b, c, dd, r, pr, cfg)
+    )(qb, kb, vb, posb, recv, plan)
+    out_tasks = jax.vmap(
+        lambda a, b, c, dd, e, pr: _serve(a, b, c, dd, e, pr, cad, softcap,
+                                          0, scale)
+    )(q_tasks, qpos_tasks, k_buf, v_buf, kpos_buf, plan)
+    ret_send = out_tasks[:, nb:].reshape((d, d, cfg.cq)
+                                         + out_tasks.shape[2:])
+    ret_recv = _sim_exchange(ret_send)
+    out = jax.vmap(
+        lambda ot, rr, pr: _scatter_outputs(ot, rr, pr, cfg, nb, blk,
+                                            q.shape[2], q.shape[3], q.dtype)
+    )(out_tasks, ret_recv, plan)
+    return out.reshape(q.shape)
+
+
+# --------------------------------------------------------------- frontend
+def cad_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, ctx,
+                  causal=True, window=0, softcap=0.0, scale=None):
+    """Core-attention disaggregation entry point.
+
+    Applies to causal full-attention layers (the quadratic-imbalance
+    source).  Windowed/cross/non-causal layers fall back to the xla flash
+    path: their compute is linear in tokens, so they do not create the
+    imbalance CAD exists to fix (DESIGN.md §5)."""
+    cad: Optional[CADContext] = getattr(ctx, "cad", None)
+    if cad is None or cad.plan is None or not causal or window:
+        return xla_flash_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
+                                   causal=causal, window=window,
+                                   softcap=softcap, scale=scale)
+    # padding tokens -> position -1 so the server kernels mask them
+    pos = jnp.where(seg_q > 0, pos_q, -1)
+
+    def run(qq, kk, vv, pp, plan):
+        if ctx.mesh is None:
+            return _global_sim(qq, kk, vv, pp, plan, cad, softcap, scale)
+        rules = ctx.rules
+        bspec = rules.batch
+        # TP-shard the head dim inside the dispatch whenever it divides
+        # the model axis (self_attn_apply pads/MHA-izes beforehand, so
+        # this usually holds); otherwise heads replicate across TP ranks.
+        msize = 1
+        if ctx.mesh is not None and "model" in ctx.mesh.axis_names:
+            msize = dict(zip(ctx.mesh.axis_names,
+                             ctx.mesh.devices.shape))["model"]
+        hspec = "model" if (msize > 1 and qq.shape[2] % msize == 0) \
+            else rules.heads
+        if hspec == "model" and kk.shape[2] != qq.shape[2] \
+                and kk.shape[2] % msize != 0:
+            # per-shard GQA breaks when q heads are TP-sharded but kv
+            # heads don't divide the axis: MHA-ize kv so both shard
+            # (comm cost noted in DESIGN.md §4)
+            from repro.core.attention import _repeat_kv
+            rep = qq.shape[2] // kk.shape[2]
+            kk = _repeat_kv(kk, rep)
+            vv = _repeat_kv(vv, rep)
+        khspec = "model" if (msize > 1 and kk.shape[2] % msize == 0) \
+            else rules.kv_heads
+        axis_names = rules.cad_axis
+        in_specs = (P(bspec, None, hspec, None),
+                    P(bspec, None, khspec, None),
+                    P(bspec, None, khspec, None),
+                    P(bspec, None),
+                    jax.tree.map(lambda _: P(bspec), plan))
+        fn = functools.partial(_rank_fn, cad=cad, softcap=softcap,
+                               scale=scale, axis_names=axis_names)
+
+        def body(qq_, kk_, vv_, pp_, plan_):
+            plan_ = jax.tree.map(lambda a: a[0], plan_)  # drop local D=1
+            return fn(qq_, kk_, vv_, pp_, plan_)
+
+        return jax.shard_map(
+            body, mesh=ctx.mesh,
+            in_specs=in_specs,
+            out_specs=P(bspec, None, hspec, None),
+            check_vma=False,
+        )(qq, kk, vv, pp, plan)
+
+    if cad.pingpong and isinstance(cad.plan, (tuple, list)):
+        # nano-batch interleave: issue both dispatches; XLA overlaps the
+        # A2A of one with the serve of the other (paper Fig. 7).  The
+        # split is within each rank's rows (rank-major batch layout).
+        d = cad.cfg.n_servers
+        b = q.shape[0]
+        rpr = b // d
+        h = rpr // 2
+
+        def nano(x, i):
+            xs = x.reshape((d, rpr) + x.shape[1:])
+            sel = xs[:, :h] if i == 0 else xs[:, h:]
+            return sel.reshape((d * h,) + x.shape[1:])
+
+        out0 = run(nano(q, 0), nano(k, 0), nano(v, 0), nano(pos, 0),
+                   cad.plan[0])
+        out1 = run(nano(q, 1), nano(k, 1), nano(v, 1), nano(pos, 1),
+                   cad.plan[1])
+        o = jnp.stack([out0.reshape((d, h) + q.shape[1:]),
+                       out1.reshape((d, h) + q.shape[1:])], axis=1)
+        return o.reshape(q.shape)
+    plan = cad.plan[0] if isinstance(cad.plan, (tuple, list)) else cad.plan
+    return run(q, k, v, pos, plan)

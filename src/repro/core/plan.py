@@ -1,0 +1,186 @@
+"""Static-shape dispatch plans.
+
+A ``DispatchPlan`` is a pytree of int32 arrays — *data*, not shapes — so a
+single compiled executable serves every step's schedule (TPU adaptation of
+the paper's dynamic batching, DESIGN.md §3).  Layout per rank r (leading
+axis D is sharded by the dispatch shard_map):
+
+  q_home_idx   [D, NB]        local q-block ids this rank serves itself
+  q_send_idx   [D, D, CQ]     [src, dst] local q-block ids sent src->dst
+  kv_send_idx  [D, D, CKV]    [src, dst] local kv-block ids sent src->dst
+  kv_gather    [D, NKV]       [server] dense kv buffer: index into the
+                              concat(local NB blocks, recv D*CKV slots)
+  task_kv_start[D, T]         [server] per task slot: first kv buffer blk
+  task_kv_len  [D, T]         [server] blocks of context (0 = empty slot)
+
+Task slots: t in [0, NB) are home tasks (aligned with q_home_idx);
+t in [NB + r*CQ + c] is the task received from rank r slot c (aligned with
+q_send_idx[r, server, c]).  T = NB + D*CQ.  All pads are -1 (idx) / 0
+(len).
+
+Plan builders:
+  identity_plan          — every block served at home (baseline; equals
+                           plain per-rank attention when docs don't span
+                           ranks)
+  per_document_cp_plan   — head-tail per-document context parallelism
+                           (§2.2) expressed as a CAD plan: the paper's
+                           framing of CP as a special case
+  plan_from_schedule     — the scheduler's balanced assignment
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.core.scheduler import Caps, Doc, Schedule, layout_from_segments
+
+
+@dataclasses.dataclass(frozen=True)
+class CADConfig:
+    n_servers: int
+    blk: int
+    nb: int               # q/kv blocks per rank
+    cq: int
+    ckv: int
+    nkv: int
+
+    @property
+    def n_tasks(self) -> int:
+        return self.nb + self.n_servers * self.cq
+
+    def caps(self) -> Caps:
+        return Caps(cq=self.cq, ckv=self.ckv, nkv=self.nkv)
+
+    @classmethod
+    def default(cls, n_servers: int, tokens_per_rank: int, blk: int = 128,
+                max_doc_tokens: int = 0):
+        """Per-pair capacities must cover a full document's kv prefix
+        (its blocks live on one home rank): ckv >= max_doc_blocks, else
+        the scheduler cannot offload long-document tails — the exact case
+        CAD exists for (EXPERIMENTS.md §Perf P10)."""
+        nb = tokens_per_rank // blk
+        per = max(1, -(-nb // n_servers))
+        mdb = min(nb, max(1, (max_doc_tokens or tokens_per_rank) // blk))
+        cq = max(2 * per, mdb)
+        ckv = max(2 * per, mdb)
+        nkv = nb + min(n_servers * ckv, 4 * nb)
+        return cls(n_servers=n_servers, blk=blk, nb=nb, cq=cq, ckv=ckv,
+                   nkv=nkv)
+
+
+def empty_plan(cfg: CADConfig) -> Dict[str, np.ndarray]:
+    d, nb = cfg.n_servers, cfg.nb
+    return {
+        "q_home_idx": -np.ones((d, nb), np.int32),
+        "q_send_idx": -np.ones((d, d, cfg.cq), np.int32),
+        "kv_send_idx": -np.ones((d, d, cfg.ckv), np.int32),
+        "kv_gather": -np.ones((d, cfg.nkv), np.int32),
+        "task_kv_start": np.zeros((d, cfg.n_tasks), np.int32),
+        "task_kv_len": np.zeros((d, cfg.n_tasks), np.int32),
+    }
+
+
+def plan_from_assignment(cfg: CADConfig, assign: np.ndarray,
+                         doc_of: np.ndarray, bi_of: np.ndarray,
+                         docs) -> Dict[str, np.ndarray]:
+    """Build the dispatch arrays from a per-block server assignment."""
+    d, nb = cfg.n_servers, cfg.nb
+    plan = empty_plan(cfg)
+    q_cnt = np.zeros((d, d), np.int64)
+
+    # ---- q routing + per-server doc needs
+    # needs[s][doc_id] = max prefix blocks required on server s
+    needs = [dict() for _ in range(d)]
+    # remote task bookkeeping: for each (g) served remotely remember its
+    # send slot (src rank, c) so task metadata lands in the right slot.
+    task_slot_of_g = {}
+    for g in range(d * nb):
+        dc = int(doc_of[g])
+        if dc < 0:
+            continue
+        s = int(assign[g])
+        home = g // nb
+        bi = int(bi_of[g])
+        needs[s][dc] = max(needs[s].get(dc, 0), bi + 1)
+        if s == home:
+            # home task slot == local block index (stable, simple)
+            plan["q_home_idx"][home, g % nb] = g % nb
+            task_slot_of_g[g] = (s, g % nb)
+        else:
+            c = q_cnt[home, s]
+            assert c < cfg.cq, "scheduler exceeded CQ capacity"
+            plan["q_send_idx"][home, s, c] = g % nb
+            q_cnt[home, s] = c + 1
+            task_slot_of_g[g] = (s, nb + home * cfg.cq + c)
+
+    # ---- kv routing + dense buffer per server
+    kv_cnt = np.zeros((d, d), np.int64)
+    for s in range(d):
+        # needed global kv blocks, sorted: prefix ranges of each doc
+        needed = []
+        for dc, pref in needs[s].items():
+            g0 = docs[dc].g0
+            needed.extend(range(g0, g0 + pref))
+        needed = sorted(set(needed))
+        assert len(needed) <= cfg.nkv, "scheduler exceeded NKV capacity"
+        # source slot for each needed block
+        buf_pos_of_g = {}
+        for pos, g in enumerate(needed):
+            src = g // nb
+            if src == s:
+                slot = g % nb                       # local
+            else:
+                c = kv_cnt[src, s]
+                assert c < cfg.ckv, "scheduler exceeded CKV capacity"
+                plan["kv_send_idx"][src, s, c] = g % nb
+                kv_cnt[src, s] = c + 1
+                slot = nb + src * cfg.ckv + c       # recv layout
+            plan["kv_gather"][s, pos] = slot
+            buf_pos_of_g[g] = pos
+
+        # ---- per-task metadata
+        for dc, pref in needs[s].items():
+            g0 = docs[dc].g0
+            start = buf_pos_of_g[g0]
+            # contiguity invariant: prefix occupies consecutive buffer slots
+            assert buf_pos_of_g[g0 + pref - 1] == start + pref - 1
+            for g in range(g0, g0 + docs[dc].n_blocks):
+                if int(assign[g]) != s or int(doc_of[g]) != dc:
+                    continue
+                srv, slot = task_slot_of_g[g]
+                assert srv == s
+                bi = int(bi_of[g])
+                plan["task_kv_start"][s, slot] = start
+                plan["task_kv_len"][s, slot] = bi + 1
+    return plan
+
+
+def identity_plan(cfg: CADConfig, segment_ids: np.ndarray) \
+        -> Dict[str, np.ndarray]:
+    docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
+                                               cfg.n_servers)
+    assign = (np.arange(cfg.n_servers * cfg.nb) // cfg.nb).astype(np.int64)
+    return plan_from_assignment(cfg, assign, doc_of, bi_of, docs)
+
+
+def per_document_cp_plan(cfg: CADConfig, segment_ids: np.ndarray) \
+        -> Dict[str, np.ndarray]:
+    """Head-tail per-document CP (paper §2.2): each doc's blocks are dealt
+    to servers in the 0,1,...,D-1,D-1,...,1,0 pairing order."""
+    docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
+                                               cfg.n_servers)
+    d = cfg.n_servers
+    assign = (np.arange(d * cfg.nb) // cfg.nb).astype(np.int64)
+    ht = list(range(d)) + list(range(d - 1, -1, -1))   # head-tail order
+    for doc in docs:
+        for j, g in enumerate(doc.blocks()):
+            assign[g] = ht[j % (2 * d)]
+    return plan_from_assignment(cfg, assign, doc_of, bi_of, docs)
+
+
+def plan_from_schedule(cfg: CADConfig, sched: Schedule) \
+        -> Dict[str, np.ndarray]:
+    return plan_from_assignment(cfg, sched.assign, sched.doc_of_block,
+                                sched.bi_of_block, sched.docs)

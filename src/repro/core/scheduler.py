@@ -1,0 +1,243 @@
+"""Communication-aware greedy CA-task scheduler (paper §4.2 + App. B).
+
+Host-side, numpy.  Input: the packed batch's document layout (one packed
+chunk per data rank; documents are 128-block aligned by the data pipeline
+and never span ranks).  Output: an assignment of every 128-token q-block
+to an attention server, which ``plan.build_plan`` turns into static-shape
+dispatch arrays.
+
+Algorithm (faithful to the paper):
+  1. ideal per-server load  F̄ = Σ FLOPs / n_servers; servers split into
+     surplus (> F̄) and deficit (< F̄); the worst deficit is served first.
+  2. for each deficit destination: evaluate candidate Items (doc-shard
+     ranges resident on surplus servers), ΔF_max = min(F_item, surplus,
+     deficit); the shard moved is the Item's *latest* blocks (suffix) —
+     under the causal mask these carry the most FLOPs per byte of kv
+     prefix, the comm-minimal choice of App. B at block granularity;
+     score E = ΔF_max / V_comm, pick the best candidate.
+  3. stop when every load is within (1±ε)·F̄ or no move improves.
+
+Capacities (per-pair q/kv send slots, per-server kv buffer slots) mirror
+the static shapes of the compiled dispatch; moves that would overflow a
+capacity are rejected (TPU adaptation — see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import CommModel
+
+
+@dataclasses.dataclass
+class Doc:
+    """A document in the packed global stream, 128-aligned, single-rank."""
+    doc_id: int
+    home: int            # rank holding it
+    g0: int              # first global block index
+    n_blocks: int
+
+    def blocks(self):
+        return range(self.g0, self.g0 + self.n_blocks)
+
+
+@dataclasses.dataclass(frozen=True)
+class Caps:
+    cq: int              # q blocks per (src, dst) pair
+    ckv: int             # kv blocks per (src, dst) pair
+    nkv: int             # dense kv buffer blocks per server (incl. local)
+
+
+@dataclasses.dataclass
+class Schedule:
+    """Scheduler output: per-block server assignment + stats."""
+    assign: np.ndarray           # [G] server per global q-block
+    docs: List[Doc]
+    doc_of_block: np.ndarray     # [G] doc index (-1 = padding block)
+    bi_of_block: np.ndarray      # [G] block-in-doc index
+    n_servers: int
+    nb: int                      # blocks per rank
+    blk: int
+    loads: np.ndarray            # [S] final per-server cost (rel. FLOPs)
+    comm_bytes: float
+    n_moves: int
+
+
+def layout_from_segments(segment_ids: np.ndarray, blk: int,
+                         n_servers: int) -> Tuple[List[Doc], np.ndarray,
+                                                  np.ndarray]:
+    """Derive the Doc table from [R, L] per-rank packed segment ids.
+    Blocks are document-pure by pipeline construction (trailing padding
+    inside a doc's last block carries segment 0 and is handled by -1
+    positions downstream)."""
+    r, l = segment_ids.shape
+    assert r == n_servers, (r, n_servers)
+    assert l % blk == 0
+    nb = l // blk
+    seg_b = segment_ids.reshape(r, nb, blk)
+    lead = seg_b[:, :, 0]
+    docs: List[Doc] = []
+    doc_of = -np.ones(r * nb, np.int64)
+    bi_of = np.zeros(r * nb, np.int64)
+    for rank in range(r):
+        prev = None
+        for i in range(nb):
+            s = int(lead[rank, i])
+            g = rank * nb + i
+            if s == 0:
+                prev = None
+                continue
+            nz = seg_b[rank, i][seg_b[rank, i] != 0]
+            assert (nz == s).all(), \
+                "blocks must be document-pure (pipeline aligns docs)"
+            if prev != s:
+                docs.append(Doc(len(docs), rank, g, 1))
+                prev = s
+            else:
+                docs[-1].n_blocks += 1
+            doc_of[g] = docs[-1].doc_id
+            bi_of[g] = g - docs[-1].g0
+    return docs, doc_of, bi_of
+
+
+def _range_cost(blk: int, lo: int, hi: int) -> float:
+    """Sum of per-block CA cost over block-in-doc range [lo, hi):
+    cost(bi) = (bi+1)·blk² (relative FLOPs; H·dh factors cancel)."""
+    n = hi - lo
+    return float(blk * blk) * n * (lo + hi + 1) / 2.0
+
+
+def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
+             comm: CommModel, caps: Caps, tolerance: float = 0.1,
+             max_moves: int = 100000) -> Schedule:
+    docs, doc_of, bi_of = layout_from_segments(segment_ids, blk, n_servers)
+    nb = segment_ids.shape[1] // blk
+    G = n_servers * nb
+    assign = (np.arange(G) // nb).astype(np.int64)     # home assignment
+
+    cost_of = np.where(doc_of >= 0, (bi_of + 1) * float(blk * blk), 0.0)
+    loads = np.array([cost_of[s * nb:(s + 1) * nb].sum()
+                      for s in range(n_servers)])
+    fbar = loads.sum() / n_servers
+
+    # items[s][doc_id] -> sorted list of disjoint (lo, hi) block ranges
+    items: List[Dict[int, List[Tuple[int, int]]]] = \
+        [dict() for _ in range(n_servers)]
+    for d in docs:
+        items[d.home][d.doc_id] = [(0, d.n_blocks)]
+    # kv prefix length (blocks) already available on each server per doc
+    sent_kv: List[Dict[int, int]] = [dict() for _ in range(n_servers)]
+    q_used = np.zeros((n_servers, n_servers), np.int64)
+    kv_used = np.zeros((n_servers, n_servers), np.int64)
+    nkv_used = np.full(n_servers, nb, np.int64)        # local blocks
+
+    comm_bytes = 0.0
+    n_moves = 0
+
+    def suffix_take(lo: int, hi: int, budget: float) -> int:
+        """Largest t in [lo, hi) such that cost of [t, hi) <= budget, but
+        always at least one block if a single block fits 1.5x the budget
+        (avoids stalling on coarse granularity)."""
+        t = hi
+        acc = 0.0
+        while t > lo:
+            c = float(blk * blk) * t          # block (t-1) has cost t·blk²
+            if acc + c > budget:
+                break
+            acc += c
+            t -= 1
+        if t == hi and hi - lo >= 1:
+            c = float(blk * blk) * hi
+            if c <= 1.5 * budget:
+                t = hi - 1
+        return t
+
+    while n_moves < max_moves:
+        order = np.argsort(loads)
+        dst = int(order[0])
+        deficit = fbar - loads[dst]
+        if deficit <= tolerance * fbar:
+            break
+        best = None  # (E, src, doc_id, ridx, t, hi, dF, vbytes, need_kv)
+        for src in order[::-1]:
+            src = int(src)
+            surplus = loads[src] - fbar
+            if surplus <= 0:
+                break
+            if src == dst:
+                continue
+            budget = min(surplus, deficit)
+            for doc_id, ranges in items[src].items():
+                d = docs[doc_id]
+                # only the latest range's suffix migrates (comm-minimal)
+                for ridx in range(len(ranges) - 1, -1, -1):
+                    lo, hi = ranges[ridx]
+                    t = suffix_take(lo, hi, budget)
+                    if t >= hi:
+                        continue
+                    n_q = hi - t
+                    if q_used[d.home, dst] + n_q > caps.cq:
+                        continue
+                    if d.home == dst:
+                        need_kv = 0
+                    else:
+                        have = sent_kv[dst].get(doc_id, 0)
+                        need_kv = max(0, hi - have)
+                        if kv_used[d.home, dst] + need_kv > caps.ckv:
+                            continue
+                        if nkv_used[dst] + need_kv > caps.nkv:
+                            continue
+                    df = _range_cost(blk, t, hi)
+                    vbytes = comm.migration_bytes(n_q * blk, need_kv * blk)
+                    e_score = df / max(vbytes, 1.0)
+                    if best is None or e_score > best[0]:
+                        best = (e_score, src, doc_id, ridx, t, hi, df,
+                                vbytes, need_kv)
+                    break    # deeper ranges cost strictly more comm
+        if best is None:
+            break
+        _, src, doc_id, ridx, t, hi, df, vbytes, need_kv = best
+        d = docs[doc_id]
+        ranges = items[src][doc_id]
+        lo, _hi = ranges[ridx]
+        assert _hi == hi
+        if t == lo:
+            ranges.pop(ridx)
+            if not ranges:
+                del items[src][doc_id]
+        else:
+            ranges[ridx] = (lo, t)
+        # insert into dst with adjacency merge
+        dst_ranges = items[dst].setdefault(doc_id, [])
+        dst_ranges.append((t, hi))
+        dst_ranges.sort()
+        merged = [dst_ranges[0]]
+        for a, b in dst_ranges[1:]:
+            if a == merged[-1][1]:
+                merged[-1] = (merged[-1][0], b)
+            else:
+                merged.append((a, b))
+        items[dst][doc_id] = merged
+
+        assign[d.g0 + t: d.g0 + hi] = dst
+        loads[src] -= df
+        loads[dst] += df
+        q_used[d.home, dst] += hi - t
+        if d.home != dst:
+            kv_used[d.home, dst] += need_kv
+            nkv_used[dst] += need_kv
+            sent_kv[dst][doc_id] = max(sent_kv[dst].get(doc_id, 0), hi)
+        comm_bytes += vbytes
+        n_moves += 1
+
+    return Schedule(assign=assign, docs=docs, doc_of_block=doc_of,
+                    bi_of_block=bi_of, n_servers=n_servers, nb=nb, blk=blk,
+                    loads=loads, comm_bytes=comm_bytes, n_moves=n_moves)
+
+
+def imbalance(loads: np.ndarray) -> float:
+    """max/mean - 1 (the straggler overhang)."""
+    m = loads.mean()
+    return float(loads.max() / max(m, 1e-9) - 1.0)

@@ -1,0 +1,99 @@
+"""Training data pipeline: samples a length distribution, packs documents
+into per-rank chunks, emits jax-ready batches (+ labels with in-document
+next-token shift), and — when CAD is on — runs the scheduler to attach a
+dispatch plan to every batch."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import CommModel
+from repro.core.plan import CADConfig, identity_plan, plan_from_schedule
+from repro.core.scheduler import schedule
+from repro.data.distributions import sample_lengths
+from repro.data.packing import BLOCK, pack_documents
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    distribution: str = "pretrain"     # pretrain | prolong
+    max_doc_len: int = 4096
+    seq_len: int = 4096                # tokens per row
+    global_batch: int = 8              # rows per step
+    n_ranks: int = 1                   # data-parallel ranks (CAD servers)
+    vocab_size: int = 32000
+    seed: int = 0
+    strategy: str = "fixed"            # fixed | variable (WLB baseline)
+    cad: Optional[CADConfig] = None    # attach plans when set
+    tolerance: float = 0.1
+    pingpong: bool = False
+
+
+def _labels(tokens, seg):
+    nxt = np.roll(tokens, -1, axis=-1)
+    nseg = np.roll(seg, -1, axis=-1)
+    lab = np.where((seg > 0) & (seg == nseg), nxt, -1)
+    return lab.astype(np.int32)
+
+
+def batches(cfg: PipelineConfig, n_heads: int, head_dim: int,
+            n_kv_heads: int) -> Iterator[dict]:
+    rng = np.random.default_rng(cfg.seed)
+    rows_per_rank = cfg.global_batch // max(cfg.n_ranks, 1)
+    tokens_per_rank = rows_per_rank * cfg.seq_len
+    comm = CommModel(n_heads=n_heads, head_dim=head_dim,
+                     n_kv_heads=n_kv_heads)
+    while True:
+        # oversample docs, pack exactly global_batch rows
+        need = cfg.global_batch * cfg.seq_len
+        lens = []
+        while sum(lens) < need * 1.2:
+            lens.extend(sample_lengths(cfg.distribution, rng, 64,
+                                       cfg.max_doc_len).tolist())
+        chunks = pack_documents(lens, cfg.seq_len, cfg.global_batch,
+                                rng=rng, strategy=cfg.strategy,
+                                vocab_size=cfg.vocab_size)
+        toks = np.stack([c.tokens for c in chunks])
+        segs = np.stack([c.segment_ids for c in chunks])
+        poss = np.stack([c.positions for c in chunks])
+        batch = {
+            "tokens": jnp.asarray(toks),
+            "labels": jnp.asarray(_labels(toks, segs)),
+            "segment_ids": jnp.asarray(segs),
+            "positions": jnp.asarray(poss),
+        }
+        if cfg.cad is not None:
+            # rank-major fold: rows r*rows_per_rank..(r+1)*rows_per_rank
+            segs_rank = segs.reshape(cfg.n_ranks, tokens_per_rank)
+            if cfg.pingpong:
+                assert rows_per_rank % 2 == 0, \
+                    "ping-pong needs an even number of rows per rank"
+                half = tokens_per_rank // 2
+                assert half % BLOCK == 0
+                sub = dataclasses.replace(cfg.cad, nb=half // cfg.cad.blk)
+                plans = []
+                for i in range(2):
+                    seg_i = segs_rank[:, i * half:(i + 1) * half]
+                    sch = schedule(seg_i, blk=sub.blk,
+                                   n_servers=sub.n_servers, comm=comm,
+                                   caps=sub.caps(),
+                                   tolerance=cfg.tolerance)
+                    plans.append({k: jnp.asarray(v) for k, v in
+                                  plan_from_schedule(sub, sch).items()})
+                batch["plan"] = tuple(plans)
+            else:
+                sch = schedule(segs_rank, blk=cfg.cad.blk,
+                               n_servers=cfg.cad.n_servers, comm=comm,
+                               caps=cfg.cad.caps(), tolerance=cfg.tolerance)
+                plan = plan_from_schedule(cfg.cad, sch)
+                batch["plan"] = {k: jnp.asarray(v) for k, v in plan.items()}
+            batch["schedule_stats"] = {
+                "comm_bytes": float(sch.comm_bytes),
+                "n_moves": int(sch.n_moves),
+                "load_max_over_mean": float(sch.loads.max()
+                                            / max(sch.loads.mean(), 1e-9)),
+            }
+        yield batch

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+packed_flash/  packed varlen flash attention + the CA-server fused
+               CA-task kernel (the paper's attention-server hot loop)
+rglru/         RG-LRU linear recurrence (recurrentgemma)
+ssd/           Mamba-2 SSD intra-chunk quadratic compute
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with a training-ready VJP), and ref.py (pure-jnp oracle); tests
+sweep shapes/dtypes in interpret mode against the oracles.
+"""

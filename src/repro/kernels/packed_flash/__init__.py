@@ -1,0 +1,4 @@
+from repro.kernels.packed_flash.ops import (ca_server_attention,
+                                            packed_flash_attention)
+
+__all__ = ["packed_flash_attention", "ca_server_attention"]

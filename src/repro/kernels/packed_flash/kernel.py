@@ -1,0 +1,242 @@
+"""Pallas TPU kernels for packed flash attention.
+
+Two kernels:
+
+1. ``flash_fwd`` — packed-document self-attention over a chunk.  Grid
+   (B, Hq, nq, nk) with the kv dimension innermost/sequential; online
+   softmax accumulators live in VMEM scratch.  Causal block pruning skips
+   (i, j) pairs above the diagonal; window pruning skips pairs entirely
+   outside the sliding window.  Blocks are 128-aligned to the MXU —
+   exactly the tile constraint the paper leans on (FA2's 128-token tile,
+   §3.3 Fig. 5).
+
+2. ``ca_server_fwd`` — the attention-server kernel: a fused batch of
+   CA-tasks (q-block, kv-prefix-range), where the kv range of each task is
+   looked up through *scalar-prefetch* metadata (kv_start/kv_len), i.e.
+   data-dependent BlockSpec index maps.  This is the TPU-native analogue
+   of FA2 varlen batching that DistCA's attention servers rely on.
+
+Both are validated in interpret mode against ref.py; on TPU they compile
+with explicit VMEM BlockSpecs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+DEFAULT_BLOCK = 128
+
+
+def _mxu_dot(a, b):
+    return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+# ----------------------------------------------------------- packed flash
+def _flash_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
+                  q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  scale, softcap, causal, window, blk_q, blk_k, nk):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # block-level pruning (chunk-order positions; sound for packed docs)
+    run = jnp.asarray(True)
+    if causal:
+        run = run & (j * blk_k < (i + 1) * blk_q)
+    if window and window > 0:
+        run = run & ((j + 1) * blk_k - 1 >= i * blk_q - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)      # [blk_q, dh]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # [blk_k, dh]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        logits = _mxu_dot(q, k.T) * scale              # [blk_q, blk_k]
+        if softcap and softcap > 0:
+            logits = jnp.tanh(logits / softcap) * softcap
+        sq = seg_q_ref[0, :]
+        pq = pos_q_ref[0, :]
+        sk = seg_k_ref[0, :]
+        pk = pos_k_ref[0, :]
+        m = (sq[:, None] == sk[None, :]) & (sq[:, None] > 0) \
+            & (sk[None, :] > 0)
+        if causal:
+            m &= pq[:, None] >= pk[None, :]
+        if window and window > 0:
+            m &= (pq[:, None] - pk[None, :]) < window
+        logits = jnp.where(m, logits, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[:, None])
+        p = jnp.where(m, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] \
+            + _mxu_dot(p.astype(v.dtype), v)
+        m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        out = jnp.where((m_scr[...] > NEG_INF / 2)[:, None], out, 0.0)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
+              window=0, softcap=0.0, scale=None,
+              blk_q=DEFAULT_BLOCK, blk_k=DEFAULT_BLOCK, interpret=True):
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, skv)
+    assert sq % blk_q == 0 and skv % blk_k == 0, "pad seq to block size"
+    nq, nk = sq // blk_q, skv // blk_k
+
+    grid = (b, hq, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, softcap=softcap, causal=causal,
+        window=window, blk_q=blk_q, blk_k=blk_k, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q), lambda b_, h, i, j: (b_, i)),
+            pl.BlockSpec((1, blk_q), lambda b_, h, i, j: (b_, i)),
+            pl.BlockSpec((1, blk_k), lambda b_, h, i, j: (b_, j)),
+            pl.BlockSpec((1, blk_k), lambda b_, h, i, j: (b_, j)),
+            pl.BlockSpec((1, blk_q, 1, dh), lambda b_, h, i, j: (b_, i, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, dh),
+                         lambda b_, h, i, j, r=rep: (b_, j, h // r, 0)),
+            pl.BlockSpec((1, blk_k, 1, dh),
+                         lambda b_, h, i, j, r=rep: (b_, j, h // r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, dh),
+                               lambda b_, h, i, j: (b_, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, hq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q, dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(seg_q, pos_q, seg_kv, pos_kv, q, k, v)
+
+
+# ------------------------------------------------------- CA-server kernel
+def _ca_server_kernel(kv_start_ref, kv_len_ref,       # scalar prefetch
+                      q_pos_ref, kv_pos_ref, q_ref, k_ref, v_ref, o_ref,
+                      m_scr, l_scr, acc_scr, *,
+                      scale, softcap, causal, window, jmax):
+    t = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j < kv_len_ref[t])
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        logits = _mxu_dot(q, k.T) * scale
+        if softcap and softcap > 0:
+            logits = jnp.tanh(logits / softcap) * softcap
+        pq = q_pos_ref[0, :]
+        pk = kv_pos_ref[0, :]
+        m = (pq[:, None] >= 0) & (pk[None, :] >= 0)
+        if causal:
+            m &= pq[:, None] >= pk[None, :]
+        if window and window > 0:
+            m &= (pq[:, None] - pk[None, :]) < window
+        logits = jnp.where(m, logits, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[:, None])
+        p = jnp.where(m, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] \
+            + _mxu_dot(p.astype(v.dtype), v)
+        m_scr[...] = m_new
+
+    @pl.when(j == jmax - 1)
+    def _finalize():
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        out = jnp.where((m_scr[...] > NEG_INF / 2)[:, None], out, 0.0)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, *,
+                  causal=True, window=0, softcap=0.0, scale=None,
+                  jmax=None, interpret=True):
+    """Fused CA-task batch (see ref.ref_ca_server_attention for semantics).
+
+    q_tasks [T,blk,Hq,dh]; k_buf/v_buf [N,blk,Hkv,dh]; kv_start/kv_len [T];
+    q_pos [T,blk]; kv_pos [N,blk].  ``jmax`` bounds the kv blocks any task
+    may touch (defaults to N)."""
+    T, blk, hq, dh = q_tasks.shape
+    N, _, hkv, _ = k_buf.shape
+    rep = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    jmax = jmax or N
+
+    def kv_index(t, h, j, starts, lens, r=rep):
+        blk_i = jnp.minimum(starts[t] + j, N - 1)
+        return (blk_i, 0, h // r, 0)
+
+    def kvpos_index(t, h, j, starts, lens):
+        return (jnp.minimum(starts[t] + j, N - 1), 0)
+
+    kernel = functools.partial(
+        _ca_server_kernel, scale=scale, softcap=softcap, causal=causal,
+        window=window, jmax=jmax)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T, hq, jmax),
+        in_specs=[
+            pl.BlockSpec((1, blk), lambda t, h, j, st, ln: (t, 0)),
+            pl.BlockSpec((1, blk), kvpos_index),
+            pl.BlockSpec((1, blk, 1, dh), lambda t, h, j, st, ln: (t, 0, h, 0)),
+            pl.BlockSpec((1, blk, 1, dh), kv_index),
+            pl.BlockSpec((1, blk, 1, dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, blk, 1, dh),
+                               lambda t, h, j, st, ln: (t, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((blk,), jnp.float32),
+            pltpu.VMEM((blk,), jnp.float32),
+            pltpu.VMEM((blk, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, blk, hq, dh), q_tasks.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_start, kv_len, q_pos, kv_pos, q_tasks, k_buf, v_buf)

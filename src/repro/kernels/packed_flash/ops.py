@@ -1,0 +1,81 @@
+"""Jit'd wrappers for the packed-flash kernels with training-ready VJPs.
+
+Forward runs the Pallas kernel (interpret=True on CPU, compiled on TPU).
+Backward is flash-style recompute expressed in blockwise jnp — numerically
+the same function, so JAX autodiff of the blockwise form is the transpose
+of the kernel.  (A hand-written Pallas backward is a recorded §Perf
+follow-up; it changes throughput, not semantics.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as A
+from repro.kernels.packed_flash import kernel as K
+from repro.kernels.packed_flash import ref as R
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def packed_flash_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
+                           causal=True, window=0, softcap=0.0, scale=None):
+    return K.flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal=causal,
+                       window=window, softcap=softcap, scale=scale,
+                       interpret=not _on_tpu())
+
+
+def _pf_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal, window, softcap,
+            scale):
+    out = packed_flash_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
+                                 causal, window, softcap, scale)
+    return out, (q, k, v, seg_q, pos_q, seg_kv, pos_kv)
+
+
+def _pf_bwd(causal, window, softcap, scale, res, g):
+    q, k, v, seg_q, pos_q, seg_kv, pos_kv = res
+    f = lambda q_, k_, v_: A.xla_flash_attention(
+        q_, k_, v_, seg_q, pos_q, seg_kv, pos_kv, causal=causal,
+        window=window, softcap=softcap, scale=scale)
+    _, vjp = jax.vjp(f, q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None, None, None, None
+
+
+packed_flash_attention.defvjp(_pf_fwd, _pf_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def ca_server_attention(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
+                        kv_pos, causal=True, window=0, softcap=0.0,
+                        scale=None):
+    """Fused CA-task batch on an attention server (paper §4.1)."""
+    return K.ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
+                           kv_pos, causal=causal, window=window,
+                           softcap=softcap, scale=scale,
+                           interpret=not _on_tpu())
+
+
+def _ca_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
+            causal, window, softcap, scale):
+    out = ca_server_attention(q_tasks, k_buf, v_buf, kv_start, kv_len,
+                              q_pos, kv_pos, causal, window, softcap, scale)
+    return out, (q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos)
+
+
+def _ca_bwd(causal, window, softcap, scale, res, g):
+    q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos = res
+    f = lambda q_, k_, v_: R.ref_ca_server_attention(
+        q_, k_, v_, kv_start, kv_len, q_pos, kv_pos, causal=causal,
+        window=window, softcap=softcap, scale=scale)
+    _, vjp = jax.vjp(f, q_tasks, k_buf, v_buf)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None, None, None, None
+
+
+ca_server_attention.defvjp(_ca_fwd, _ca_bwd)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the packed-flash kernels.
+
+Two entry points mirror kernel.py:
+
+  ref_packed_attention    — packed-document self-attention over a chunk
+                            (same semantics as core.attention.ref_attention)
+  ref_ca_server_attention — the attention-server fused CA-task batch: every
+                            task is a (q-block, kv-prefix-range) pair; tasks
+                            from any document/rank are batched in one call
+                            (paper §3.3 "composability").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import NEG_INF, ref_attention
+
+ref_packed_attention = ref_attention
+
+
+def ref_ca_server_attention(q_tasks, k_buf, v_buf, kv_start, kv_len,
+                            q_pos, kv_pos, *, softcap=0.0, window=0,
+                            causal=True, scale=None):
+    """Oracle for the fused CA-task kernel.
+
+    q_tasks [T, blk, Hq, dh]   query blocks (one per CA-task slot)
+    k_buf/v_buf [N, blk, Hkv, dh]  kv blocks resident on this server
+    kv_start [T] int32         first kv block index of task t's context
+    kv_len  [T] int32          number of kv blocks (0 = padding slot)
+    q_pos   [T, blk] int32     in-document position of each query token
+                               (-1 = padded query row)
+    kv_pos  [N, blk] int32     in-document position of each kv token
+                               (-1 = padded kv slot)
+
+    The scheduler guarantees each task's kv range belongs to the task's own
+    document, so masking needs positions only.  Returns [T, blk, Hq, dh].
+    """
+    T, blk, hq, dh = q_tasks.shape
+    N = k_buf.shape[0]
+    hkv = k_buf.shape[2]
+    rep = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    jmax = N  # oracle just materializes everything
+
+    # flatten kv buffer to [N*blk, ...]
+    kf = k_buf.reshape(N * blk, hkv, dh)
+    vf = v_buf.reshape(N * blk, hkv, dh)
+    kpf = kv_pos.reshape(N * blk)
+
+    blk_idx = jnp.arange(N)
+    in_range = (blk_idx[None, :] >= kv_start[:, None]) & \
+               (blk_idx[None, :] < kv_start[:, None] + kv_len[:, None])
+    tok_in_range = jnp.repeat(in_range, blk, axis=1)          # [T, N*blk]
+
+    logits = jnp.einsum("tqhd,khd->thqk",
+                        q_tasks.astype(jnp.float32),
+                        jnp.repeat(kf, rep, axis=1).astype(jnp.float32)
+                        ) * scale
+    if softcap and softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    m = tok_in_range[:, None, None, :]
+    m = m & (kpf >= 0)[None, None, None, :]
+    m = m & (q_pos >= 0)[:, None, :, None]
+    if causal:
+        m = m & (q_pos[:, None, :, None] >= kpf[None, None, None, :])
+    if window and window > 0:
+        m = m & ((q_pos[:, None, :, None] - kpf[None, None, None, :])
+                 < window)
+    logits = jnp.where(m, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(m.any(-1)[..., None], p, 0.0)
+    out = jnp.einsum("thqk,khd->tqhd", p,
+                     jnp.repeat(vf, rep, axis=1).astype(jnp.float32))
+    return out.astype(q_tasks.dtype)

@@ -1,0 +1,47 @@
+"""Jit'd wrapper for the RG-LRU scan with a linear-recurrence backward.
+
+VJP of h_t = a_t h_{t-1} + b_t:
+  db_t = g_t + a_{t+1} * db_{t+1}   (reverse recurrence, same kernel on
+                                     reversed/shifted inputs)
+  da_t = db_t * h_{t-1}
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru import kernel as K
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+@jax.custom_vjp
+def lru_scan(a, b):
+    return K.lru_scan(a, b, interpret=not _on_tpu())
+
+
+def _fwd(a, b):
+    h = lru_scan(a, b)
+    return h, (a, h)
+
+
+def _bwd(res, g):
+    a, h = res
+    # reverse-time recurrence: db_t = g_t + a_{t+1} db_{t+1}
+    a_next = jnp.concatenate(
+        [a[:, 1:], jnp.zeros_like(a[:, :1])], axis=1)
+    a_rev = jnp.flip(a_next, axis=1)
+    g_rev = jnp.flip(g, axis=1)
+    db = jnp.flip(lru_scan(a_rev.astype(g.dtype), g_rev), axis=1)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    da = (db.astype(jnp.float32) * h_prev.astype(jnp.float32)) \
+        .astype(a.dtype)
+    return da, db
+
+
+lru_scan.defvjp(_fwd, _bwd)

@@ -1,0 +1,28 @@
+"""Oracle for the RG-LRU linear-recurrence kernel:
+h_t = a_t * h_{t-1} + b_t, h_{-1} = 0 (resets are folded into a=0)."""
+import jax
+import jax.numpy as jnp
+
+
+def ref_lru_scan(a, b):
+    """a, b [B, S, W] -> h [B, S, W] (f32 accumulation)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+    return h.astype(b.dtype)
+
+
+def ref_lru_scan_sequential(a, b):
+    """Literal sequential recurrence (slow; used to validate the oracle)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    a_t = jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    b_t = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    h0 = jnp.zeros(a_t.shape[1:], jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1).astype(b.dtype)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for the SSD intra-chunk computation (Mamba-2).
+
+The quadratic ('dual attention') part of the chunked SSD algorithm: per
+(batch, chunk, head) tile, build the decay-masked score matrix on the
+MXU, produce the intra-chunk outputs and the chunk's end-state
+contribution. The O(S·N·P) inter-chunk recurrence stays in lax.scan
+outside (it is tiny: one [N,P] GEMM per chunk).
+
+Grid (B, K, H); blocks sized [chunk, N] / [chunk, P] live in VMEM —
+chunk=256, N=128, P=64 uses ~0.4 MB/operand, MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(C_ref, B_ref, x_ref, dt_ref, csum_ref, nr_ref,
+                      y_ref, state_ref, *, chunk):
+    C_ = C_ref[0, 0].astype(jnp.float32)           # [c, N]
+    B_ = B_ref[0, 0].astype(jnp.float32)
+    x = x_ref[0, 0].astype(jnp.float32)            # [c, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)          # [c]
+    csum = csum_ref[0, 0].astype(jnp.float32)
+    nr = nr_ref[0, 0]
+
+    li = csum[:, None]
+    lj = csum[None, :]
+    dec = jnp.exp(jnp.clip(li - lj, -80.0, 0.0))
+    iota = jax.lax.iota(jnp.int32, chunk)
+    tri = iota[:, None] >= iota[None, :]
+    same = nr[:, None] == nr[None, :]
+    dec = jnp.where(tri & same, dec, 0.0)
+
+    scores = jax.lax.dot_general(C_, B_.T, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    w = scores * dec * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    live = (nr == nr[-1]).astype(jnp.float32)
+    dec_end = jnp.exp(jnp.clip(csum[-1] - csum, -80.0, 0.0)) * live
+    sB = B_ * (dec_end * dt)[:, None]
+    state = jax.lax.dot_general(sB.T, x, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    state_ref[0, 0] = state.astype(state_ref.dtype)
+
+
+def ssd_chunk(C_, B_, x, dt, csum, nr, *, interpret=True):
+    """C_/B_ [Bt,K,c,H,N]; x [Bt,K,c,H,P]; dt/csum [Bt,K,c,H];
+    nr [Bt,K,c] int32.  Returns (y [Bt,K,c,H,P], states [Bt,K,H,N,P])."""
+    bt, k, c, h, n = C_.shape
+    p = x.shape[-1]
+    # layout: move head next to (b, k) so each grid step is one 2-D tile
+    def mh(t):  # [Bt,K,c,H,...] -> [Bt*H, K, c, ...]
+        t = jnp.moveaxis(t, 3, 1)
+        return t.reshape((bt * h, t.shape[2], c) + t.shape[4:])
+    Cm, Bm, xm, dtm, csm = mh(C_), mh(B_), mh(x), mh(dt), mh(csum)
+    nrm = jnp.repeat(nr[:, None], h, axis=1).reshape(bt * h, k, c)
+
+    grid = (bt * h, k)
+    kernel = functools.partial(_ssd_chunk_kernel, chunk=c)
+    y, states = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, c, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, c), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, c), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt * h, k, c, p), x.dtype),
+            jax.ShapeDtypeStruct((bt * h, k, n, p), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(Cm, Bm, xm, dtm, csm, nrm)
+
+    def unh(t, tail):  # [Bt*H, K, ...] -> [Bt, K, ..., H, ...]
+        t = t.reshape((bt, h, k) + tail)
+        return jnp.moveaxis(t, 1, 3)
+    y = unh(y, (c, p))                 # [Bt,K,c,H,P]
+    states = unh(states, (n, p))       # [Bt,K,N,H->?]
+    return y, jnp.moveaxis(states, 3, 2)   # [Bt,K,H,N,P]

@@ -1,0 +1,30 @@
+"""Oracle for the SSD intra-chunk kernel (Mamba-2 state-space duality).
+
+Per chunk (the quadratic 'attention-like' part of SSD):
+  y[i]    = sum_{j<=i, same-doc} exp(csum[i]-csum[j]) * dt[j]
+            * (C[i]·B[j]) * x[j]
+  state   = sum_j exp(csum[end]-csum[j]) * dt[j] * B[j] x[j]^T
+            (only j with no reset after them)
+computed for one (batch, chunk, head) slice:
+  C_, B_ [c, N]; x [c, P]; dt, csum [c]; nr [c] (reset prefix counts).
+"""
+import jax.numpy as jnp
+
+
+def ref_ssd_chunk(C_, B_, x, dt, csum, nr):
+    c = x.shape[0]
+    li = csum[:, None]
+    lj = csum[None, :]
+    dec = jnp.exp(jnp.clip(li - lj, -80.0, 0.0))
+    iota = jnp.arange(c)
+    tri = iota[:, None] >= iota[None, :]
+    same = nr[:, None] == nr[None, :]
+    dec = jnp.where(tri & same, dec, 0.0)
+    scores = C_ @ B_.T                                   # [c, c]
+    w = scores * dec * dt[None, :]
+    y = w @ x                                            # [c, P]
+    live = (nr == nr[-1]).astype(jnp.float32)
+    dec_end = jnp.exp(jnp.clip(csum[-1] - csum, -80.0, 0.0)) * live
+    sB = B_ * (dec_end * dt)[:, None]                    # [c, N]
+    state = sB.T @ x                                     # [N, P]
+    return y, state

@@ -1,0 +1,103 @@
+"""Per-op-category breakdown of a compiled module (the dry-run 'profiler'
+— §Perf iterations reason from this, since there is no wall-clock TPU).
+
+Groups trip-weighted dot FLOPs and collective bytes by the jax op_name
+metadata (e.g. attention einsums vs FFN matmuls vs dispatch gathers).
+"""
+from __future__ import annotations
+
+import collections
+import re
+from typing import Dict, Tuple
+
+from repro.launch import hlo_analysis as H
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _bucket(op_name: str) -> str:
+    s = op_name
+    if "bqhd,bkhd" in s or "bhqk,bkhd" in s or "tqhd,tkhd" in s \
+            or "thqk,tkhd" in s:
+        return "attention"
+    if "transpose" in s and ("bqhd" in s or "bhqk" in s or "tqhd" in s):
+        return "attention_bwd"
+    if "ecd,edf" in s or "ecf,efd" in s:
+        return "moe_experts"
+    if "bsd,vd" in s or "unembed" in s:
+        return "unembed"
+    if "all_to_all" in s or "ppermute" in s:
+        return "dispatch"
+    if "transpose(jvp" in s:
+        return "bwd_other"
+    return "fwd_other"
+
+
+def flops_breakdown(hlo_text: str) -> Dict[str, float]:
+    comps, entry = H.parse_hlo(hlo_text)
+    acc: Dict[str, float] = collections.defaultdict(float)
+
+    def walk(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            if op.opcode == "while":
+                bm = H._BODY_RE.search(op.tail)
+                cm = H._COND_RE.search(op.tail)
+                t = H._while_trip_count(comps, cm.group(1)) if cm else 1
+                if bm:
+                    walk(bm.group(1), mult * t)
+            elif op.opcode in ("fusion", "call", "custom-call", "reduce",
+                               "scatter", "sort", "map", "reduce-window"):
+                cm = H._CALLS_RE.search(op.tail)
+                if cm:
+                    walk(cm.group(1), mult)
+            elif op.opcode in ("dot", "convolution"):
+                f = H._dot_flops(comp, op) * mult
+                m = _OPNAME_RE.search(op.tail)
+                acc[_bucket(m.group(1) if m else "?")] += f
+    walk(entry, 1.0)
+    return dict(acc)
+
+
+def collective_breakdown_by_name(hlo_text: str) -> Dict[str, float]:
+    comps, entry = H.parse_hlo(hlo_text)
+    acc: Dict[str, float] = collections.defaultdict(float)
+
+    def walk(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            if op.opcode == "while":
+                bm = H._BODY_RE.search(op.tail)
+                cm = H._COND_RE.search(op.tail)
+                t = H._while_trip_count(comps, cm.group(1)) if cm else 1
+                if bm:
+                    walk(bm.group(1), mult * t)
+            elif op.opcode in ("fusion", "call"):
+                cm = H._CALLS_RE.search(op.tail)
+                if cm:
+                    walk(cm.group(1), mult)
+            else:
+                base = op.opcode.replace("-start", "")
+                if base in H.COLLECTIVES and not op.opcode.endswith("-done"):
+                    m = _OPNAME_RE.search(op.tail)
+                    key = (m.group(1)[-70:] if m else "?")
+                    acc[f"{base} | {key}"] += H.shape_bytes(op.shape) * mult
+    walk(entry, 1.0)
+    return dict(acc)
+
+
+def report(hlo_text: str, top: int = 15) -> str:
+    lines = ["-- flops by bucket (per device) --"]
+    fb = flops_breakdown(hlo_text)
+    tot = sum(fb.values()) or 1.0
+    for k, v in sorted(fb.items(), key=lambda kv: -kv[1]):
+        lines.append(f"  {k:16s} {v:12.4e}  {v/tot*100:5.1f}%")
+    lines.append("-- collective bytes by op_name (per device) --")
+    cb = collective_breakdown_by_name(hlo_text)
+    for k, v in sorted(cb.items(), key=lambda kv: -kv[1])[:top]:
+        lines.append(f"  {v/2**20:10.1f} MiB  {k}")
+    return "\n".join(lines)

@@ -1,0 +1,78 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input shape), lower + compile the appropriate
+step function on the production mesh and print memory/cost/collective
+analysis.  Results are appended as JSON lines.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  python -m repro.launch.dryrun --all                # single-pod 16x16
+  python -m repro.launch.dryrun --all --multi-pod    # 2x16x16 (512 chips)
+  python -m repro.launch.dryrun --arch ... --cad     # CAD dispatch mode
+"""
+import argparse
+import json
+import sys
+import traceback
+
+from repro.configs import ASSIGNED_ARCHS
+from repro.launch.dryrun_lib import INPUT_SHAPES, run_dryrun
+from repro.launch.mesh import make_production_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None,
+                    choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--cad", action="store_true",
+                    help="lower the CAD dispatch path (train shapes)")
+    ap.add_argument("--pingpong", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    args = ap.parse_args(argv)
+
+    archs = args.arch or list(ASSIGNED_ARCHS)
+    shapes = args.shape or list(INPUT_SHAPES)
+    if not args.all and args.arch is None and args.shape is None:
+        ap.error("pass --all or --arch/--shape")
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    failures = 0
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch} x {shape} mesh={list(mesh.devices.shape)}" \
+                      + (" CAD" if args.cad else "")
+                try:
+                    r = run_dryrun(arch, shape, mesh, cad=args.cad,
+                                   pingpong=args.pingpong)
+                except Exception as e:  # a failure here is a system bug
+                    failures += 1
+                    r = {"arch": arch, "shape": shape, "cad": args.cad,
+                         "mesh": list(mesh.devices.shape), "error":
+                         f"{type(e).__name__}: {e}"}
+                    traceback.print_exc()
+                f.write(json.dumps(r) + "\n")
+                f.flush()
+                if r.get("skipped"):
+                    print(f"[skip] {tag}: {r['reason']}")
+                elif "error" in r:
+                    print(f"[FAIL] {tag}: {r['error'][:200]}")
+                else:
+                    print(f"[ ok ] {tag}: compile={r['compile_s']}s "
+                          f"peak={r['peak_bytes']/2**30:.2f}GiB/dev "
+                          f"flops={r['hlo_flops_per_device']:.3e} "
+                          f"coll={r['collective_bytes_per_device']/2**20:.1f}"
+                          f"MiB")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

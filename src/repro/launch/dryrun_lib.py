@@ -1,0 +1,313 @@
+"""Dry-run library: build sharded ShapeDtypeStruct inputs for every
+(architecture × input shape), lower + compile the right step function on
+the production mesh, and extract memory/cost/collective statistics.
+
+No real allocation happens: everything is ShapeDtypeStruct + AOT
+lower/compile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.dispatch import CADContext
+from repro.core.plan import CADConfig
+from repro.models import model as M
+from repro.optim.adamw import AdamW
+from repro.parallel import (ParallelContext, ShardingRules, make_rules,
+                            param_pspecs)
+from repro.train.step import make_serve_step, make_train_step
+
+INPUT_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1, long=True),
+}
+
+
+def applicable(cfg, shape_name: str) -> Tuple[bool, str]:
+    info = INPUT_SHAPES[shape_name]
+    if info.get("long") and not cfg.subquadratic:
+        return False, ("pure full-attention arch: 500K decode requires a "
+                       "sub-quadratic/windowed variant (DESIGN.md §6)")
+    return True, ""
+
+
+# ------------------------------------------------------------------ specs
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _shard_tree(tree_shapes, pspecs, mesh):
+    return jax.tree.map(
+        lambda s, p: _sds(s.shape, s.dtype, mesh, p), tree_shapes, pspecs)
+
+
+def params_sds(cfg, mesh, rules):
+    shapes = jax.eval_shape(lambda: M.init(jax.random.PRNGKey(0), cfg))
+    specs = param_pspecs(cfg, shapes, rules, mesh)
+    return _shard_tree(shapes, specs, mesh), specs
+
+
+def opt_sds(cfg, p_sds, p_specs, mesh):
+    opt = AdamW()
+    shapes = jax.eval_shape(opt.init, p_sds)
+    from repro.optim.adamw import AdamWState
+    specs = AdamWState(step=P(), mu=p_specs, nu=p_specs)
+    return _shard_tree(shapes, specs, mesh)
+
+
+def train_batch_sds(cfg, mesh, rules, seq, batch, with_memory):
+    bspec = P(rules.batch, None)
+    out = {
+        "tokens": _sds((batch, seq), jnp.int32, mesh, bspec),
+        "labels": _sds((batch, seq), jnp.int32, mesh, bspec),
+        "segment_ids": _sds((batch, seq), jnp.int32, mesh, bspec),
+        "positions": _sds((batch, seq), jnp.int32, mesh, bspec),
+    }
+    if with_memory:
+        m = cfg.encoder.n_ctx if cfg.encoder else 1601
+        out["memory"] = _sds((batch, m, cfg.d_model), cfg.cdtype, mesh,
+                             P(rules.batch, None, None))
+    return out
+
+
+def _cache_pspecs(cfg, cache_shapes, rules):
+    def leaf_spec(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        bspec = rules.batch
+        sspec = rules.seq
+        if name in ("k", "v"):
+            return P(None, bspec, sspec, rules.kv_heads, None)
+        if name == "kv_pos":
+            return P(None, bspec, sspec)
+        if name in ("xk", "xv"):
+            return P(None, bspec, None, rules.kv_heads, None)
+        if name == "state":      # [G,B,H,N,P]
+            return P(None, bspec, None, None, None)
+        if name == "conv":
+            return P(None, bspec, None, None)
+        if name == "h":          # [G,B,W]
+            return P(None, bspec, None)
+        return P(*([None] * leaf.ndim))
+    import jax.tree_util as jtu
+    return jtu.tree_map_with_path(leaf_spec, cache_shapes)
+
+
+def cache_sds(cfg, mesh, rules, batch, max_seq, p_sds, with_memory):
+    mem = None
+    if with_memory:
+        m = cfg.encoder.n_ctx if cfg.encoder else 1601
+        mem = jax.ShapeDtypeStruct((batch, m, cfg.d_model), cfg.cdtype)
+    ctx = ParallelContext(mesh=None, rules=ShardingRules(), attn_impl="xla",
+                          remat=False)
+    shapes = jax.eval_shape(
+        lambda p, mm: M.init_cache(p, cfg, batch, max_seq, memory=mm,
+                                   ctx=ctx), p_sds, mem)
+    specs = _cache_pspecs(cfg, shapes, rules)
+    return _shard_tree(shapes, specs, mesh)
+
+
+# ----------------------------------------------------------- CAD plumbing
+def cad_setup(cfg, mesh, rules, seq, batch, pingpong=False):
+    """CADConfig + plan SDS for the production mesh."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    d = 1
+    for a in ("pod", "data"):
+        d *= axes.get(a, 1)
+    tokens_per_rank = batch * seq // d
+    if pingpong:
+        tokens_per_rank //= 2   # per nano-batch
+    blk = 128
+    # capacity rule (§Perf P10): per-pair caps >= max-doc blocks so long
+    # document tails stay schedulable; docs never span a row -> max doc =
+    # one row of `seq` tokens
+    cadcfg = CADConfig.default(d, tokens_per_rank, blk=blk,
+                               max_doc_tokens=seq)
+    jmax = max(1, seq // blk)   # docs never exceed one row
+    from repro.core.plan import empty_plan
+    plan_np = empty_plan(cadcfg)
+    cspec = rules.cad_axis
+    plan = {k: _sds(v.shape, jnp.int32, mesh, P(cspec, *([None] *
+                                                         (v.ndim - 1))))
+            for k, v in plan_np.items()}
+    return cadcfg, plan, jmax
+
+
+# ------------------------------------------------------------- the lower
+def build_step(cfg, mesh, shape_name: str, *, cad: bool = False,
+               pingpong: bool = False, attn_impl: str = "xla"):
+    """Returns (fn, example_args_sds, ctx)."""
+    info = INPUT_SHAPES[shape_name]
+    rules = make_rules(mesh, cfg)
+    if info.get("long"):
+        # batch=1: context-parallel layout — shard the sequence over every
+        # axis (data for CP + model: the KV cache is the footprint)
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        seq_axes = axes + (("model",) if "model" in mesh.axis_names
+                           else ())
+        rules = dataclasses.replace(rules, batch=None, seq=seq_axes,
+                                    residual_seq=None)
+    elif info["kind"] == "decode":
+        # batch over data; cache sequence over model (kv heads rarely
+        # divide the model axis — S always does; a mesh axis may appear
+        # only once per spec, so kv_heads yields to seq)
+        has_model = "model" in mesh.axis_names
+        rules = dataclasses.replace(
+            rules, seq="model" if has_model else None,
+            kv_heads=None if has_model else rules.kv_heads,
+            residual_seq=None)
+    with_memory = cfg.family in ("vlm", "audio")
+    ctx = ParallelContext(mesh=mesh, rules=rules, attn_impl=attn_impl,
+                          remat=True)
+    p_sds, p_specs = params_sds(cfg, mesh, rules)
+
+    if info["kind"] == "train":
+        cadctx = None
+        if cad:
+            cadcfg, plan_sds, jmax = cad_setup(cfg, mesh, rules,
+                                               info["seq"], info["batch"],
+                                               pingpong=pingpong)
+            cadctx = CADContext(cfg=cadcfg, kernel="xla", jmax=jmax,
+                                pingpong=pingpong)
+            ctx = dataclasses.replace(ctx, attn_impl="cad", cad=cadctx)
+        opt = AdamW()
+        o_sds = opt_sds(cfg, p_sds, p_specs, mesh)
+        b_sds = train_batch_sds(cfg, mesh, rules, info["seq"],
+                                info["batch"], with_memory)
+        if cad:
+            b_sds["plan"] = (plan_sds, plan_sds) if pingpong else plan_sds
+        fn = make_train_step(cfg, ctx, opt)
+        return fn, (p_sds, o_sds, b_sds), ctx
+
+    if info["kind"] == "prefill":
+        b_sds = train_batch_sds(cfg, mesh, rules, info["seq"],
+                                info["batch"], with_memory)
+        b_sds.pop("labels")
+
+        def prefill_step(params, batch):
+            logits, _ = M.forward(params, cfg, batch, ctx)
+            return logits[:, -1:, :]
+        return prefill_step, (p_sds, b_sds), ctx
+
+    # decode
+    b = info["batch"]
+    c_sds = cache_sds(cfg, mesh, rules, b, info["seq"], p_sds, with_memory)
+    tok = _sds((b, 1), jnp.int32, mesh, P(rules.batch, None))
+    pos = _sds((b,), jnp.int32, mesh, P(rules.batch))
+    fn = make_serve_step(cfg, ctx)
+    return fn, (p_sds, c_sds, tok, pos), ctx
+
+
+HLO_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-shape bytes of every collective op in the (stable-)HLO /
+    HLO text.  Per-device bytes (shapes in the compiled module are local)."""
+    out = {k: 0.0 for k in HLO_COLLECTIVES}
+    count = {k: 0 for k in HLO_COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)", ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if "start" in ls.split("(")[0] and f"{op}-start" in ls:
+            pass  # async start carries the shape; done is pass-through
+        if f"{op}-done" in ls:
+            continue
+        out[op] += _shape_bytes(shape_str)
+        count[op] += 1
+    return {"bytes": out, "count": count,
+            "total_bytes": sum(out.values())}
+
+
+def run_dryrun(arch: str, shape_name: str, mesh, *, cad=False,
+               pingpong=False) -> Dict[str, Any]:
+    """Lower + compile one combo; return stats dict."""
+    cfg = get_config(arch)
+    ok, why = applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": why}
+    t0 = time.time()
+    fn, args, ctx = build_step(cfg, mesh, shape_name, cad=cad,
+                               pingpong=pingpong)
+    lowered = jax.jit(fn).lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    from repro.launch.hlo_analysis import analyze
+    hc = analyze(txt)   # trip-count-aware (XLA counts loop bodies once)
+    n_dev = mesh.devices.size
+
+    def g(obj, name, default=0.0):
+        try:
+            v = getattr(obj, name, None)
+            if v is None and isinstance(obj, dict):
+                v = obj.get(name, default)
+            return float(v if v is not None else default)
+        except Exception:
+            return float(default)
+
+    result = {
+        "arch": arch, "shape": shape_name, "cad": cad,
+        "pingpong": pingpong, "skipped": False,
+        "n_devices": int(n_dev),
+        "mesh": list(mesh.devices.shape),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        # memory_analysis numbers are per-device
+        "argument_bytes": g(mem, "argument_size_in_bytes"),
+        "output_bytes": g(mem, "output_size_in_bytes"),
+        "temp_bytes": g(mem, "temp_size_in_bytes"),
+        "peak_bytes": (g(mem, "argument_size_in_bytes")
+                       + g(mem, "temp_size_in_bytes")
+                       + g(mem, "output_size_in_bytes")),
+        # trip-count-aware per-device analysis of the compiled module
+        "hlo_flops_per_device": hc.flops,
+        "hlo_bytes_per_device": hc.hbm_bytes,
+        "collective_bytes_per_device": hc.collective_bytes,
+        "collective_counts": hc.collective_counts,
+        "collective_breakdown": hc.collective_breakdown,
+        # XLA's own (loop-body-once) numbers kept for reference
+        "xla_flops_per_device": g(cost, "flops"),
+        "xla_bytes_per_device": g(cost, "bytes accessed"),
+    }
+    return result

@@ -1,0 +1,267 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so any model
+that scans over layers (ours all do) under-reports FLOPs/bytes/collective
+traffic by the trip count.  This module parses the compiled HLO text,
+walks the call graph (entry -> fusions/calls/whiles/conditionals), infers
+while trip counts from the loop-condition constant, and accumulates:
+
+  * flops               — dot/convolution MAC*2, trip-weighted
+  * collective bytes    — output-shape bytes of all-gather / all-reduce /
+                          reduce-scatter / all-to-all / collective-permute
+                          (+ their async -start forms), trip-weighted
+  * hbm bytes           — sum of operand+output bytes of compute ops
+                          (fusions, dots, copies, collectives): an
+                          approximation of HBM traffic that, unlike
+                          cost_analysis, scales with loop trip counts
+
+The parser is deliberately text-based (no xla_client bindings needed) and
+validated against known matmul/scan modules in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "c64": 8, "f32": 4, "bf16": 2, "f16": 2,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2,
+                "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?.*?\)?)\s*"
+    r"([a-z][\w\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(x) for x in dims.split(",")] if dims else []))
+    return out
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        total += _DTYPE_BYTES[dt] * math.prod(dims)
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    tail: str          # rest of the line after the opening paren
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    by_name: Dict[str, Op]
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        ls = line.strip()
+        if not ls or ls.startswith("//") or ls.startswith("HloModule"):
+            continue
+        if ls == "}":
+            cur = None
+            continue
+        if cur is None:
+            m = _COMP_RE.match(ls)
+            if m and ls.endswith("{"):
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                if ls.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        m = _DEF_RE.match(ls)
+        if not m:
+            continue
+        name, shape, opcode, tail = m.groups()
+        op = Op(name=name, shape=shape, opcode=opcode, tail=tail)
+        cur.ops.append(op)
+        cur.by_name[name] = op
+    if entry is None:  # fall back: computation named like main/entry
+        for n in comps:
+            if "main" in n or "entry" in n.lower():
+                entry = n
+        if entry is None and comps:
+            entry = list(comps)[-1]
+    return comps, entry
+
+
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _while_trip_count(comps, cond_name: str) -> int:
+    """Largest s32/u32/s64 constant in the condition computation — for
+    scan-lowered loops this is the trip bound (ind_var < N)."""
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    best = 1
+    for op in comp.ops:
+        if op.opcode == "constant":
+            m = re.match(r"([\-0-9]+)\)?", op.tail)
+            if m:
+                try:
+                    best = max(best, int(m.group(1)))
+                except ValueError:
+                    pass
+        if op.opcode == "fusion":
+            cm = _CALLS_RE.search(op.tail)
+            if cm:
+                best = max(best, _while_trip_count(comps, cm.group(1)))
+    return best
+
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    out_elems = sum(math.prod(d) for _, d in _shape_dims(op.shape))
+    mc = _CONTRACT_RE.search(op.tail)
+    contract_dims = [int(x) for x in mc.group(1).split(",")] if (
+        mc and mc.group(1)) else []
+    # lhs operand shape
+    ops_named = _OPERAND_RE.findall(op.tail.split(")")[0])
+    csize = 1
+    if ops_named:
+        lhs = comp.by_name.get(ops_named[0])
+        if lhs is not None:
+            dims = _shape_dims(lhs.shape)
+            if dims:
+                _, d = dims[0]
+                for ci in contract_dims:
+                    if ci < len(d):
+                        csize *= d[ci]
+    return 2.0 * out_elems * csize
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_breakdown: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collective_breakdown.items():
+            self.collective_breakdown[k] = \
+                self.collective_breakdown.get(k, 0.0) + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = \
+                self.collective_counts.get(k, 0.0) + v * mult
+
+
+def _operand_bytes(comp: Computation, op: Op) -> int:
+    total = 0
+    head = op.tail.split("),")[0]
+    for name in _OPERAND_RE.findall(head):
+        d = comp.by_name.get(name)
+        if d is not None:
+            total += shape_bytes(d.shape)
+    return total
+
+
+def analyze(text: str) -> HloCost:
+    comps, entry = parse_hlo(text)
+    memo: Dict[Tuple[str, bool], HloCost] = {}
+
+    def comp_cost(name: str, at_hbm: bool) -> HloCost:
+        """``at_hbm``: ops in this computation materialize buffers (entry,
+        while bodies).  Inside fusions only the fusion *boundary* touches
+        HBM — internals live in VMEM/registers — so nested ops contribute
+        flops/collectives but no bytes."""
+        key = (name, at_hbm)
+        if key in memo:
+            return memo[key]
+        memo[key] = HloCost()  # break cycles defensively
+        comp = comps.get(name)
+        if comp is None:
+            return memo[key]
+        c = HloCost()
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                bm = _BODY_RE.search(op.tail)
+                cm = _COND_RE.search(op.tail)
+                trips = _while_trip_count(comps, cm.group(1)) if cm else 1
+                if bm:
+                    c.add(comp_cost(bm.group(1), at_hbm), trips)
+                continue
+            if oc == "conditional":
+                bm = _BRANCHES_RE.search(op.tail)
+                if bm:
+                    branches = [b.strip().lstrip("%") for b in
+                                bm.group(1).split(",") if b.strip()]
+                    if branches:   # average the branches
+                        sub = HloCost()
+                        for b in branches:
+                            sub.add(comp_cost(b, at_hbm),
+                                    1.0 / len(branches))
+                        c.add(sub)
+                continue
+            if oc in ("fusion", "call", "custom-call", "map", "reduce",
+                      "reduce-window", "sort", "scatter"):
+                cm = _CALLS_RE.search(op.tail)
+                if cm:
+                    inner_at_hbm = at_hbm and oc == "call"
+                    c.add(comp_cost(cm.group(1), inner_at_hbm))
+                if at_hbm:
+                    c.hbm_bytes += shape_bytes(op.shape) \
+                        + _operand_bytes(comp, op)
+                continue
+            base = oc.replace("-start", "")
+            if base in COLLECTIVES and not oc.endswith("-done"):
+                b = shape_bytes(op.shape)
+                c.collective_bytes += b
+                c.collective_breakdown[base] = \
+                    c.collective_breakdown.get(base, 0.0) + b
+                c.collective_counts[base] = \
+                    c.collective_counts.get(base, 0.0) + 1
+                if at_hbm:
+                    c.hbm_bytes += b
+                continue
+            if oc in ("dot", "convolution"):
+                c.flops += _dot_flops(comp, op)
+                if at_hbm:
+                    c.hbm_bytes += shape_bytes(op.shape) \
+                        + _operand_bytes(comp, op)
+                continue
+            if at_hbm and oc in (
+                    "copy", "transpose", "broadcast", "add", "multiply",
+                    "dynamic-update-slice", "dynamic-slice", "gather",
+                    "concatenate", "reshape", "select", "exponential",
+                    "tanh", "divide", "subtract", "maximum", "minimum"):
+                c.hbm_bytes += shape_bytes(op.shape)
+        memo[key] = c
+        return c
+
+    return comp_cost(entry, True)

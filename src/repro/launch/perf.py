@@ -1,0 +1,55 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ before any jax import (see dryrun.py)
+
+"""Perf-iteration driver: lower+compile one (arch × shape) combo and print
+the roofline terms plus the per-bucket flops / per-op collective
+breakdown — the 'profile' each §Perf hypothesis is tested against.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch gemma2-2b \
+      --shape train_4k [--cad] [--pingpong] [--multi-pod]
+"""
+import argparse
+
+import jax
+
+from repro.launch.breakdown import report
+from repro.launch.dryrun_lib import build_step, run_dryrun
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline_row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--cad", action="store_true")
+    ap.add_argument("--pingpong", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    rec = run_dryrun(args.arch, args.shape, mesh, cad=args.cad,
+                     pingpong=args.pingpong)
+    if rec.get("skipped") or rec.get("error"):
+        print(rec)
+        return
+    row = roofline_row(rec)
+    print(f"== {args.arch} x {args.shape} mesh={rec['mesh']} "
+          f"cad={args.cad} pingpong={args.pingpong}")
+    print(f"compute   {row['compute_s']:.4f} s")
+    print(f"memory    {row['memory_s']:.4f} s")
+    print(f"collective{row['collective_s']:.4f} s")
+    print(f"dominant  {row['dominant']}   useful={row['useful_ratio']:.2f} "
+          f"peak={row['peak_gib_per_dev']:.1f} GiB/dev")
+    # re-lower for the breakdown (run_dryrun doesn't return the text)
+    from repro.configs import get_config
+    fn, a, ctx = build_step(get_config(args.arch), mesh, args.shape,
+                            cad=args.cad, pingpong=args.pingpong)
+    txt = jax.jit(fn).lower(*a).compile().as_text()
+    print(report(txt, top=args.top))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Production training launcher.
+
+On real TPU hardware this runs the full mesh; on CPU it runs reduced
+configs (the mesh flags are for the dry-run, see dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m-reduced \
+      --steps 50 --seq 512 --batch 4 --ranks 2 --cad
+
+Flags mirror the paper's system knobs: --cad (core attention
+disaggregation on/off), --pingpong (nano-batch overlap), --tolerance
+(scheduler imbalance budget), --strategy fixed|variable (packing
+baseline).
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.data.pipeline import PipelineConfig
+from repro.parallel import ParallelContext
+from repro.train.trainer import TrainConfig, make_cad_context, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ranks", type=int, default=2)
+    ap.add_argument("--max-doc", type=int, default=0)
+    ap.add_argument("--dist", default="pretrain",
+                    choices=["pretrain", "prolong"])
+    ap.add_argument("--strategy", default="fixed",
+                    choices=["fixed", "variable"])
+    ap.add_argument("--cad", action="store_true")
+    ap.add_argument("--pingpong", action="store_true")
+    ap.add_argument("--tolerance", type=float, default=0.1)
+    ap.add_argument("--kernel", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    print(f"arch={cfg.arch_id} params={cfg.n_params()/1e6:.1f}M "
+          f"family={cfg.family}")
+    pipe = PipelineConfig(
+        distribution=args.dist, max_doc_len=args.max_doc or args.seq,
+        seq_len=args.seq, global_batch=args.batch, n_ranks=args.ranks,
+        vocab_size=cfg.vocab_size, strategy=args.strategy)
+    if args.cad and cfg.has_attention():
+        ctx = make_cad_context(cfg, pipe, kernel=args.kernel,
+                               pingpong=args.pingpong,
+                               tolerance=args.tolerance)
+    else:
+        if args.cad:
+            print(f"note: {cfg.arch_id} is attention-free; CAD is "
+                  f"inapplicable (DESIGN.md §5) — training without it")
+        ctx = ParallelContext(attn_impl="xla", remat=True)
+    tc = TrainConfig(steps=args.steps, peak_lr=args.lr,
+                     warmup=max(1, args.steps // 10),
+                     log_every=max(1, args.steps // 20),
+                     ckpt_every=args.ckpt_every,
+                     ckpt_dir=args.ckpt_dir or "/tmp/repro_ckpt")
+    res = train(cfg, pipe, tc, ctx=ctx)
+    h = res["history"]
+    print(f"done: loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

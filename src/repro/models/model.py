@@ -1,0 +1,356 @@
+"""Model assembly: init / forward / decode for every assigned architecture.
+
+Layers are grouped into ``n_layers // period`` *super-blocks* (one slot per
+``layer_pattern`` entry); parameters are stacked on a leading group dim and
+executed with ``jax.lax.scan`` so the lowered HLO stays small even for
+96-layer models.  ``jax.checkpoint`` (remat) wraps the scan body.
+
+Batch dict (training):
+  tokens       [B,S] int32
+  labels       [B,S] int32  (-1 = no loss)
+  segment_ids  [B,S] int32  (0 = padding; docs numbered from 1)
+  positions    [B,S] int32  (position within document)
+  memory       [B,M,D] optional (vlm patch embeddings / audio frames)
+  memory_mask  [B,M] optional
+
+Decode: see ``init_cache`` / ``decode_step``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ------------------------------------------------------------------- init
+def slot_init(key, cfg, kind: str):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": L.norm_init(cfg.d_model, cfg.pdtype, cfg.norm)}
+    if kind in ("global", "local", "cross", "enc"):
+        p["attn"] = L.attn_init(ks[0], cfg, cross=(kind == "cross"))
+        p["norm2"] = L.norm_init(cfg.d_model, cfg.pdtype, cfg.norm)
+        if kind == "cross":
+            p["xnorm"] = L.norm_init(cfg.d_model, cfg.pdtype, cfg.norm)
+        if cfg.moe and cfg.moe.n_experts and kind != "enc":
+            p["moe"] = L.moe_init(ks[1], cfg)
+        else:
+            p["ffn"] = L.ffn_init(ks[1], cfg)
+        if cfg.post_norms:
+            p["pnorm1"] = L.norm_init(cfg.d_model, cfg.pdtype, cfg.norm)
+            p["pnorm2"] = L.norm_init(cfg.d_model, cfg.pdtype, cfg.norm)
+    elif kind == "ssd":
+        p["mixer"] = L.ssd_init(ks[0], cfg)
+    elif kind == "rglru":
+        p["mixer"] = L.rglru_init(ks[0], cfg)
+        p["norm2"] = L.norm_init(cfg.d_model, cfg.pdtype, cfg.norm)
+        p["ffn"] = L.ffn_init(ks[1], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init(key, cfg):
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    params["embed"] = {"embed": L.dense_init(
+        keys[0], cfg.d_model, (cfg.vocab_size, cfg.d_model), cfg.pdtype)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = {"unembed": L.dense_init(
+            keys[1], cfg.d_model, (cfg.vocab_size, cfg.d_model), cfg.pdtype)}
+    params["final_norm"] = L.norm_init(cfg.d_model, cfg.pdtype, cfg.norm)
+
+    g = cfg.n_groups
+    slots = []
+    for si, kind in enumerate(cfg.layer_pattern):
+        kslot = jax.random.fold_in(keys[2], si)
+        gkeys = jax.random.split(kslot, g)
+        slots.append(jax.vmap(lambda k, kd=kind: slot_init(k, cfg, kd))(gkeys))
+    params["blocks"] = tuple(slots)
+
+    if cfg.encoder and cfg.encoder.n_layers:
+        ekeys = jax.random.split(keys[3], cfg.encoder.n_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: slot_init(k, cfg, "enc"))(ekeys)
+        params["enc_final_norm"] = L.norm_init(cfg.d_model, cfg.pdtype,
+                                               cfg.norm)
+    return params
+
+
+# ---------------------------------------------------------------- forward
+def block_apply(kind, p, h, batch, cfg, ctx, aux):
+    if kind in ("global", "local", "cross", "enc"):
+        causal = kind != "enc"
+        window = cfg.window if kind == "local" else 0
+        a = L.self_attn_apply(p["attn"], L.norm_apply(p["norm1"], h, cfg.norm),
+                              batch, cfg, ctx, causal=causal, window=window)
+        if cfg.post_norms:
+            a = L.norm_apply(p["pnorm1"], a, cfg.norm)
+        h = h + a
+        if kind == "cross":
+            xa = L.cross_attn_apply(
+                p["attn"], L.norm_apply(p["xnorm"], h, cfg.norm), batch, cfg,
+                ctx)
+            h = h + xa
+        f_in = L.norm_apply(p["norm2"], h, cfg.norm)
+        if "moe" in p:
+            f, losses = L.moe_apply(p["moe"], f_in, cfg, ctx)
+            aux = {k: aux.get(k, 0.0) + v for k, v in losses.items()} | \
+                {k: v for k, v in aux.items() if k not in losses}
+        else:
+            f = L.ffn_apply(p["ffn"], f_in, cfg, ctx)
+        if cfg.post_norms:
+            f = L.norm_apply(p["pnorm2"], f, cfg.norm)
+        h = h + f
+    elif kind == "ssd":
+        h = h + L.ssd_apply(p["mixer"],
+                            L.norm_apply(p["norm1"], h, cfg.norm),
+                            batch, cfg, ctx)
+    elif kind == "rglru":
+        h = h + L.rglru_apply(p["mixer"],
+                              L.norm_apply(p["norm1"], h, cfg.norm),
+                              batch, cfg, ctx)
+        h = h + L.ffn_apply(p["ffn"],
+                            L.norm_apply(p["norm2"], h, cfg.norm), cfg, ctx)
+    else:
+        raise ValueError(kind)
+    return ctx.cons(h, "batch", "residual_seq", None), aux
+
+
+def _embed(params, cfg, tokens, ctx):
+    h = jnp.take(params["embed"]["embed"], tokens, axis=0)
+    h = h.astype(cfg.cdtype)
+    if cfg.scale_embed:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype)
+    return ctx.cons(h, "batch", "residual_seq", None)
+
+
+def _unembed(params, cfg, h):
+    table = (params["embed"]["embed"] if cfg.tie_embeddings
+             else params["unembed"]["unembed"])
+    logits = jnp.einsum("bsd,vd->bsv", h, table).astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        logits = jnp.tanh(logits / cfg.final_logit_softcap) \
+            * cfg.final_logit_softcap
+    return logits
+
+
+def encode(params, cfg, memory_raw, ctx):
+    """Whisper-style encoder over stub frame embeddings [B,M,D]."""
+    b, m, _ = memory_raw.shape
+    pos = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), (b, m))
+    h = memory_raw.astype(cfg.cdtype) + L.sinusoidal_pos(pos, cfg.d_model,
+                                                         cfg.cdtype)
+    ebatch = {"segment_ids": jnp.ones((b, m), jnp.int32), "positions": pos}
+
+    def body(carry, gp):
+        hh, aux = carry
+        hh, aux = block_apply("enc", gp, hh, ebatch, cfg, ctx, aux)
+        return (hh, aux), None
+
+    fn = jax.checkpoint(body) if ctx.remat else body
+    (h, _), _ = jax.lax.scan(fn, (h, {}), params["enc_blocks"])
+    return L.norm_apply(params["enc_final_norm"], h, cfg.norm)
+
+
+def forward(params, cfg, batch, ctx) -> Tuple[jnp.ndarray, Dict]:
+    """Packed-LM forward.  Returns (logits [B,S,V] f32, aux-losses)."""
+    batch = dict(batch)
+    if cfg.encoder and cfg.encoder.n_layers and "memory" in batch:
+        batch["memory"] = encode(params, cfg, batch["memory"], ctx)
+    elif "memory" in batch and batch["memory"] is not None:
+        batch["memory"] = batch["memory"].astype(cfg.cdtype)
+    h = _embed(params, cfg, batch["tokens"], ctx)
+    if not cfg.use_rope and cfg.has_attention():
+        h = h + L.sinusoidal_pos(batch["positions"], cfg.d_model, cfg.cdtype)
+
+    pattern = cfg.layer_pattern
+    aux0 = {"moe_lb": jnp.zeros((), jnp.float32),
+            "moe_z": jnp.zeros((), jnp.float32)} \
+        if (cfg.moe and cfg.moe.n_experts) else {}
+
+    def body(carry, group_params):
+        hh, aux = carry
+        for kind, gp in zip(pattern, group_params):
+            hh, aux = block_apply(kind, gp, hh, batch, cfg, ctx, aux)
+        return (hh, aux), None
+
+    fn = jax.checkpoint(body) if ctx.remat else body
+    (h, aux), _ = jax.lax.scan(fn, (h, aux0), params["blocks"])
+    h = L.norm_apply(params["final_norm"], h, cfg.norm)
+    return _unembed(params, cfg, h), aux
+
+
+# ----------------------------------------------------------------- decode
+def init_cache(params, cfg, batch_size: int, max_seq: int,
+               memory: Optional[jnp.ndarray] = None, ctx=None):
+    """Build the decode cache pytree (zeros; positions -1 = empty)."""
+    b, dt = batch_size, cfg.cdtype
+    dh, hkv = cfg.head_dim, cfg.n_kv_heads
+    g = cfg.n_groups
+    if memory is not None and cfg.encoder and cfg.encoder.n_layers:
+        memory = encode(params, cfg, memory, ctx)
+
+    slots = []
+    for si, kind in enumerate(cfg.layer_pattern):
+        if kind in ("global", "cross"):
+            c = {"k": jnp.zeros((g, b, max_seq, hkv, dh), dt),
+                 "v": jnp.zeros((g, b, max_seq, hkv, dh), dt),
+                 "kv_pos": -jnp.ones((g, b, max_seq), jnp.int32)}
+            if kind == "cross":
+                assert memory is not None
+                sp = params["blocks"][si]
+                m = memory.shape[1]
+
+                def xkv(gp):
+                    k = (memory @ gp["attn"]["xwk"]).reshape(b, m, hkv, dh)
+                    v = (memory @ gp["attn"]["xwv"]).reshape(b, m, hkv, dh)
+                    return k, v
+                xk, xv = jax.vmap(xkv)(sp)
+                c["xk"], c["xv"] = xk, xv
+            slots.append(c)
+        elif kind == "local":
+            w = min(cfg.window, max_seq)
+            slots.append({"k": jnp.zeros((g, b, w, hkv, dh), dt),
+                          "v": jnp.zeros((g, b, w, hkv, dh), dt),
+                          "kv_pos": -jnp.ones((g, b, w), jnp.int32)})
+        elif kind == "ssd":
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            conv_ch = d_in + 2 * s.n_groups * s.d_state
+            slots.append({
+                "conv": jnp.zeros((g, b, s.conv_width - 1, conv_ch), dt),
+                "state": jnp.zeros((g, b, nh, s.d_state, s.head_dim),
+                                   jnp.float32)})
+        elif kind == "rglru":
+            w = cfg.rglru.lru_width or cfg.d_model
+            slots.append({
+                "conv": jnp.zeros((g, b, cfg.rglru.conv_width - 1, w), dt),
+                "h": jnp.zeros((g, b, w), jnp.float32)})
+        else:
+            raise ValueError(kind)
+    return {"slots": tuple(slots)}
+
+
+def _write_cache(cache_k, cache_v, kv_pos, k_new, v_new, pos, ring: bool):
+    """Write one token's k/v at (ring) position.  pos [B]."""
+    size = cache_k.shape[1]
+    slot = (pos % size) if ring else pos
+
+    def upd(c, x, i):
+        return jax.vmap(
+            lambda cc, xx, ii: jax.lax.dynamic_update_slice_in_dim(
+                cc, xx, ii, axis=0))(c, x, i)
+    cache_k = upd(cache_k, k_new, slot)
+    cache_v = upd(cache_v, v_new, slot)
+    kv_pos = jax.vmap(
+        lambda kp, pp, ii: jax.lax.dynamic_update_slice_in_dim(
+            kp, pp[None], ii, axis=0))(kv_pos, pos, slot)
+    return cache_k, cache_v, kv_pos
+
+
+def attn_decode(p, h, cache_slot, pos, cfg, ctx, kind):
+    """h [B,1,D].  Returns (out [B,1,D], new_cache_slot)."""
+    b = h.shape[0]
+    dh = cfg.head_dim
+    posb = pos[:, None]                                   # [B,1]
+    q, k, v = L.qkv_proj(p, h, cfg,
+                         posb if cfg.use_rope else None)
+    ring = kind == "local"
+    ck, cv, kp = _write_cache(cache_slot["k"], cache_slot["v"],
+                              cache_slot["kv_pos"], k, v, pos, ring)
+    mask = kp >= 0
+    window = cfg.window if kind == "local" else 0
+    out = L.decode_attention(q, ck, cv, mask, posb, kp,
+                             window=window,
+                             softcap=cfg.attn_logit_softcap)
+    out = out.reshape(b, 1, cfg.n_heads * dh) @ p["wo"]
+    new_slot = dict(cache_slot)
+    new_slot.update(k=ck, v=cv, kv_pos=kp)
+    return out, new_slot
+
+
+def cross_decode(p, h, cache_slot, cfg):
+    b = h.shape[0]
+    dh = cfg.head_dim
+    q = (h @ p["xwq"]).reshape(b, 1, cfg.n_heads, dh)
+    m = cache_slot["xk"].shape[1]
+    mask = jnp.ones((b, m), bool)
+    zero = jnp.zeros((b, m), jnp.int32)
+    out = L.decode_attention(q, cache_slot["xk"], cache_slot["xv"], mask,
+                             zero[:, :1], zero, window=0,
+                             softcap=cfg.attn_logit_softcap)
+    out = out.reshape(b, 1, cfg.n_heads * dh) @ p["xwo"]
+    if "xgate" in p:
+        out = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(out.dtype) * out
+    return out
+
+
+def block_decode(kind, p, h, cache_slot, pos, cfg, ctx):
+    if kind in ("global", "local", "cross"):
+        a_in = L.norm_apply(p["norm1"], h, cfg.norm)
+        a, new_slot = attn_decode(p["attn"], a_in, cache_slot, pos, cfg, ctx,
+                                  kind)
+        if cfg.post_norms:
+            a = L.norm_apply(p["pnorm1"], a, cfg.norm)
+        h = h + a
+        if kind == "cross":
+            h = h + cross_decode(p["attn"],
+                                 L.norm_apply(p["xnorm"], h, cfg.norm),
+                                 new_slot, cfg)
+        f_in = L.norm_apply(p["norm2"], h, cfg.norm)
+        if "moe" in p:
+            f, _ = L.moe_apply(p["moe"], f_in, cfg, ctx, no_drop=True)
+        else:
+            f = L.ffn_apply(p["ffn"], f_in, cfg, ctx)
+        if cfg.post_norms:
+            f = L.norm_apply(p["pnorm2"], f, cfg.norm)
+        return h + f, new_slot
+    if kind == "ssd":
+        y, conv, state = L.ssd_decode(
+            p["mixer"], L.norm_apply(p["norm1"], h, cfg.norm),
+            cache_slot["conv"], cache_slot["state"], cfg)
+        return h + y, {"conv": conv, "state": state}
+    if kind == "rglru":
+        mixer = p["mixer"]
+        xin = L.norm_apply(p["norm1"], h, cfg.norm)
+        gate_br = jax.nn.gelu(xin @ mixer["w_gate_br"])
+        x = xin @ mixer["w_x"]
+        x, conv = L._causal_conv(x, mixer["conv_w"], mixer["conv_b"],
+                                 cache_slot["conv"])
+        hstate = L.rglru_decode(mixer, x, cache_slot["h"], reset=(pos == 0))
+        y = (hstate[:, None].astype(h.dtype) * gate_br) @ mixer["w_out"]
+        h = h + y
+        h = h + L.ffn_apply(p["ffn"], L.norm_apply(p["norm2"], h, cfg.norm),
+                            cfg, ctx)
+        return h, {"conv": conv, "h": hstate}
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg, cache, tokens, pos, ctx):
+    """One decode step.  tokens [B,1], pos [B] (#tokens already cached).
+    Returns (logits [B,1,V], new_cache)."""
+    h = _embed(params, cfg, tokens, ctx)
+    if not cfg.use_rope and cfg.has_attention():
+        h = h + L.sinusoidal_pos(pos[:, None], cfg.d_model, cfg.cdtype)
+    pattern = cfg.layer_pattern
+
+    def body(h, xs):
+        group_params, group_cache = xs
+        new_cache = []
+        for kind, gp, gc in zip(pattern, group_params, group_cache):
+            h, nc = block_decode(kind, gp, h, gc, pos, cfg, ctx)
+        # NOTE: loop rebinding -- collect inside the loop
+            new_cache.append(nc)
+        return h, tuple(new_cache)
+
+    h, new_slots = jax.lax.scan(body, h, (params["blocks"], cache["slots"]))
+    h = L.norm_apply(params["final_norm"], h, cfg.norm)
+    logits = _unembed(params, cfg, h)
+    new_cache = dict(cache)
+    new_cache["slots"] = new_slots
+    return logits, new_cache

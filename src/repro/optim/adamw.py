@@ -1,0 +1,84 @@
+"""AdamW with decoupled weight decay, sharding-friendly (states mirror the
+param tree so GSPMD shards them identically)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.grad_clip:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        else:
+            gnorm = jnp.zeros(())
+            scale = 1.0
+
+        b1, b2 = self.b1, self.b2
+        lr = self._lr(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decay matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return newp.astype(p.dtype), m, v
+
+        # flatten to lists: the param tree contains structural tuples, so
+        # tuple-returning tree.map leaves cannot be disambiguated otherwise
+        g_l, treedef = jax.tree.flatten(grads)
+        m_l = treedef.flatten_up_to(state.mu)
+        v_l = treedef.flatten_up_to(state.nu)
+        p_l = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(g_l, m_l, v_l, p_l)]
+        newp = jax.tree.unflatten(treedef, [t[0] for t in out])
+        mu = jax.tree.unflatten(treedef, [t[1] for t in out])
+        nu = jax.tree.unflatten(treedef, [t[2] for t in out])
+        return newp, AdamWState(step=step, mu=mu, nu=nu), gnorm
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor_frac + (1 - floor_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

@@ -1,0 +1,4 @@
+from repro.pipeline_par.pipeline import (pipeline_apply, split_stages,
+                                         tick_schedules)
+
+__all__ = ["pipeline_apply", "split_stages", "tick_schedules"]

@@ -1,0 +1,122 @@
+"""Pipeline parallelism with CAD integration (paper §4.1, Figure 8).
+
+GPipe-style schedule expressed as a scan over logical *ticks* inside a
+shard_map over the "stage" mesh axis: at tick t, stage s processes
+microbatch (t - s); activations move stage-to-stage with ppermute.  All
+stages perform the same phase within a tick — the adjustment the paper
+makes so devices can switch roles between layer compute and attention
+serving.
+
+CAD-PP integration: core attention has no weights, so the CA-tasks of the
+microbatches live at *different stages* are indistinguishable; the
+scheduler balances them over the whole stage pool per tick.  During
+warm-up/drain ticks, idle stages carry zero local load and the scheduler
+naturally assigns them other stages' CA-tasks — the paper's "repurpose
+idle GPUs as attention servers" falls out of the plan machinery with no
+special casing.
+
+The backward pass is jax.grad through the tick scan: ppermute transposes
+to the reverse rotation, yielding the mirrored backward pipeline
+automatically.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import CommModel
+from repro.core.plan import CADConfig, empty_plan, plan_from_schedule
+from repro.core.scheduler import schedule
+
+
+def split_stages(block_params, n_stages: int):
+    """Stack-split the scan-over-groups params [G, ...] into
+    [n_stages, G/n_stages, ...] (leading dim sharded over "stage")."""
+    def split(x):
+        g = x.shape[0]
+        assert g % n_stages == 0, (g, n_stages)
+        return x.reshape((n_stages, g // n_stages) + x.shape[1:])
+    return jax.tree.map(split, block_params)
+
+
+def pipeline_apply(stage_params, h_mb, stage_fn: Callable, *,
+                   n_stages: int, axis: str = "stage",
+                   plans=None):
+    """Run the pipeline.  Must be called INSIDE shard_map over ``axis``.
+
+    stage_params: this stage's slice (leading stage dim already consumed)
+    h_mb   [n_micro, Bm, S, D] microbatch inputs (replicated; only stage 0
+           reads them)
+    stage_fn(params, h, mb_index, tick_plan) -> h
+    plans  optional per-tick CAD plan rows for THIS stage (leading dim
+           n_ticks), passed through to stage_fn
+
+    Returns [n_micro, Bm, S, D] — the last stage's outputs, replicated to
+    every stage via a masked psum."""
+    sid = jax.lax.axis_index(axis)
+    n_micro = h_mb.shape[0]
+    n_ticks = n_micro + n_stages - 1
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    h0 = jnp.zeros_like(h_mb[0])
+    outs0 = jnp.zeros_like(h_mb)
+
+    def tick(carry, t):
+        h_buf, outs = carry
+        m = t - sid
+        active = (m >= 0) & (m < n_micro)
+        m_c = jnp.clip(m, 0, n_micro - 1)
+        h_in = jnp.where(sid == 0, h_mb[m_c], h_buf)
+        tick_plan = None if plans is None else \
+            jax.tree.map(lambda a: a[t], plans)
+        h_out = stage_fn(h_in, m_c, tick_plan)
+        h_out = jnp.where(active, h_out, jnp.zeros_like(h_out))
+        # collect at the last stage
+        take = active & (sid == n_stages - 1)
+        outs = outs.at[m_c].set(
+            jnp.where(take, h_out, outs[m_c]))
+        # rotate activations to the next stage
+        h_next = jax.lax.ppermute(h_out, axis, perm)
+        return (h_next, outs), None
+
+    (_, outs), _ = jax.lax.scan(tick, (h0, outs0), jnp.arange(n_ticks))
+    # replicate the last stage's outputs
+    mask = (sid == n_stages - 1).astype(outs.dtype)
+    return jax.lax.psum(outs * mask, axis)
+
+
+def tick_schedules(segs_mb: np.ndarray, n_stages: int, cadcfg: CADConfig,
+                   comm: CommModel, tolerance: float = 0.1):
+    """Host-side: build one CAD plan per pipeline tick.
+
+    segs_mb [n_micro, tokens_mb]: each microbatch's packed segment ids.
+    At tick t, stage s serves microbatch (t - s); inactive stages carry a
+    zero chunk (warm-up/drain) and the scheduler offloads CA-tasks of the
+    busy stages onto them.  Returns stacked plan arrays with a leading
+    n_ticks dim (each plan's own leading dim is the stage/server dim) and
+    the per-tick schedule stats."""
+    n_micro, tokens = segs_mb.shape
+    n_ticks = n_micro + n_stages - 1
+    plans: List[Dict[str, np.ndarray]] = []
+    stats = []
+    for t in range(n_ticks):
+        segs_tick = np.zeros((n_stages, tokens), segs_mb.dtype)
+        for s in range(n_stages):
+            m = t - s
+            if 0 <= m < n_micro:
+                # offset segment ids so docs of different microbatches
+                # stay distinct
+                seg = segs_mb[m]
+                segs_tick[s] = np.where(seg > 0, seg + m * 100000, 0)
+        sch = schedule(segs_tick, blk=cadcfg.blk, n_servers=n_stages,
+                       comm=comm, caps=cadcfg.caps(), tolerance=tolerance)
+        plans.append(plan_from_schedule(cadcfg, sch))
+        stats.append({"tick": t, "moves": sch.n_moves,
+                      "comm_bytes": sch.comm_bytes,
+                      "loads": sch.loads.copy()})
+    stacked = {k: np.stack([p[k] for p in plans]) for k in plans[0]}
+    return stacked, stats

@@ -1,0 +1,53 @@
+"""Minimal batched serving engine: prefill (teacher-forced forward filling
+the KV cache) + batched greedy decode.  Used by the serving example and
+the decode-shape dry-runs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.train.step import make_serve_step
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 1024
+    max_new_tokens: int = 32
+
+
+class Engine:
+    def __init__(self, cfg, params, ctx, serve_cfg: ServeConfig,
+                 memory: Optional[jnp.ndarray] = None, batch_size: int = 1):
+        self.cfg, self.params, self.ctx = cfg, params, ctx
+        self.scfg = serve_cfg
+        self.memory = memory
+        self.batch_size = batch_size
+        self.cache = M.init_cache(params, cfg, batch_size, serve_cfg.max_seq,
+                                  memory=memory, ctx=ctx)
+        self._step = jax.jit(make_serve_step(cfg, ctx))
+
+    def prefill(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        """tokens [B, P]: feed prompt one position at a time through the
+        decode path (simple, exactly matches decode semantics)."""
+        b, p = tokens.shape
+        last = None
+        for t in range(p):
+            pos = jnp.full((b,), t, jnp.int32)
+            last, _, self.cache = self._step(self.params, self.cache,
+                                             tokens[:, t:t + 1], pos)
+        return last
+
+    def generate(self, prompt: jnp.ndarray) -> jnp.ndarray:
+        b, p = prompt.shape
+        nxt = self.prefill(prompt)
+        out = [nxt]
+        for i in range(self.scfg.max_new_tokens - 1):
+            pos = jnp.full((b,), p + i, jnp.int32)
+            nxt, _, self.cache = self._step(self.params, self.cache,
+                                            nxt[:, None], pos)
+            out.append(nxt)
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,21 @@
+"""Packed-LM loss: next-token cross-entropy within documents."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(logits, labels, segment_ids):
+    """logits [B,S,V] f32, labels [B,S] (-1 = ignore), segment_ids [B,S].
+
+    Loss counts position t iff label t is valid AND t is not padding.
+    The data pipeline pre-shifts labels so labels[t] = tokens[t+1] within
+    the same document and -1 at document tails/padding.
+    """
+    valid = (labels >= 0) & (segment_ids > 0)
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    n = jnp.maximum(valid.sum(), 1)
+    return nll.sum() / n, {"n_tokens": n, "nll_sum": nll.sum()}

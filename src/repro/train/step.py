@@ -1,0 +1,57 @@
+"""train_step / eval_step factories (the functions the launcher jits)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.train.loss import lm_loss
+
+
+def make_train_step(cfg, ctx, optimizer):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``batch`` may carry CAD plan arrays under 'plan' — they are
+    data, consumed by the dispatch layer via ctx."""
+
+    def loss_fn(params, batch):
+        if ctx.cad is not None and "plan" in batch:
+            local_ctx = ctx.cad.bind_plan(ctx, batch["plan"])
+        else:
+            local_ctx = ctx
+        logits, aux = M.forward(params, cfg, batch, local_ctx)
+        loss, stats = lm_loss(logits, batch["labels"], batch["segment_ids"])
+        total = loss
+        for v in aux.values():
+            total = total + v
+        return total, (loss, stats, aux)
+
+    def train_step(params, opt_state, batch):
+        (total, (loss, stats, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, gnorm = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, "total_loss": total, "grad_norm": gnorm,
+                   "n_tokens": stats["n_tokens"]}
+        metrics.update({k: v for k, v in aux.items()})
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg, ctx):
+    def eval_step(params, batch):
+        logits, _ = M.forward(params, cfg, batch, ctx)
+        loss, stats = lm_loss(logits, batch["labels"], batch["segment_ids"])
+        return {"loss": loss, "n_tokens": stats["n_tokens"]}
+    return eval_step
+
+
+def make_serve_step(cfg, ctx):
+    """decode_32k / long_500k shapes: one new token against a KV cache."""
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = M.decode_step(params, cfg, cache, tokens, pos, ctx)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+    return serve_step

@@ -1,0 +1,93 @@
+"""Trainer: the host loop that owns the data pipeline, the CAD scheduler
+(plan per step — the paper's "scheduler prefetches the upcoming batch"),
+jit compilation, checkpointing, and metrics."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.core.dispatch import CADContext
+from repro.core.plan import CADConfig
+from repro.data.pipeline import PipelineConfig, batches
+from repro.models import model as M
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.parallel import ParallelContext
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    peak_lr: float = 3e-4
+    warmup: int = 20
+    weight_decay: float = 0.1
+    log_every: int = 10
+    ckpt_every: int = 0
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+
+
+def train(cfg, pipe_cfg: PipelineConfig, train_cfg: TrainConfig,
+          ctx: Optional[ParallelContext] = None,
+          params=None) -> Dict[str, Any]:
+    """Train ``cfg`` (a ModelConfig); returns final params + history."""
+    ctx = ctx or ParallelContext(attn_impl="xla", remat=True)
+    key = jax.random.PRNGKey(train_cfg.seed)
+    if params is None:
+        params = M.init(key, cfg)
+    opt = AdamW(lr=cosine_schedule(train_cfg.peak_lr, train_cfg.warmup,
+                                   train_cfg.steps),
+                weight_decay=train_cfg.weight_decay)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, ctx, opt))
+
+    gen = batches(pipe_cfg, cfg.n_heads or 1, cfg.head_dim or 1,
+                  cfg.n_kv_heads or 1)
+    history = []
+    t0 = time.time()
+    for step in range(train_cfg.steps):
+        batch = next(gen)
+        stats = batch.pop("schedule_stats", None)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % train_cfg.log_every == 0 or step == train_cfg.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = time.time() - t0
+            if stats:
+                m.update({f"sched_{k}": v for k, v in stats.items()})
+            history.append(m)
+            print(f"step {step:5d} loss {m['loss']:.4f} "
+                  f"gnorm {m['grad_norm']:.3f} ({m['wall_s']:.1f}s)")
+        if train_cfg.ckpt_every and step and \
+                step % train_cfg.ckpt_every == 0:
+            ckpt.save(train_cfg.ckpt_dir, step, params, opt_state)
+    return {"params": params, "opt_state": opt_state, "history": history}
+
+
+def make_cad_context(cfg, pipe_cfg: PipelineConfig, *, kernel="xla",
+                     pingpong=False, mesh=None, rules=None,
+                     tolerance=0.1) -> ParallelContext:
+    """Build a ParallelContext with CAD enabled and the pipeline configured
+    to attach plans (single-host: global-sim pool; mesh: shard_map)."""
+    from repro.parallel import ShardingRules
+    n = pipe_cfg.n_ranks
+    rows_per_rank = pipe_cfg.global_batch // n
+    tokens_per_rank = rows_per_rank * pipe_cfg.seq_len
+    if pingpong:
+        tokens_per_rank //= 2
+    cadcfg = CADConfig.default(n, tokens_per_rank,
+                               max_doc_tokens=pipe_cfg.max_doc_len)
+    pipe_cfg.cad = cadcfg
+    pipe_cfg.tolerance = tolerance
+    pipe_cfg.pingpong = pingpong
+    jmax = max(1, pipe_cfg.max_doc_len // cadcfg.blk)
+    cad = CADContext(cfg=cadcfg, kernel=kernel, jmax=jmax,
+                     pingpong=pingpong)
+    return ParallelContext(mesh=mesh, rules=rules or ShardingRules(),
+                           attn_impl="cad", cad=cad, remat=True,
+                           pingpong=pingpong)

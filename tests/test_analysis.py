@@ -1,0 +1,30 @@
+"""Paper Appendix A reproduction: the max-shards-without-overhead bound."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.analysis import max_partition_size
+
+
+def test_paper_appendix_a_llama34b():
+    """Paper: Llama-34B config (h=8192, h_kv=2048, i=22016), 50 GB/s IB,
+    50% MFU of a 990 TFLOP/s H200 -> s ≈ 31."""
+    cfg = get_config("llama3-34b")
+    s = max_partition_size(cfg, bandwidth=50e9, peak_flops=990e12, mfu=0.5)
+    assert 25 <= s <= 38, s
+
+
+def test_bound_grows_with_model_size():
+    """Paper: 'for larger models, this upper bound even increases.'"""
+    s_small = max_partition_size(get_config("llama3-8b"))
+    s_large = max_partition_size(get_config("mistral-large-123b"))
+    assert s_large > s_small
+
+
+def test_bound_positive_on_tpu_for_all_attention_archs():
+    """On v5e ICI every attention arch can shard at least a little."""
+    from repro.configs import ASSIGNED_ARCHS
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        if not cfg.has_attention():
+            continue
+        assert max_partition_size(cfg) > 1, a

@@ -1,0 +1,200 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis property tests
+against the pure-jnp oracles (interpret mode on CPU)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.attention import ref_attention, xla_flash_attention
+from repro.kernels.packed_flash import kernel as K
+from repro.kernels.packed_flash import ops as O
+from repro.kernels.packed_flash import ref as R
+
+
+def make_packed(key, B, S, Hq, Hkv, dh, dtype, n_docs=3):
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, S, Hq, dh)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, dh)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, dh)).astype(dtype)
+    # random doc boundaries per row
+    rng = np.random.default_rng(int(ks[3][0]))
+    seg = np.zeros((B, S), np.int32)
+    pos = np.zeros((B, S), np.int32)
+    for b in range(B):
+        cuts = np.sort(rng.choice(np.arange(1, S), size=n_docs - 1,
+                                  replace=False))
+        bounds = np.concatenate([[0], cuts, [S]])
+        for d in range(n_docs):
+            lo, hi = bounds[d], bounds[d + 1]
+            seg[b, lo:hi] = d + 1
+            pos[b, lo:hi] = np.arange(hi - lo)
+    return q, k, v, jnp.asarray(seg), jnp.asarray(pos)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,Hq,Hkv,dh,blk", [
+    (256, 4, 2, 64, 128),
+    (256, 2, 2, 128, 128),
+    (512, 8, 1, 64, 128),   # MQA
+    (384, 6, 2, 128, 128),  # non-power-of-two seq (3 blocks)
+    (256, 4, 4, 256, 64),   # gemma-style head_dim, small block
+])
+def test_flash_fwd_sweep(dtype, S, Hq, Hkv, dh, blk):
+    q, k, v, seg, pos = make_packed(jax.random.PRNGKey(0), 2, S, Hq, Hkv,
+                                    dh, dtype)
+    out = K.flash_fwd(q, k, v, seg, pos, seg, pos, blk_q=blk, blk_k=blk)
+    exp = ref_attention(q, k, v, seg, pos, seg, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (True, 64, 0.0), (True, 0, 50.0), (False, 0, 0.0),
+    (True, 128, 30.0)])
+def test_flash_fwd_masks(causal, window, softcap):
+    q, k, v, seg, pos = make_packed(jax.random.PRNGKey(1), 2, 256, 4, 2, 64,
+                                    jnp.float32)
+    out = K.flash_fwd(q, k, v, seg, pos, seg, pos, causal=causal,
+                      window=window, softcap=softcap)
+    exp = ref_attention(q, k, v, seg, pos, seg, pos, causal=causal,
+                        window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5)
+
+
+def test_xla_flash_matches_ref():
+    """The dry-run path (xla impl) agrees with the oracle too."""
+    q, k, v, seg, pos = make_packed(jax.random.PRNGKey(2), 2, 320, 4, 2, 64,
+                                    jnp.float32)
+    for window, softcap in [(0, 0.0), (96, 50.0)]:
+        out = xla_flash_attention(q, k, v, seg, pos, seg, pos, window=window,
+                                  softcap=softcap, q_block=128, kv_block=64)
+        exp = ref_attention(q, k, v, seg, pos, seg, pos, window=window,
+                            softcap=softcap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=2e-5)
+
+
+def test_flash_grads_match_ref():
+    q, k, v, seg, pos = make_packed(jax.random.PRNGKey(3), 1, 256, 4, 2, 64,
+                                    jnp.float32)
+
+    def loss_k(q_, k_, v_):
+        return jnp.sum(O.packed_flash_attention(q_, k_, v_, seg, pos, seg,
+                                                pos) ** 2)
+
+    def loss_r(q_, k_, v_):
+        return jnp.sum(ref_attention(q_, k_, v_, seg, pos, seg, pos) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-4)
+
+
+# ------------------------------------------------------------- CA server
+def make_server_batch(key, T, blk, Hq, Hkv, dh, N, dtype=jnp.float32,
+                      seed=0):
+    ks = jax.random.split(key, 4)
+    rng = np.random.default_rng(seed)
+    q = jax.random.normal(ks[0], (T, blk, Hq, dh)).astype(dtype)
+    kb = jax.random.normal(ks[1], (N, blk, Hkv, dh)).astype(dtype)
+    vb = jax.random.normal(ks[2], (N, blk, Hkv, dh)).astype(dtype)
+    kv_start = np.zeros(T, np.int32)
+    kv_len = np.zeros(T, np.int32)
+    q_pos = np.zeros((T, blk), np.int32)
+    kv_pos = np.zeros((N, blk), np.int32)
+    for n in range(N):
+        kv_pos[n] = np.arange(blk)  # per-block positions filled per task
+    for t in range(T):
+        ln = int(rng.integers(1, min(N, 6) + 1))
+        st = int(rng.integers(0, N - ln + 1))
+        kv_start[t], kv_len[t] = st, ln
+        # q block = last block of prefix; positions continue the prefix
+        q_pos[t] = np.arange((ln - 1) * blk, ln * blk)
+        for jj in range(ln):
+            kv_pos[st + jj] = np.arange(jj * blk, (jj + 1) * blk)
+    if T > 1:  # make last task padding
+        kv_len[-1] = 0
+    return (q, kb, vb, jnp.asarray(kv_start), jnp.asarray(kv_len),
+            jnp.asarray(q_pos), jnp.asarray(kv_pos))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,blk,Hq,Hkv,dh,N", [
+    (4, 128, 4, 2, 64, 8),
+    (6, 128, 2, 1, 128, 6),
+    (3, 64, 8, 8, 64, 5),
+])
+def test_ca_server_sweep(dtype, T, blk, Hq, Hkv, dh, N):
+    args = make_server_batch(jax.random.PRNGKey(4), T, blk, Hq, Hkv, dh, N,
+                             dtype)
+    out = K.ca_server_fwd(*args)
+    exp = R.ref_ca_server_attention(*args)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_ca_server_grads():
+    q, kb, vb, st, ln, qp, kp = make_server_batch(
+        jax.random.PRNGKey(5), 4, 64, 4, 2, 64, 6)
+
+    def loss_k(q_, k_, v_):
+        return jnp.sum(O.ca_server_attention(q_, k_, v_, st, ln, qp,
+                                             kp) ** 2)
+
+    def loss_r(q_, k_, v_):
+        return jnp.sum(R.ref_ca_server_attention(q_, k_, v_, st, ln, qp,
+                                                 kp) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, kb, vb)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, kb, vb)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-4)
+
+
+# -------------------------------------------------------------- property
+@settings(max_examples=15, deadline=None)
+@given(
+    s_blocks=st.integers(1, 4),
+    hq=st.sampled_from([1, 2, 4]),
+    rep=st.sampled_from([1, 2]),
+    dh=st.sampled_from([64, 128]),
+    n_docs=st.integers(1, 4),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_flash_property(s_blocks, hq, rep, dh, n_docs, seed):
+    """Kernel == oracle for random shapes, doc layouts, GQA factors."""
+    if hq % rep:
+        rep = 1
+    S = 128 * s_blocks
+    n_docs = min(n_docs, S - 1)
+    q, k, v, seg, pos = make_packed(jax.random.PRNGKey(seed), 1, S, hq,
+                                    hq // rep, dh, jnp.float32,
+                                    n_docs=max(n_docs, 1))
+    out = K.flash_fwd(q, k, v, seg, pos, seg, pos)
+    exp = ref_attention(q, k, v, seg, pos, seg, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.integers(2, 6),
+    n=st.integers(2, 8),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_ca_server_property(t, n, seed):
+    """Fused CA-task batches match the oracle for arbitrary task layouts —
+    the paper's composability claim (§3.3) as an executable property."""
+    args = make_server_batch(jax.random.PRNGKey(seed), t, 64, 4, 2, 64, n,
+                             seed=seed)
+    out = K.ca_server_fwd(*args)
+    exp = R.ref_ca_server_attention(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=3e-5)

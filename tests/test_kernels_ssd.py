@@ -1,0 +1,86 @@
+"""SSD intra-chunk Pallas kernel: sweeps + equivalence with the model's
+chunked-scan reference path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ssd import kernel as K
+from repro.kernels.ssd import ref as R
+
+
+def make(key, Bt, Kc, c, H, N, P, resets=True, seed=0):
+    ks = jax.random.split(key, 5)
+    C_ = jax.random.normal(ks[0], (Bt, Kc, c, H, N))
+    B_ = jax.random.normal(ks[1], (Bt, Kc, c, H, N))
+    x = jax.random.normal(ks[2], (Bt, Kc, c, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (Bt, Kc, c, H)))
+    la = -jax.nn.softplus(jax.random.normal(ks[4], (Bt, Kc, c, H)))
+    csum = jnp.cumsum(la, axis=2)
+    rng = np.random.default_rng(seed)
+    if resets:
+        nr = np.sort(rng.integers(0, 3, (Bt, Kc, c)), axis=-1)
+    else:
+        nr = np.zeros((Bt, Kc, c), np.int64)
+    return C_, B_, x, dt, csum, jnp.asarray(nr, jnp.int32)
+
+
+def check(args, atol=1e-4):
+    C_, B_, x, dt, csum, nr = args
+    y, stt = K.ssd_chunk(*args)
+    Bt, Kc, c, H, _ = C_.shape
+    for b in range(Bt):
+        for k in range(Kc):
+            for h in range(H):
+                ey, es = R.ref_ssd_chunk(C_[b, k, :, h], B_[b, k, :, h],
+                                         x[b, k, :, h], dt[b, k, :, h],
+                                         csum[b, k, :, h], nr[b, k])
+                np.testing.assert_allclose(np.asarray(y[b, k, :, h]),
+                                           np.asarray(ey), atol=atol)
+                np.testing.assert_allclose(np.asarray(stt[b, k, h]),
+                                           np.asarray(es), atol=atol)
+
+
+@pytest.mark.parametrize("Bt,Kc,c,H,N,P", [
+    (2, 3, 128, 2, 64, 32),
+    (1, 2, 256, 1, 128, 64),
+    (2, 2, 64, 4, 32, 64),
+])
+def test_ssd_chunk_sweep(Bt, Kc, c, H, N, P):
+    check(make(jax.random.PRNGKey(0), Bt, Kc, c, H, N, P))
+
+
+@settings(max_examples=8, deadline=None)
+@given(c=st.sampled_from([64, 128]), h=st.integers(1, 3),
+       seed=st.integers(0, 2 ** 16))
+def test_ssd_chunk_property(c, h, seed):
+    check(make(jax.random.PRNGKey(seed), 1, 2, c, h, 32, 32, seed=seed))
+
+
+def test_matches_model_chunked_scan():
+    """Kernel intra-chunk outputs equal the model's pure-jnp
+    `_ssd_chunked` path restricted to one chunk (full equivalence of the
+    quadratic part)."""
+    from repro.models.layers import _ssd_chunked
+    key = jax.random.PRNGKey(7)
+    B, S, H, P, G, N = 1, 128, 2, 32, 1, 32   # one chunk
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    log_a = -jax.nn.softplus(jax.random.normal(ks[2], (B, S, H)))
+    B_ = jax.random.normal(ks[3], (B, S, G, N))
+    C_ = jax.random.normal(ks[4], (B, S, G, N))
+    first = jnp.zeros((B, S), bool).at[:, 0].set(True).at[:, 50].set(True)
+    y_model = _ssd_chunked(x, dt, log_a, B_, C_, S, first)
+
+    la = jnp.where(first[..., None], 0.0, log_a)
+    csum = jnp.cumsum(la, axis=1)
+    nr = jnp.cumsum(first.astype(jnp.int32), axis=1)
+    rep = H // G
+    Cr = jnp.repeat(C_, rep, axis=2)
+    Br = jnp.repeat(B_, rep, axis=2)
+    y_k, _ = K.ssd_chunk(Cr[:, None], Br[:, None], x[:, None],
+                         dt[:, None], csum[:, None], nr[:, None])
+    np.testing.assert_allclose(np.asarray(y_k[:, 0]), np.asarray(y_model),
+                               atol=2e-4)
