@@ -18,9 +18,11 @@ scheduler:
 """
 import numpy as np
 
+from repro.cad import get_planner
 from repro.configs import get_config
 from repro.core.cost_model import (CommModel, CostModel, ICI_BW,
                                    PEAK_FLOPS_BF16, linear_flops_per_token)
+from repro.core.plan import CADConfig
 from repro.data.distributions import sample_lengths
 from repro.data.packing import BLOCK, pack_documents
 from benchmarks.e2e_sim import MFU_LINEAR, _chunks_to_segs, \
@@ -28,25 +30,32 @@ from benchmarks.e2e_sim import MFU_LINEAR, _chunks_to_segs, \
 
 
 def run(arch="llama3-8b", n_chips=16, tokens_total=16 * 262144,
-        max_doc=262144, n_batches=4, seed=0):
+        max_doc=262144, n_batches=4, seed=0, plan_policy="identity"):
     cfg = get_config(arch)
     cm = CostModel.analytic(cfg.n_heads, cfg.head_dim)
     rng = np.random.default_rng(seed)
     lin_tok = linear_flops_per_token(cfg) / (MFU_LINEAR * PEAK_FLOPS_BF16)
     rows = []
-    # sample CA totals once per batch at a reference packing
+    # CA totals per batch at a reference packing; the assignment comes
+    # from the plan-policy registry (identity = compute-where-packed,
+    # matching the in-place reference)
+    planner = get_planner(plan_policy)
+    comm = CommModel(cfg.n_heads, cfg.head_dim, cfg.n_kv_heads)
+    tpr = tokens_total // n_chips
+    nb = tpr // BLOCK
+    cadcfg = CADConfig(n_servers=n_chips, blk=BLOCK, nb=nb, cq=nb,
+                       ckv=2 * nb, nkv=4 * nb)
     ca_totals = []
     for _ in range(n_batches):
         lens = []
         while sum(lens) < tokens_total * 1.2:
             lens.extend(sample_lengths("pretrain", rng, 64,
                                        max_doc).tolist())
-        tpr = tokens_total // n_chips
         chunks = pack_documents(lens, tpr, n_chips, rng=rng)
         segs = _chunks_to_segs(chunks, tpr)
-        home = np.arange(n_chips * (tpr // BLOCK)) // (tpr // BLOCK)
+        res = planner(cadcfg, segs, comm=comm, build_plan=False)
         ca_totals.append(
-            _per_rank_ca_time(cm, segs, home, BLOCK, n_chips).sum())
+            _per_rank_ca_time(cm, segs, res.assign, BLOCK, n_chips).sum())
     ca_total = float(np.mean(ca_totals))
 
     for k in (0, 1, 2, 4, 8):

@@ -15,16 +15,18 @@ Iteration time model (per rank r):
   comm       = bytes moved / ICI_BW   (CAD: overlapped -> max(., .))
   T_iter     = max_r (linear(r) + ca(r)) (+ comm if not hidden)
 
-The CAD rows run the actual repro.core scheduler — this benchmark
-exercises the real system component, not a re-derivation.
+The CAD rows run the real plan policies through the repro.cad registry
+("balanced" = the paper's greedy scheduler) — this benchmark exercises
+the actual system component, not a re-derivation.
 """
 import numpy as np
 
+from repro.cad import get_planner
 from repro.configs import get_config
 from repro.core.cost_model import (CommModel, CostModel, ICI_BW,
                                    PEAK_FLOPS_BF16, ca_flops,
                                    linear_flops_per_token)
-from repro.core.scheduler import Caps, schedule
+from repro.core.plan import CADConfig
 from repro.data.distributions import sample_lengths
 from repro.data.packing import BLOCK, pack_documents
 
@@ -57,7 +59,8 @@ def _per_rank_ca_time(cm, segs, assign, blk, n):
 
 
 def simulate(arch, max_doc, n_ranks, tokens_per_rank, n_batches=8,
-             dist="pretrain", tolerance=0.1, seed=0):
+             dist="pretrain", tolerance=0.1, seed=0,
+             plan_policy="balanced"):
     cfg = get_config(arch)
     cm = CostModel.analytic(cfg.n_heads, cfg.head_dim,
                             peak_flops=PEAK_FLOPS_BF16)
@@ -109,13 +112,17 @@ def simulate(arch, max_doc, n_ranks, tokens_per_rank, n_batches=8,
             + kv_bytes / n_ranks / ICI_BW
         res["wlb"].append(min(t_var, lin + t_cp))
 
-        # ---- DistCA: real scheduler, overlap per ping-pong.  The plan's
-        # q/kv transfers recur on EVERY layer, fwd + bwd (~3x fwd volume).
-        sch = schedule(segs, blk=blk, n_servers=n_ranks, comm=comm,
-                       caps=Caps(cq=nb, ckv=2 * nb, nkv=4 * nb),
-                       tolerance=tolerance)
-        ca_cad = _per_rank_ca_time(cm, segs, sch.assign, blk, n_ranks)
-        t_comm = sch.comm_bytes * cfg.n_layers * 3 / n_ranks / ICI_BW
+        # ---- DistCA: the registered plan policy (default: the real
+        # greedy scheduler), overlap per ping-pong.  The plan's q/kv
+        # transfers recur on EVERY layer, fwd + bwd (~3x fwd volume).
+        cadcfg = CADConfig(n_servers=n_ranks, blk=blk, nb=nb, cq=nb,
+                           ckv=2 * nb, nkv=4 * nb)
+        pres = get_planner(plan_policy)(cadcfg, segs, comm=comm,
+                                        tolerance=tolerance,
+                                        build_plan=False)
+        ca_cad = _per_rank_ca_time(cm, segs, pres.assign, blk, n_ranks)
+        t_comm = pres.stats["comm_bytes"] * cfg.n_layers * 3 \
+            / n_ranks / ICI_BW
         compute = float((lin + ca_cad).max())
         res["distca"].append(max(compute, t_comm))       # ping-pong hides
         res["distca_noover"].append(compute + t_comm)    # single stream

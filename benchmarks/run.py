@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py format).
   fig11_overlap         Fig. 11   — ping-pong communication hiding
   fig12_tolerance       Fig. 12   — tolerance factor sweep (real scheduler)
   sched_microbench      §4.2      — scheduler wall-time per batch
+  prefetch_microbench   §4.2      — async plan prefetch vs inline planning
 
 Run: PYTHONPATH=src python -m benchmarks.run [--fast]
 """
@@ -50,6 +51,47 @@ def sched_microbench(fast=False):
               f"blocks={n_ranks*nb};moves={sch.n_moves}")
 
 
+def prefetch_microbench(fast=False):
+    """CADSession async plan prefetch: step-loop wall time with the
+    scheduler planning batch i+1 on a background thread while "the
+    device" (a sleep stand-in; XLA releases the GIL the same way)
+    computes batch i, vs planning inline every step."""
+    from repro.cad import CADSession
+    from repro.configs import get_config
+    from repro.data.pipeline import PipelineConfig, raw_batches
+
+    cfg = get_config("llama3-8b")
+    n_ranks, seq = 8, 16384
+    steps = 4 if fast else 10
+    pipe = PipelineConfig(distribution="pretrain", max_doc_len=seq,
+                          seq_len=seq, global_batch=n_ranks,
+                          n_ranks=n_ranks, seed=0)
+    session = CADSession.for_pipeline(cfg, pipe)
+    # calibrate the simulated device step to one planning call, the
+    # regime where hiding the scheduler matters most
+    gen0 = raw_batches(pipe)
+    b0 = next(gen0)
+    t0 = time.perf_counter()
+    session.plan_batch(b0)
+    compute_s = max(time.perf_counter() - t0, 0.02)
+
+    walls = {}
+    for mode, depth in (("sync", 0), ("async", 2)):
+        gen = session.attach_plans(raw_batches(pipe), prefetch=depth)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            next(gen)
+            time.sleep(compute_s)    # device step stand-in
+        walls[mode] = time.perf_counter() - t0
+        gen.close()
+        print(f"prefetch_microbench,{walls[mode]/steps*1e6:.1f},"
+              f"mode={mode};steps={steps};ranks={n_ranks};"
+              f"compute_ms={compute_s*1e3:.1f}")
+    print(f"prefetch_microbench,{walls['async']/steps*1e6:.1f},"
+          f"mode=speedup;sync_over_async="
+          f"{walls['sync']/max(walls['async'], 1e-9):.2f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
@@ -69,6 +111,7 @@ def main() -> None:
         "fig11": lambda: overlap.main(fast=args.fast),
         "fig12": lambda: tolerance_sweep.main(fast=args.fast),
         "sched": lambda: sched_microbench(fast=args.fast),
+        "prefetch": lambda: prefetch_microbench(fast=args.fast),
         "dedicated": dedicated_pool.main,
     }
     failed = 0

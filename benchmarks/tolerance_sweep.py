@@ -1,11 +1,14 @@
 """Paper Figure 12 analogue: the scheduler tolerance factor trades CA load
-balance against communication volume.  Runs the REAL greedy scheduler."""
+balance against communication volume.  Runs the REAL greedy scheduler
+through the repro.cad plan-policy registry."""
 import numpy as np
 
+from repro.cad import get_planner
 from repro.configs import get_config
 from repro.core.cost_model import CommModel, CostModel, ICI_BW, \
     PEAK_FLOPS_BF16, linear_flops_per_token
-from repro.core.scheduler import Caps, imbalance, schedule
+from repro.core.plan import CADConfig
+from repro.core.scheduler import imbalance
 from repro.data.distributions import sample_lengths
 from repro.data.packing import BLOCK, pack_documents
 from benchmarks.e2e_sim import MFU_LINEAR, _chunks_to_segs, \
@@ -13,7 +16,7 @@ from benchmarks.e2e_sim import MFU_LINEAR, _chunks_to_segs, \
 
 
 def run(arch="llama3-8b", n_ranks=8, tokens_per_rank=131072,
-        max_doc=131072, n_batches=4, seed=0):
+        max_doc=131072, n_batches=4, seed=0, plan_policy="balanced"):
     cfg = get_config(arch)
     cm = CostModel.analytic(cfg.n_heads, cfg.head_dim)
     comm = CommModel(cfg.n_heads, cfg.head_dim, cfg.n_kv_heads)
@@ -31,18 +34,20 @@ def run(arch="llama3-8b", n_ranks=8, tokens_per_rank=131072,
         chunks = pack_documents(lens, tokens_per_rank, n_ranks, rng=rng)
         batches.append(_chunks_to_segs(chunks, tokens_per_rank))
 
+    cadcfg = CADConfig(n_servers=n_ranks, blk=blk, nb=nb, cq=nb,
+                       ckv=2 * nb, nkv=4 * nb)
+    planner = get_planner(plan_policy)
     rows = []
     for tol in (0.0, 0.05, 0.10, 0.15, 0.20, 0.30, 0.50):
         imb, comm_gb, lat = [], [], []
         for segs in batches:
-            sch = schedule(segs, blk=blk, n_servers=n_ranks, comm=comm,
-                           caps=Caps(cq=nb, ckv=2 * nb, nkv=4 * nb),
-                           tolerance=tol)
-            ca = _per_rank_ca_time(cm, segs, sch.assign, blk, n_ranks)
-            t_comm = sch.comm_bytes / n_ranks / ICI_BW
+            res = planner(cadcfg, segs, comm=comm, tolerance=tol,
+                          build_plan=False)
+            ca = _per_rank_ca_time(cm, segs, res.assign, blk, n_ranks)
+            t_comm = res.stats["comm_bytes"] / n_ranks / ICI_BW
             lat.append(max(lin + ca.max(), t_comm))
-            imb.append(imbalance(sch.loads))
-            comm_gb.append(sch.comm_bytes / 2 ** 30)
+            imb.append(imbalance(res.loads))
+            comm_gb.append(res.stats["comm_bytes"] / 2 ** 30)
         rows.append({"tolerance": tol,
                      "imbalance": float(np.mean(imb)),
                      "comm_gib": float(np.mean(comm_gb)),

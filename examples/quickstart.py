@@ -1,8 +1,9 @@
-"""Quickstart: core attention disaggregation in ~60 lines.
+"""Quickstart: core attention disaggregation in ~50 lines.
 
-Builds a packed two-rank batch, schedules CA-tasks with the greedy
-balancer, dispatches them through the CAD runtime (global simulation of
-the attention-server pool on CPU), and checks the result equals monolithic
+Builds a packed two-rank batch, plans CA-tasks through a ``CADSession``
+(the attention-service entry point — plan policies are selected by
+name), dispatches them through the CAD runtime (global simulation of the
+attention-server pool on CPU), and checks the result equals monolithic
 attention.
 
 Run: PYTHONPATH=src python examples/quickstart.py
@@ -11,10 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (CADConfig, CADContext, CommModel, cad_attention,
-                        imbalance, plan_from_schedule, ref_attention,
-                        schedule)
-from repro.parallel import ParallelContext
+from repro.cad import CADConfig, CADSession
+from repro.core import cad_attention, ref_attention
+from repro.core.cost_model import CommModel
 
 # --- a packed batch: 2 ranks x 1024 tokens, documents of 1-4 blocks ----
 BLK, D, S = 128, 2, 1024
@@ -31,18 +31,23 @@ for r in range(D):
         sid += 1
         t += dl
 
-# --- schedule: balance CA FLOPs across the 2 attention servers ---------
+# --- the attention service: pool geometry + plan policy by name --------
 nb = S // BLK
-cfg = CADConfig(n_servers=D, blk=BLK, nb=nb, cq=nb, ckv=2 * nb, nkv=4 * nb)
-comm = CommModel(n_heads=4, head_dim=64, n_kv_heads=2)
-sched = schedule(segs, blk=BLK, n_servers=D, comm=comm, caps=cfg.caps(),
-                 tolerance=0.05)
-print(f"scheduler: {sched.n_moves} migrations, "
-      f"imbalance {imbalance(sched.loads):.3f}, "
-      f"comm {sched.comm_bytes/2**20:.1f} MiB")
+session = CADSession(
+    cfg=CADConfig(n_servers=D, blk=BLK, nb=nb, cq=nb, ckv=2 * nb,
+                  nkv=4 * nb),
+    kernel="xla", plan_policy="balanced", tolerance=0.05, jmax=nb,
+    comm=CommModel(n_heads=4, head_dim=64, n_kv_heads=2))
 
-# --- dispatch through the CAD runtime ----------------------------------
-plan = jax.tree.map(jnp.asarray, plan_from_schedule(cfg, sched))
+plan, stats = session.plan(segs)          # one step's typed StepPlan
+print(f"planner[{session.plan_policy}]: {stats['n_moves']} migrations, "
+      f"{stats['comm_bytes']/2**20:.2f} MiB moved, "
+      f"straggler x{stats['load_max_over_mean']:.3f}")
+
+# --- dispatch through the CAD runtime, compare to monolithic CA --------
+ctx = session.context()
+ctx = ctx.cad.bind_plan(ctx, plan)        # bind this step's plan
+
 key = jax.random.PRNGKey(0)
 kq, kk, kv = jax.random.split(key, 3)
 q = jax.random.normal(kq, (D, S, 4, 64))
@@ -50,8 +55,6 @@ k = jax.random.normal(kk, (D, S, 2, 64))
 v = jax.random.normal(kv, (D, S, 2, 64))
 seg, pos = jnp.asarray(segs), jnp.asarray(poss)
 
-cad = CADContext(cfg=cfg, plan=plan, kernel="xla", jmax=nb)
-ctx = ParallelContext(mesh=None, attn_impl="cad", cad=cad)
 out_cad = cad_attention(q, k, v, seg, pos, seg, pos, ctx=ctx)
 out_ref = ref_attention(q, k, v, seg, pos, seg, pos)
 err = float(jnp.max(jnp.abs(out_cad - out_ref)))

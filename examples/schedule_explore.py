@@ -2,12 +2,16 @@
 
 Samples packed batches from the Pretrain/ProLong distributions, runs the
 scheduler at several tolerance factors, and prints per-server loads,
-migrations, and comm volume — an ASCII version of paper Fig. 12.
+migrations, and comm volume — an ASCII version of paper Fig. 12.  Also
+compares the registered plan policies (identity / per_doc_cp /
+balanced) head-to-head through the repro.cad registry.
 
 Run: PYTHONPATH=src python examples/schedule_explore.py
 """
 import numpy as np
 
+from repro.cad import CADConfig, PlanCapacityError, available_policies, \
+    get_planner
 from repro.configs import get_config
 from repro.core import CommModel, Caps, imbalance, schedule
 from repro.data.distributions import sample_lengths
@@ -40,12 +44,19 @@ for dist in ("pretrain", "prolong"):
         print(f"tol={tol:4.2f}  imb={imbalance(sch.loads):5.3f}  "
               f"moves={sch.n_moves:3d}  comm={sch.comm_bytes/2**20:7.1f}MiB"
               f"  loads/mean: {bars}")
-    # home (no scheduling) baseline
-    from repro.core.scheduler import layout_from_segments
-    docs, doc_of, bi_of = layout_from_segments(segs, BLOCK, N_RANKS)
-    cost = np.where(doc_of >= 0, (bi_of + 1) * float(BLOCK * BLOCK), 0.0)
-    home = np.arange(N_RANKS * nb) // nb
-    loads0 = np.array([cost[home == s].sum() for s in range(N_RANKS)])
-    print(f"home (no CAD): imb={imbalance(loads0):5.3f}  "
-          f"loads/mean: "
-          + " ".join(f"{x:4.2f}" for x in loads0 / loads0.mean()))
+    # plan policies head-to-head (the registry the pipeline/benchmarks
+    # select from); identity == the no-CAD home baseline
+    cadcfg = CADConfig(n_servers=N_RANKS, blk=BLOCK, nb=nb, cq=nb,
+                      ckv=2 * nb, nkv=4 * nb)
+    for pol in available_policies():
+        try:
+            # build_plan=True on purpose: the capacity feasibility check
+            # (PlanCapacityError below) is part of the comparison
+            res = get_planner(pol)(cadcfg, segs, comm=comm, tolerance=0.1)
+        except PlanCapacityError as e:
+            print(f"policy {pol:10s}  infeasible at this pool geometry: "
+                  f"{e.capacity} needs {e.needed} > {e.available} slots")
+            continue
+        print(f"policy {pol:10s}  imb={imbalance(res.loads):5.3f}  "
+              f"moves={res.stats['n_moves']:4d}  "
+              f"comm={res.stats['comm_bytes']/2**20:7.1f}MiB")

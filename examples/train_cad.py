@@ -9,9 +9,10 @@ Tiny: PYTHONPATH=src python examples/train_cad.py --steps 20 --tiny
 import argparse
 import dataclasses
 
+from repro.cad import CADSession, available_policies
 from repro.configs import ModelConfig, get_config, register
 from repro.data.pipeline import PipelineConfig
-from repro.train.trainer import TrainConfig, make_cad_context, train
+from repro.train.trainer import TrainConfig, train
 
 # ~100M params: 12L, d=768, llama-style (GPT-2-small scale)
 SMOL_100M = ModelConfig(
@@ -31,6 +32,8 @@ def main():
     ap.add_argument("--ranks", type=int, default=2)
     ap.add_argument("--no-cad", action="store_true")
     ap.add_argument("--pingpong", action="store_true")
+    ap.add_argument("--plan-policy", default="balanced",
+                    choices=list(available_policies()))
     args = ap.parse_args()
 
     cfg = SMOL_100M.reduced() if args.tiny else SMOL_100M
@@ -39,16 +42,20 @@ def main():
                           max_doc_len=args.seq, seq_len=args.seq,
                           global_batch=args.batch, n_ranks=args.ranks,
                           vocab_size=cfg.vocab_size, seed=0)
+    ctx = session = None
     if args.no_cad:
         from repro.parallel import ParallelContext
         ctx = ParallelContext(attn_impl="xla", remat=True)
     else:
-        ctx = make_cad_context(cfg, pipe, kernel="xla",
-                               pingpong=args.pingpong)
+        # one object owns pool geometry, kernel, ping-pong, tolerance and
+        # plan policy; plans are prefetched one step ahead of the device
+        session = CADSession.for_pipeline(cfg, pipe, kernel="xla",
+                                          pingpong=args.pingpong,
+                                          plan_policy=args.plan_policy)
     res = train(cfg, pipe, TrainConfig(steps=args.steps, peak_lr=3e-4,
                                        warmup=min(50, args.steps // 5),
                                        log_every=max(1, args.steps // 20)),
-                ctx=ctx)
+                ctx=ctx, session=session)
     h = res["history"]
     print(f"loss: {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} over "
           f"{args.steps} steps")

@@ -1,0 +1,29 @@
+"""Core attention disaggregation as a service (paper §4; DistCA).
+
+This package is the single entry point for CAD:
+
+  CADSession          owns pool config, kernel, ping-pong, tolerance,
+                      plan policy; builds contexts and plans
+  StepPlan            one step's dispatch plan, a typed JAX pytree
+  PingPongPlan        the two nano-batch plans of a ping-pong step
+  register_planner /  string-keyed plan-policy registry
+  get_planner         ("identity" | "per_doc_cp" | "balanced")
+  PlanPrefetcher      async host-side plan prefetch (bounded queue)
+  PlanCapacityError   static-capacity overflow diagnostics
+
+Legacy entry points (``make_cad_context``, raw dict plans through
+``CADContext``) keep working for one release; new code should construct
+a :class:`CADSession` instead.
+"""
+from repro.cad.planner import (PlanResult, Planner, available_policies,
+                               get_planner, register_planner)
+from repro.cad.prefetch import PlanPrefetcher
+from repro.cad.session import CADSession
+from repro.core.plan import (CADConfig, PingPongPlan, PlanCapacityError,
+                             StepPlan)
+
+__all__ = [
+    "CADSession", "StepPlan", "PingPongPlan", "CADConfig",
+    "PlanCapacityError", "Planner", "PlanResult", "register_planner",
+    "get_planner", "available_policies", "PlanPrefetcher",
+]

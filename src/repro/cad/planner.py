@@ -1,0 +1,170 @@
+"""Pluggable plan policies for the attention service.
+
+A *planner* maps a packed batch's document layout to a
+:class:`~repro.core.plan.StepPlan` plus scheduling statistics.  Policies
+are registered by name so every plan-building site — the data pipeline,
+benchmarks, launch dry-runs, examples — selects behavior with a single
+``plan_policy="..."`` string:
+
+  identity    every block served at home (no disaggregation; the
+              fixed-packing baseline expressed as a CAD plan)
+  per_doc_cp  head-tail per-document context parallelism (paper §2.2,
+              DISTFLASHATTN-style) as a registered policy
+  balanced    the communication-aware greedy scheduler (paper §4.2)
+
+All planners build their dispatch arrays through the same
+``plan_from_assignment``, so two policies that produce the same
+assignment produce bit-identical plans.
+
+``comm`` calibrates comm-volume accounting (and, for ``balanced``, the
+scheduler's bytes-per-FLOP scoring) to the model's head geometry; with
+``comm=None`` reported ``comm_bytes`` is 0 and ``balanced`` falls back
+to a unit-size byte model — pass the real ``CommModel`` whenever stats
+are compared across call sites.  ``build_plan=False`` skips the
+dispatch-array construction (and its capacity checks) for
+analysis-only callers that never dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import CommModel
+from repro.core.plan import CADConfig, StepPlan, head_tail_assignment, \
+    identity_assignment, plan_from_assignment
+from repro.core.scheduler import block_costs, layout_from_segments, \
+    schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanResult:
+    """A planner's output: the typed plan, the raw per-block assignment
+    (for analysis/benchmarks), per-server loads, and summary stats.
+    ``plan`` is None when the planner ran with ``build_plan=False``
+    (analysis-only callers that never dispatch)."""
+    plan: Optional[StepPlan]
+    assign: np.ndarray            # [G] server per global q-block
+    loads: np.ndarray             # [S] per-server cost (relative FLOPs)
+    stats: Dict[str, float]       # comm_bytes, n_moves, load_max_over_mean
+
+
+# planner signature:
+#   (cfg, segment_ids, *, comm, tolerance, build_plan) -> PlanResult
+Planner = Callable[..., PlanResult]
+
+_PLANNERS: Dict[str, Planner] = {}
+
+
+def register_planner(name: str) -> Callable[[Planner], Planner]:
+    """Decorator: register ``fn`` under ``name`` in the policy registry."""
+    def deco(fn: Planner) -> Planner:
+        _PLANNERS[name] = fn
+        return fn
+    return deco
+
+
+def get_planner(name: str) -> Planner:
+    try:
+        return _PLANNERS[name]
+    except KeyError:
+        raise KeyError(f"unknown plan policy {name!r}; registered: "
+                       f"{sorted(_PLANNERS)}") from None
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_PLANNERS))
+
+
+def _loads_of(assign: np.ndarray, doc_of: np.ndarray, bi_of: np.ndarray,
+              blk: int, n_servers: int) -> np.ndarray:
+    cost = block_costs(doc_of, bi_of, blk)
+    loads = np.zeros(n_servers)
+    live = doc_of >= 0
+    np.add.at(loads, assign[live].astype(np.int64), cost[live])
+    return loads
+
+
+def _migration_bytes(cfg: CADConfig, assign: np.ndarray, docs,
+                     doc_of: np.ndarray, bi_of: np.ndarray,
+                     comm: Optional[CommModel]) -> float:
+    """Comm volume implied by an assignment (one layer, forward
+    direction): offloaded q blocks + the deduplicated kv prefixes each
+    server must receive — the same counting the dispatch send slots
+    realize, without building the plan arrays."""
+    if comm is None:
+        return 0.0
+    d, nb = cfg.n_servers, cfg.nb
+    home = identity_assignment(cfg)
+    live = doc_of >= 0
+    n_q = int((assign[live] != home[live]).sum())
+    needs: list = [dict() for _ in range(d)]
+    for g in np.nonzero(live)[0]:
+        s = int(assign[g])
+        dc = int(doc_of[g])
+        needs[s][dc] = max(needs[s].get(dc, 0), int(bi_of[g]) + 1)
+    n_kv = 0
+    for s in range(d):
+        for dc, pref in needs[s].items():
+            g0 = docs[dc].g0
+            n_kv += sum(1 for g in range(g0, g0 + pref) if g // nb != s)
+    return float(comm.migration_bytes(n_q * cfg.blk, n_kv * cfg.blk))
+
+
+def _stats(loads: np.ndarray, comm_bytes: float, n_moves: int) \
+        -> Dict[str, float]:
+    return {"comm_bytes": float(comm_bytes), "n_moves": int(n_moves),
+            "load_max_over_mean": float(loads.max()
+                                        / max(loads.mean(), 1e-9))}
+
+
+@register_planner("identity")
+def identity_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
+                     comm: Optional[CommModel] = None,
+                     tolerance: float = 0.0,
+                     build_plan: bool = True) -> PlanResult:
+    docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
+                                               cfg.n_servers)
+    assign = identity_assignment(cfg)
+    plan = plan_from_assignment(cfg, assign, doc_of, bi_of, docs) \
+        if build_plan else None
+    loads = _loads_of(assign, doc_of, bi_of, cfg.blk, cfg.n_servers)
+    return PlanResult(plan=plan, assign=assign, loads=loads,
+                      stats=_stats(loads, 0.0, 0))
+
+
+@register_planner("per_doc_cp")
+def per_doc_cp_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
+                       comm: Optional[CommModel] = None,
+                       tolerance: float = 0.0,
+                       build_plan: bool = True) -> PlanResult:
+    """Head-tail per-document CP (paper §2.2 as a special-case plan)."""
+    docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
+                                               cfg.n_servers)
+    assign = head_tail_assignment(cfg, docs)
+    plan = plan_from_assignment(cfg, assign, doc_of, bi_of, docs) \
+        if build_plan else None
+    loads = _loads_of(assign, doc_of, bi_of, cfg.blk, cfg.n_servers)
+    n_moves = int((assign != identity_assignment(cfg)).sum())
+    return PlanResult(
+        plan=plan, assign=assign, loads=loads,
+        stats=_stats(loads, _migration_bytes(cfg, assign, docs, doc_of,
+                                             bi_of, comm), n_moves))
+
+
+@register_planner("balanced")
+def balanced_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
+                     comm: Optional[CommModel] = None,
+                     tolerance: float = 0.1,
+                     build_plan: bool = True) -> PlanResult:
+    """The paper's communication-aware greedy scheduler (§4.2)."""
+    if comm is None:
+        comm = CommModel(n_heads=1, head_dim=1, n_kv_heads=1)
+    sch = schedule(segment_ids, blk=cfg.blk, n_servers=cfg.n_servers,
+                   comm=comm, caps=cfg.caps(), tolerance=tolerance)
+    plan = plan_from_assignment(cfg, sch.assign, sch.doc_of_block,
+                                sch.bi_of_block, sch.docs) \
+        if build_plan else None
+    return PlanResult(plan=plan, assign=sch.assign, loads=sch.loads,
+                      stats=_stats(sch.loads, sch.comm_bytes, sch.n_moves))

@@ -1,0 +1,109 @@
+"""Async plan prefetch: overlap host-side scheduling with device compute.
+
+The paper's scheduler "prefetches the upcoming batch": while the device
+executes step *i*, the (numpy, host-side) scheduler plans batch *i+1* so
+planning never sits on the critical path.  ``PlanPrefetcher`` implements
+that as a background worker thread feeding a bounded queue; the numpy
+scheduler and XLA both release the GIL for their heavy parts, so host
+planning genuinely overlaps device compute.
+
+If the worker dies, its exception is re-raised at the consumer's next
+pull — a failed plan is never silently swallowed.  ``CADSession`` falls
+back to fully synchronous planning when ``prefetch=0``.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterable, Iterator
+
+_DONE = object()
+
+
+class PlanPrefetcher:
+    """Iterate ``fn(item) for item in source`` with a bounded look-ahead.
+
+    The worker thread pulls from ``source`` and plans at most ``depth``
+    items beyond what the consumer has taken.  Order is preserved (single
+    worker, FIFO queue).  ``close()`` — also invoked by ``with`` exit and
+    generator teardown — stops the worker and joins it.
+    """
+
+    def __init__(self, source: Iterable[Any], fn: Callable[[Any], Any],
+                 depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self._source = iter(source)
+        self._fn = fn
+        self._queue: "queue.Queue[Any]" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._exc: BaseException | None = None
+        self._thread = threading.Thread(target=self._work, daemon=True,
+                                        name="cad-plan-prefetch")
+        self._thread.start()
+
+    # ------------------------------------------------------------- worker
+    def _put(self, item: Any) -> bool:
+        """Blocking put that stays responsive to ``close()``."""
+        while not self._stop.is_set():
+            try:
+                self._queue.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _work(self) -> None:
+        try:
+            for raw in self._source:
+                if self._stop.is_set():
+                    return
+                if not self._put(self._fn(raw)):
+                    return
+        except BaseException as e:           # surfaced at the next pull
+            self._exc = e
+        finally:
+            self._put(_DONE)
+
+    # ----------------------------------------------------------- consumer
+    def __iter__(self) -> Iterator[Any]:
+        return self
+
+    def __next__(self) -> Any:
+        # timed get so a close() from another thread (which drains the
+        # queue, possibly eating the sentinel) cannot strand us
+        while True:
+            if self._stop.is_set():
+                raise StopIteration
+            try:
+                item = self._queue.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if item is _DONE:
+                self.close()
+                if self._exc is not None:
+                    raise self._exc
+                raise StopIteration
+            return item
+
+    def close(self) -> None:
+        """Stop the worker and drain the queue; idempotent."""
+        self._stop.set()
+        while True:
+            try:
+                self._queue.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "PlanPrefetcher":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
+
+    def __del__(self):
+        try:
+            self._stop.set()
+        except Exception:
+            pass

@@ -1,0 +1,180 @@
+"""`CADSession` — the single entry point for core-attention
+disaggregation.
+
+A session owns everything that used to be scattered across
+``PipelineConfig`` / ``CADContext`` / ``ParallelContext`` side channels:
+the pool geometry (:class:`CADConfig`), the server kernel choice, the
+ping-pong flag, the scheduler tolerance, and the plan policy.  From one
+session you derive:
+
+  session.context()              the ParallelContext the model jits with
+  session.plan(segs)             one step's StepPlan (or PingPongPlan)
+  session.attach_plans(batches)  a batch stream with plans attached,
+                                 planned asynchronously one step ahead
+                                 (the paper's scheduler prefetch)
+
+Construction::
+
+  session = CADSession.for_pipeline(model_cfg, pipe_cfg,
+                                    plan_policy="balanced")
+  ctx = session.context()
+  for batch in session.attach_plans(raw_batches(pipe_cfg)):
+      params, opt_state, metrics = step(params, opt_state, batch)
+
+Unlike the deprecated ``make_cad_context``, ``for_pipeline`` never
+mutates the pipeline config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Iterator, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.cad.planner import get_planner
+from repro.cad.prefetch import PlanPrefetcher
+from repro.core.cost_model import CommModel
+from repro.core.dispatch import CADContext
+from repro.core.plan import CADConfig, PingPongPlan, StepPlan
+from repro.parallel import ParallelContext, ShardingRules
+
+Plan = Union[StepPlan, PingPongPlan]
+
+
+@dataclasses.dataclass(frozen=True)
+class CADSession:
+    """Immutable description of the attention service for one run."""
+    cfg: CADConfig
+    kernel: str = "xla"            # "xla" | "pallas" server implementation
+    pingpong: bool = False
+    tolerance: float = 0.1
+    plan_policy: str = "balanced"
+    jmax: int = 0                  # max kv blocks per task (0 -> cfg.nkv)
+    comm: Optional[CommModel] = None
+    mesh: Any = None
+    rules: Any = None
+    prefetch: int = 2              # plan look-ahead depth; 0 = synchronous
+
+    # ------------------------------------------------------- constructors
+    @classmethod
+    def for_pipeline(cls, model_cfg, pipe_cfg, *, kernel: str = "xla",
+                     pingpong: bool = False, tolerance: float = 0.1,
+                     plan_policy: str = "balanced", mesh=None, rules=None,
+                     prefetch: int = 2) -> "CADSession":
+        """Size the attention-server pool for a training pipeline.
+
+        ``pipe_cfg`` needs ``n_ranks``, ``global_batch``, ``seq_len`` and
+        ``max_doc_len``; it is read, never mutated."""
+        n = pipe_cfg.n_ranks
+        rows_per_rank = pipe_cfg.global_batch // n
+        tokens_per_rank = rows_per_rank * pipe_cfg.seq_len
+        if pingpong:
+            if rows_per_rank % 2:
+                raise ValueError("ping-pong needs an even number of rows "
+                                 f"per rank, got {rows_per_rank}")
+            tokens_per_rank //= 2          # pool sized per nano-batch
+        cadcfg = CADConfig.default(n, tokens_per_rank,
+                                   max_doc_tokens=pipe_cfg.max_doc_len)
+        comm = CommModel(n_heads=getattr(model_cfg, "n_heads", 1) or 1,
+                         head_dim=getattr(model_cfg, "head_dim", 1) or 1,
+                         n_kv_heads=getattr(model_cfg, "n_kv_heads", 1)
+                         or 1)
+        jmax = max(1, pipe_cfg.max_doc_len // cadcfg.blk)
+        return cls(cfg=cadcfg, kernel=kernel, pingpong=pingpong,
+                   tolerance=tolerance, plan_policy=plan_policy,
+                   jmax=jmax, comm=comm, mesh=mesh, rules=rules,
+                   prefetch=prefetch)
+
+    # ------------------------------------------------------------ context
+    def context(self, *, remat: bool = True) -> ParallelContext:
+        """The ParallelContext consumers jit against.  Plans are bound per
+        step by the train step (``CADContext.bind_plan``)."""
+        cad = CADContext(cfg=self.cfg, kernel=self.kernel, jmax=self.jmax,
+                         pingpong=self.pingpong)
+        return ParallelContext(mesh=self.mesh,
+                               rules=self.rules or ShardingRules(),
+                               attn_impl="cad", cad=cad, remat=remat,
+                               pingpong=self.pingpong)
+
+    # ----------------------------------------------------------- planning
+    def plan(self, segment_ids: np.ndarray) \
+            -> Tuple[Plan, Dict[str, float]]:
+        """Plan one step.  ``segment_ids`` is the rank-major [D, T] packed
+        layout (T = tokens per rank; 2·nb·blk when ping-pong is on)."""
+        segs = np.asarray(segment_ids)
+        planner = get_planner(self.plan_policy)
+        if not self.pingpong:
+            res = planner(self.cfg, segs, comm=self.comm,
+                          tolerance=self.tolerance)
+            return res.plan, dict(res.stats)
+        half = segs.shape[1] // 2
+        if half % self.cfg.blk:
+            raise ValueError(
+                f"ping-pong nano-batch of {half} tokens is not a "
+                f"multiple of blk={self.cfg.blk}")
+        # a cfg sized for the full step (legacy callers) is re-sized to
+        # the nano-batch, matching the old pipeline behavior
+        cfg = self.cfg if half == self.cfg.nb * self.cfg.blk \
+            else dataclasses.replace(self.cfg, nb=half // self.cfg.blk)
+        halves = []
+        stats: Dict[str, float] = {"comm_bytes": 0.0, "n_moves": 0,
+                                   "load_max_over_mean": 0.0}
+        for i in range(2):
+            res = planner(cfg, segs[:, i * half:(i + 1) * half],
+                          comm=self.comm, tolerance=self.tolerance)
+            halves.append(res.plan)
+            stats["comm_bytes"] += res.stats["comm_bytes"]
+            stats["n_moves"] += res.stats["n_moves"]
+            stats["load_max_over_mean"] = max(
+                stats["load_max_over_mean"],
+                res.stats["load_max_over_mean"])
+        return PingPongPlan(*halves), stats
+
+    def plan_batch(self, batch: Dict[str, Any]) -> Dict[str, Any]:
+        """Attach ``plan`` + ``schedule_stats`` to one pipeline batch
+        (rows are rank-major: rank r owns rows [r·rpr, (r+1)·rpr))."""
+        segs = np.asarray(batch["segment_ids"])
+        if self.pingpong:
+            rpr = segs.shape[0] // self.cfg.n_servers
+            if rpr % 2:
+                # the dispatch nano-split is by rows; a mid-row token
+                # split would fail opaquely deep inside cad_attention
+                raise ValueError("ping-pong needs an even number of rows "
+                                 f"per rank, got {rpr}")
+        segs_rank = segs.reshape(self.cfg.n_servers, -1)
+        plan, stats = self.plan(segs_rank)
+        out = dict(batch)
+        out["plan"] = plan
+        out["schedule_stats"] = stats
+        return out
+
+    def attach_plans(self, batch_iter: Iterable[Dict[str, Any]], *,
+                     prefetch: Optional[int] = None) \
+            -> Iterator[Dict[str, Any]]:
+        """Yield batches with plans attached.  With ``prefetch >= 1`` a
+        background worker plans batch *i+1* while the caller's device
+        computes batch *i* (bounded queue, order-preserving); with
+        ``prefetch=0`` planning happens inline."""
+        depth = self.prefetch if prefetch is None else prefetch
+        if depth <= 0:
+            for batch in batch_iter:
+                yield self.plan_batch(batch)
+            return
+        pf = PlanPrefetcher(batch_iter, self.plan_batch, depth=depth)
+        try:
+            yield from pf
+        finally:
+            pf.close()
+
+    # ------------------------------------------------------------- legacy
+    @classmethod
+    def from_legacy(cls, cad_cfg: CADConfig, *, kernel: str = "xla",
+                    pingpong: bool = False, tolerance: float = 0.1,
+                    plan_policy: str = "balanced",
+                    comm: Optional[CommModel] = None,
+                    jmax: int = 0) -> "CADSession":
+        """Wrap pre-session state (a bare CADConfig + loose knobs) — used
+        by the deprecated ``make_cad_context``/dict-plan pipeline path."""
+        return cls(cfg=cad_cfg, kernel=kernel, pingpong=pingpong,
+                   tolerance=tolerance, plan_policy=plan_policy, comm=comm,
+                   jmax=jmax or max(1, cad_cfg.nkv), prefetch=0)

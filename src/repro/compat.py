@@ -1,0 +1,40 @@
+"""jax-version compatibility helpers.
+
+This repo targets current jax but must also run on 0.4.x containers,
+where several APIs differ:
+
+  * ``shard_map`` lives in ``jax.experimental.shard_map`` and spells the
+    replication check ``check_rep`` instead of ``check_vma``
+  * ``jax.sharding.AxisType`` / ``make_mesh(axis_types=...)`` don't
+    exist
+
+Every version shim lives here (Pallas-kernel renames live in
+``repro.kernels.compat`` to keep this module jax-core only).
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:                                           # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with auto axis types when the installed jax
+    supports them (older jax defaults to the same behavior)."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(AxisType.Auto,) * len(axis_shapes),
+                             **kwargs)
+    except (ImportError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names, **kwargs)

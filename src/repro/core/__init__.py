@@ -11,8 +11,8 @@ from repro.core.attention import core_attention, ref_attention, \
 from repro.core.cost_model import CommModel, CostModel, ca_flops, \
     causal_doc_flops
 from repro.core.dispatch import CADContext, cad_attention
-from repro.core.plan import CADConfig, identity_plan, per_document_cp_plan, \
-    plan_from_schedule
+from repro.core.plan import CADConfig, PingPongPlan, PlanCapacityError, \
+    StepPlan, identity_plan, per_document_cp_plan, plan_from_schedule
 from repro.core.scheduler import Caps, Schedule, imbalance, schedule
 
 __all__ = [
@@ -20,5 +20,6 @@ __all__ = [
     "CommModel", "CostModel", "ca_flops", "causal_doc_flops",
     "CADContext", "cad_attention", "CADConfig", "identity_plan",
     "per_document_cp_plan", "plan_from_schedule", "Caps", "Schedule",
-    "imbalance", "schedule",
+    "imbalance", "schedule", "StepPlan", "PingPongPlan",
+    "PlanCapacityError",
 ]

@@ -33,14 +33,20 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.attention import NEG_INF, xla_flash_attention
-from repro.core.plan import CADConfig
+from repro.core.plan import CADConfig, PingPongPlan
+
+from repro.compat import shard_map as _shard_map
 
 
 @dataclasses.dataclass(frozen=True)
 class CADContext:
-    """Static CAD pool description + the (traced) plan for this step."""
+    """Static CAD pool description + the (traced) plan for this step.
+
+    ``plan`` is a :class:`repro.core.plan.StepPlan` (or
+    :class:`PingPongPlan` when ping-pong is on).  Legacy dict plans and
+    (ping, pong) tuples are still accepted for one release."""
     cfg: CADConfig
-    plan: Any = None          # dict of int32 arrays, or (ping, pong) tuple
+    plan: Any = None          # StepPlan | PingPongPlan | legacy dict/tuple
     kernel: str = "pallas"    # "pallas" | "xla" server implementation
     jmax: int = 0             # max kv blocks any task touches (0 -> nkv)
     pingpong: bool = False
@@ -386,14 +392,14 @@ def cad_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, ctx,
             plan_ = jax.tree.map(lambda a: a[0], plan_)  # drop local D=1
             return fn(qq_, kk_, vv_, pp_, plan_)
 
-        return jax.shard_map(
+        return _shard_map(
             body, mesh=ctx.mesh,
             in_specs=in_specs,
             out_specs=P(bspec, None, hspec, None),
             check_vma=False,
         )(qq, kk, vv, pp, plan)
 
-    if cad.pingpong and isinstance(cad.plan, (tuple, list)):
+    if cad.pingpong and isinstance(cad.plan, (tuple, list, PingPongPlan)):
         # nano-batch interleave: issue both dispatches; XLA overlaps the
         # A2A of one with the serve of the other (paper Fig. 7).  The
         # split is within each rank's rows (rank-major batch layout).
@@ -414,5 +420,6 @@ def cad_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, ctx,
         o = jnp.stack([out0.reshape((d, h) + q.shape[1:]),
                        out1.reshape((d, h) + q.shape[1:])], axis=1)
         return o.reshape(q.shape)
-    plan = cad.plan[0] if isinstance(cad.plan, (tuple, list)) else cad.plan
+    plan = cad.plan[0] if isinstance(cad.plan, (tuple, list, PingPongPlan)) \
+        else cad.plan
     return run(q, k, v, pos, plan)

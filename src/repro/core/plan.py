@@ -1,9 +1,11 @@
 """Static-shape dispatch plans.
 
-A ``DispatchPlan`` is a pytree of int32 arrays — *data*, not shapes — so a
-single compiled executable serves every step's schedule (TPU adaptation of
-the paper's dynamic batching, DESIGN.md §3).  Layout per rank r (leading
-axis D is sharded by the dispatch shard_map):
+A :class:`StepPlan` is a typed pytree of int32 arrays — *data*, not
+shapes — so a single compiled executable serves every step's schedule
+(TPU adaptation of the paper's dynamic batching, DESIGN.md §3).  Legacy
+raw-dict plans with the same keys are still accepted by the dispatch
+layer for one release.  Layout per rank r (leading axis D is sharded by
+the dispatch shard_map):
 
   q_home_idx   [D, NB]        local q-block ids this rank serves itself
   q_send_idx   [D, D, CQ]     [src, dst] local q-block ids sent src->dst
@@ -30,11 +32,105 @@ Plan builders:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Any, Dict, Iterator, Tuple
 
 import numpy as np
 
 from repro.core.scheduler import Caps, Doc, Schedule, layout_from_segments
+
+PLAN_FIELDS = ("q_home_idx", "q_send_idx", "kv_send_idx", "kv_gather",
+               "task_kv_start", "task_kv_len")
+
+
+class PlanCapacityError(RuntimeError):
+    """A plan build exceeded a static dispatch capacity.
+
+    The compiled dispatch has fixed shapes (CQ/CKV per (src, dst) pair,
+    NKV kv-buffer slots per server); an assignment that needs more slots
+    cannot be expressed.  Unlike a bare ``assert`` this survives
+    ``python -O`` and reports which capacity broke and by how much.
+    """
+
+    def __init__(self, capacity: str, src: int, dst: int, needed: int,
+                 available: int):
+        self.capacity = capacity
+        self.src = src
+        self.dst = dst
+        self.needed = needed
+        self.available = available
+        super().__init__(
+            f"{capacity} capacity exceeded on (src={src}, dst={dst}): "
+            f"needed {needed} block slots, only {available} available "
+            f"(raise CADConfig.{capacity.lower()} or loosen the schedule)")
+
+
+def _register_plan_dataclass(cls):
+    import jax
+    return jax.tree_util.register_dataclass(
+        cls, data_fields=list(cls.__dataclass_fields__), meta_fields=[])
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPlan:
+    """One step's dispatch plan as a typed JAX pytree.
+
+    Field layouts are documented in the module docstring above; leaves
+    are int32 arrays (numpy on the host, jax once traced).  ``StepPlan``
+    supports ``plan["q_send_idx"]``-style access so dispatch helpers work
+    identically on legacy dict plans and typed plans.
+    """
+    q_home_idx: Any
+    q_send_idx: Any
+    kv_send_idx: Any
+    kv_gather: Any
+    task_kv_start: Any
+    task_kv_len: Any
+
+    def __getitem__(self, key: str):
+        if key not in PLAN_FIELDS:
+            raise KeyError(key)
+        return getattr(self, key)
+
+    def __contains__(self, key) -> bool:
+        return key in PLAN_FIELDS
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(PLAN_FIELDS)
+
+    def keys(self) -> Tuple[str, ...]:
+        return PLAN_FIELDS
+
+    def items(self) -> Iterator[Tuple[str, Any]]:
+        return ((k, getattr(self, k)) for k in PLAN_FIELDS)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {k: getattr(self, k) for k in PLAN_FIELDS}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "StepPlan":
+        return cls(**{k: d[k] for k in PLAN_FIELDS})
+
+    @classmethod
+    def empty(cls, cfg: "CADConfig") -> "StepPlan":
+        return cls.from_dict(empty_plan(cfg))
+
+
+@dataclasses.dataclass(frozen=True)
+class PingPongPlan:
+    """The two nano-batch plans of a ping-pong step (paper §4.1) — a
+    first-class pair rather than a tuple convention."""
+    ping: StepPlan
+    pong: StepPlan
+
+    def __iter__(self):
+        return iter((self.ping, self.pong))
+
+    def __getitem__(self, i: int):
+        return (self.ping, self.pong)[i]
+
+
+StepPlan = _register_plan_dataclass(StepPlan)
+PingPongPlan = _register_plan_dataclass(PingPongPlan)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,8 +180,11 @@ def empty_plan(cfg: CADConfig) -> Dict[str, np.ndarray]:
 
 def plan_from_assignment(cfg: CADConfig, assign: np.ndarray,
                          doc_of: np.ndarray, bi_of: np.ndarray,
-                         docs) -> Dict[str, np.ndarray]:
-    """Build the dispatch arrays from a per-block server assignment."""
+                         docs) -> StepPlan:
+    """Build the dispatch arrays from a per-block server assignment.
+
+    Raises :class:`PlanCapacityError` when the assignment needs more
+    send/buffer slots than the static shapes provide."""
     d, nb = cfg.n_servers, cfg.nb
     plan = empty_plan(cfg)
     q_cnt = np.zeros((d, d), np.int64)
@@ -110,7 +209,8 @@ def plan_from_assignment(cfg: CADConfig, assign: np.ndarray,
             task_slot_of_g[g] = (s, g % nb)
         else:
             c = q_cnt[home, s]
-            assert c < cfg.cq, "scheduler exceeded CQ capacity"
+            if c >= cfg.cq:
+                raise PlanCapacityError("CQ", home, s, int(c) + 1, cfg.cq)
             plan["q_send_idx"][home, s, c] = g % nb
             q_cnt[home, s] = c + 1
             task_slot_of_g[g] = (s, nb + home * cfg.cq + c)
@@ -124,7 +224,8 @@ def plan_from_assignment(cfg: CADConfig, assign: np.ndarray,
             g0 = docs[dc].g0
             needed.extend(range(g0, g0 + pref))
         needed = sorted(set(needed))
-        assert len(needed) <= cfg.nkv, "scheduler exceeded NKV capacity"
+        if len(needed) > cfg.nkv:
+            raise PlanCapacityError("NKV", s, s, len(needed), cfg.nkv)
         # source slot for each needed block
         buf_pos_of_g = {}
         for pos, g in enumerate(needed):
@@ -133,7 +234,9 @@ def plan_from_assignment(cfg: CADConfig, assign: np.ndarray,
                 slot = g % nb                       # local
             else:
                 c = kv_cnt[src, s]
-                assert c < cfg.ckv, "scheduler exceeded CKV capacity"
+                if c >= cfg.ckv:
+                    raise PlanCapacityError("CKV", src, s, int(c) + 1,
+                                            cfg.ckv)
                 plan["kv_send_idx"][src, s, c] = g % nb
                 kv_cnt[src, s] = c + 1
                 slot = nb + src * cfg.ckv + c       # recv layout
@@ -154,33 +257,41 @@ def plan_from_assignment(cfg: CADConfig, assign: np.ndarray,
                 bi = int(bi_of[g])
                 plan["task_kv_start"][s, slot] = start
                 plan["task_kv_len"][s, slot] = bi + 1
-    return plan
+    return StepPlan.from_dict(plan)
 
 
-def identity_plan(cfg: CADConfig, segment_ids: np.ndarray) \
-        -> Dict[str, np.ndarray]:
-    docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
-                                               cfg.n_servers)
-    assign = (np.arange(cfg.n_servers * cfg.nb) // cfg.nb).astype(np.int64)
-    return plan_from_assignment(cfg, assign, doc_of, bi_of, docs)
+def identity_assignment(cfg: CADConfig) -> np.ndarray:
+    """Every block served at its home rank."""
+    return (np.arange(cfg.n_servers * cfg.nb) // cfg.nb).astype(np.int64)
 
 
-def per_document_cp_plan(cfg: CADConfig, segment_ids: np.ndarray) \
-        -> Dict[str, np.ndarray]:
+def head_tail_assignment(cfg: CADConfig, docs) -> np.ndarray:
     """Head-tail per-document CP (paper §2.2): each doc's blocks are dealt
     to servers in the 0,1,...,D-1,D-1,...,1,0 pairing order."""
-    docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
-                                               cfg.n_servers)
     d = cfg.n_servers
-    assign = (np.arange(d * cfg.nb) // cfg.nb).astype(np.int64)
+    assign = identity_assignment(cfg)
     ht = list(range(d)) + list(range(d - 1, -1, -1))   # head-tail order
     for doc in docs:
         for j, g in enumerate(doc.blocks()):
             assign[g] = ht[j % (2 * d)]
-    return plan_from_assignment(cfg, assign, doc_of, bi_of, docs)
+    return assign
 
 
-def plan_from_schedule(cfg: CADConfig, sched: Schedule) \
-        -> Dict[str, np.ndarray]:
+def identity_plan(cfg: CADConfig, segment_ids: np.ndarray) -> StepPlan:
+    docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
+                                               cfg.n_servers)
+    return plan_from_assignment(cfg, identity_assignment(cfg), doc_of,
+                                bi_of, docs)
+
+
+def per_document_cp_plan(cfg: CADConfig, segment_ids: np.ndarray) \
+        -> StepPlan:
+    docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
+                                               cfg.n_servers)
+    return plan_from_assignment(cfg, head_tail_assignment(cfg, docs),
+                                doc_of, bi_of, docs)
+
+
+def plan_from_schedule(cfg: CADConfig, sched: Schedule) -> StepPlan:
     return plan_from_assignment(cfg, sched.assign, sched.doc_of_block,
                                 sched.bi_of_block, sched.docs)

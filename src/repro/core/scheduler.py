@@ -102,6 +102,14 @@ def layout_from_segments(segment_ids: np.ndarray, blk: int,
     return docs, doc_of, bi_of
 
 
+def block_costs(doc_of: np.ndarray, bi_of: np.ndarray,
+                blk: int) -> np.ndarray:
+    """Relative CA FLOPs per q-block: (bi+1)·blk² for live blocks, 0 for
+    padding.  The single cost formula shared by the scheduler and the
+    plan-policy load accounting (repro.cad.planner)."""
+    return np.where(doc_of >= 0, (bi_of + 1) * float(blk * blk), 0.0)
+
+
 def _range_cost(blk: int, lo: int, hi: int) -> float:
     """Sum of per-block CA cost over block-in-doc range [lo, hi):
     cost(bi) = (bi+1)·blk² (relative FLOPs; H·dh factors cancel)."""
@@ -117,7 +125,7 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
     G = n_servers * nb
     assign = (np.arange(G) // nb).astype(np.int64)     # home assignment
 
-    cost_of = np.where(doc_of >= 0, (bi_of + 1) * float(blk * blk), 0.0)
+    cost_of = block_costs(doc_of, bi_of, blk)
     loads = np.array([cost_of[s * nb:(s + 1) * nb].sum()
                       for s in range(n_servers)])
     fbar = loads.sum() / n_servers

@@ -1,20 +1,24 @@
 """Training data pipeline: samples a length distribution, packs documents
-into per-rank chunks, emits jax-ready batches (+ labels with in-document
-next-token shift), and — when CAD is on — runs the scheduler to attach a
-dispatch plan to every batch."""
+into per-rank chunks, and emits jax-ready batches (+ labels with
+in-document next-token shift).
+
+Plan attachment is the :class:`repro.cad.CADSession`'s job
+(``session.attach_plans(raw_batches(cfg))`` — asynchronous, prefetched).
+The legacy ``batches(cfg, ...)`` entry point with ``cfg.cad`` set keeps
+working for one release via a synchronous session shim.
+"""
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Iterator, Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cost_model import CommModel
-from repro.core.plan import CADConfig, identity_plan, plan_from_schedule
-from repro.core.scheduler import schedule
+from repro.core.plan import CADConfig
 from repro.data.distributions import sample_lengths
-from repro.data.packing import BLOCK, pack_documents
+from repro.data.packing import pack_documents
 
 
 @dataclasses.dataclass
@@ -27,9 +31,11 @@ class PipelineConfig:
     vocab_size: int = 32000
     seed: int = 0
     strategy: str = "fixed"            # fixed | variable (WLB baseline)
-    cad: Optional[CADConfig] = None    # attach plans when set
-    tolerance: float = 0.1
-    pingpong: bool = False
+    # -- deprecated CAD side channel (use CADSession instead) ----------
+    cad: Optional[CADConfig] = None    # attach plans when set (legacy)
+    tolerance: float = 0.1             # legacy; owned by CADSession
+    pingpong: bool = False             # legacy; owned by CADSession
+    plan_policy: str = "balanced"      # legacy; owned by CADSession
 
 
 def _labels(tokens, seg):
@@ -39,13 +45,14 @@ def _labels(tokens, seg):
     return lab.astype(np.int32)
 
 
-def batches(cfg: PipelineConfig, n_heads: int, head_dim: int,
-            n_kv_heads: int) -> Iterator[dict]:
+def raw_batches(cfg: PipelineConfig) -> Iterator[dict]:
+    """Packed batches without plans — feed through
+    ``CADSession.attach_plans`` when CAD is on.
+
+    Fields are host numpy arrays: the plan prefetcher reads
+    ``segment_ids`` on its worker thread without touching the device,
+    and jit transfers everything once at step time."""
     rng = np.random.default_rng(cfg.seed)
-    rows_per_rank = cfg.global_batch // max(cfg.n_ranks, 1)
-    tokens_per_rank = rows_per_rank * cfg.seq_len
-    comm = CommModel(n_heads=n_heads, head_dim=head_dim,
-                     n_kv_heads=n_kv_heads)
     while True:
         # oversample docs, pack exactly global_batch rows
         need = cfg.global_batch * cfg.seq_len
@@ -59,41 +66,35 @@ def batches(cfg: PipelineConfig, n_heads: int, head_dim: int,
         toks = np.stack([c.tokens for c in chunks])
         segs = np.stack([c.segment_ids for c in chunks])
         poss = np.stack([c.positions for c in chunks])
-        batch = {
-            "tokens": jnp.asarray(toks),
-            "labels": jnp.asarray(_labels(toks, segs)),
-            "segment_ids": jnp.asarray(segs),
-            "positions": jnp.asarray(poss),
+        yield {
+            "tokens": toks,
+            "labels": _labels(toks, segs),
+            "segment_ids": segs,
+            "positions": poss,
         }
-        if cfg.cad is not None:
-            # rank-major fold: rows r*rows_per_rank..(r+1)*rows_per_rank
-            segs_rank = segs.reshape(cfg.n_ranks, tokens_per_rank)
-            if cfg.pingpong:
-                assert rows_per_rank % 2 == 0, \
-                    "ping-pong needs an even number of rows per rank"
-                half = tokens_per_rank // 2
-                assert half % BLOCK == 0
-                sub = dataclasses.replace(cfg.cad, nb=half // cfg.cad.blk)
-                plans = []
-                for i in range(2):
-                    seg_i = segs_rank[:, i * half:(i + 1) * half]
-                    sch = schedule(seg_i, blk=sub.blk,
-                                   n_servers=sub.n_servers, comm=comm,
-                                   caps=sub.caps(),
-                                   tolerance=cfg.tolerance)
-                    plans.append({k: jnp.asarray(v) for k, v in
-                                  plan_from_schedule(sub, sch).items()})
-                batch["plan"] = tuple(plans)
-            else:
-                sch = schedule(segs_rank, blk=cfg.cad.blk,
-                               n_servers=cfg.cad.n_servers, comm=comm,
-                               caps=cfg.cad.caps(), tolerance=cfg.tolerance)
-                plan = plan_from_schedule(cfg.cad, sch)
-                batch["plan"] = {k: jnp.asarray(v) for k, v in plan.items()}
-            batch["schedule_stats"] = {
-                "comm_bytes": float(sch.comm_bytes),
-                "n_moves": int(sch.n_moves),
-                "load_max_over_mean": float(sch.loads.max()
-                                            / max(sch.loads.mean(), 1e-9)),
-            }
-        yield batch
+
+
+def batches(cfg: PipelineConfig, n_heads: int, head_dim: int,
+            n_kv_heads: int) -> Iterator[dict]:
+    """Deprecated: ``raw_batches`` + a legacy-field CAD session.
+
+    Kept so ``make_cad_context``-era callers run unchanged; new code
+    should build a :class:`repro.cad.CADSession` and call
+    ``session.attach_plans(raw_batches(cfg))``.
+
+    (A plain function returning an iterator, not a generator, so the
+    deprecation warning fires at the call site rather than at the first
+    ``next()``.)"""
+    if cfg.cad is None:
+        return raw_batches(cfg)
+    warnings.warn(
+        "batches() with PipelineConfig.cad is deprecated; use "
+        "CADSession.attach_plans(raw_batches(cfg))", DeprecationWarning,
+        stacklevel=2)
+    from repro.cad.session import CADSession
+    session = CADSession.from_legacy(
+        cfg.cad, pingpong=cfg.pingpong, tolerance=cfg.tolerance,
+        plan_policy=cfg.plan_policy,
+        comm=CommModel(n_heads=n_heads, head_dim=head_dim,
+                       n_kv_heads=n_kv_heads))
+    return session.attach_plans(raw_batches(cfg), prefetch=0)

@@ -1,0 +1,10 @@
+"""jax-version compat for Pallas TPU kernels.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer jax; alias whichever exists so the kernels build on both."""
+from jax.experimental.pallas import tpu as _pltpu
+
+try:
+    CompilerParams = _pltpu.CompilerParams
+except AttributeError:        # pre-rename jax; raises clearly if neither
+    CompilerParams = _pltpu.TPUCompilerParams

@@ -28,6 +28,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
+
 NEG_INF = -2.0 ** 30
 DEFAULT_BLOCK = 128
 
@@ -134,7 +137,7 @@ def flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
             pltpu.VMEM((blk_q,), jnp.float32),
             pltpu.VMEM((blk_q, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
@@ -236,7 +239,7 @@ def ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, *,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((T, blk, hq, dh), q_tasks.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(kv_start, kv_len, q_pos, kv_pos, q_tasks, k_buf, v_buf)

@@ -21,6 +21,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
+
 
 def _lru_kernel(a_ref, b_ref, h_ref, carry, *, tile_s):
     s_idx = pl.program_id(2)
@@ -72,7 +75,7 @@ def lru_scan(a, b, *, tile_s: int = 256, tile_w: int = 128,
                                lambda bb, wi, si: (bb, si, wi)),
         out_shape=jax.ShapeDtypeStruct((bsz, s, w), b.dtype),
         scratch_shapes=[pltpu.VMEM((tile_w,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

@@ -18,6 +18,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
+
 
 def _ssd_chunk_kernel(C_ref, B_ref, x_ref, dt_ref, csum_ref, nr_ref,
                       y_ref, state_ref, *, chunk):
@@ -84,7 +87,7 @@ def ssd_chunk(C_, B_, x, dt, csum, nr, *, interpret=True):
             jax.ShapeDtypeStruct((bt * h, k, c, p), x.dtype),
             jax.ShapeDtypeStruct((bt * h, k, n, p), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(Cm, Bm, xm, dtm, csm, nrm)

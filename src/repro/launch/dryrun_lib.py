@@ -136,12 +136,12 @@ def cad_setup(cfg, mesh, rules, seq, batch, pingpong=False):
     cadcfg = CADConfig.default(d, tokens_per_rank, blk=blk,
                                max_doc_tokens=seq)
     jmax = max(1, seq // blk)   # docs never exceed one row
-    from repro.core.plan import empty_plan
-    plan_np = empty_plan(cadcfg)
+    from repro.core.plan import StepPlan
+    plan_np = StepPlan.empty(cadcfg)
     cspec = rules.cad_axis
-    plan = {k: _sds(v.shape, jnp.int32, mesh, P(cspec, *([None] *
-                                                         (v.ndim - 1))))
-            for k, v in plan_np.items()}
+    plan = jax.tree.map(
+        lambda v: _sds(v.shape, jnp.int32, mesh,
+                       P(cspec, *([None] * (v.ndim - 1)))), plan_np)
     return cadcfg, plan, jmax
 
 
@@ -187,7 +187,9 @@ def build_step(cfg, mesh, shape_name: str, *, cad: bool = False,
         b_sds = train_batch_sds(cfg, mesh, rules, info["seq"],
                                 info["batch"], with_memory)
         if cad:
-            b_sds["plan"] = (plan_sds, plan_sds) if pingpong else plan_sds
+            from repro.core.plan import PingPongPlan
+            b_sds["plan"] = PingPongPlan(plan_sds, plan_sds) if pingpong \
+                else plan_sds
         fn = make_train_step(cfg, ctx, opt)
         return fn, (p_sds, o_sds, b_sds), ctx
 

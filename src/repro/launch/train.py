@@ -7,16 +7,18 @@ configs (the mesh flags are for the dry-run, see dryrun.py).
       --steps 50 --seq 512 --batch 4 --ranks 2 --cad
 
 Flags mirror the paper's system knobs: --cad (core attention
-disaggregation on/off), --pingpong (nano-batch overlap), --tolerance
-(scheduler imbalance budget), --strategy fixed|variable (packing
-baseline).
+disaggregation on/off), --plan-policy (identity | per_doc_cp |
+balanced), --pingpong (nano-batch overlap), --tolerance (scheduler
+imbalance budget), --prefetch (async plan look-ahead; 0 = synchronous),
+--strategy fixed|variable (packing baseline).
 """
 import argparse
 
+from repro.cad import CADSession, available_policies
 from repro.configs import get_config
 from repro.data.pipeline import PipelineConfig
 from repro.parallel import ParallelContext
-from repro.train.trainer import TrainConfig, make_cad_context, train
+from repro.train.trainer import TrainConfig, train
 
 
 def main():
@@ -32,8 +34,12 @@ def main():
     ap.add_argument("--strategy", default="fixed",
                     choices=["fixed", "variable"])
     ap.add_argument("--cad", action="store_true")
+    ap.add_argument("--plan-policy", default="balanced",
+                    choices=list(available_policies()))
     ap.add_argument("--pingpong", action="store_true")
     ap.add_argument("--tolerance", type=float, default=0.1)
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="plan look-ahead depth (0 = synchronous)")
     ap.add_argument("--kernel", default="xla", choices=["xla", "pallas"])
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="")
@@ -47,10 +53,13 @@ def main():
         distribution=args.dist, max_doc_len=args.max_doc or args.seq,
         seq_len=args.seq, global_batch=args.batch, n_ranks=args.ranks,
         vocab_size=cfg.vocab_size, strategy=args.strategy)
+    session = None
     if args.cad and cfg.has_attention():
-        ctx = make_cad_context(cfg, pipe, kernel=args.kernel,
-                               pingpong=args.pingpong,
-                               tolerance=args.tolerance)
+        session = CADSession.for_pipeline(
+            cfg, pipe, kernel=args.kernel, pingpong=args.pingpong,
+            tolerance=args.tolerance, plan_policy=args.plan_policy,
+            prefetch=args.prefetch)
+        ctx = None
     else:
         if args.cad:
             print(f"note: {cfg.arch_id} is attention-free; CAD is "
@@ -61,7 +70,7 @@ def main():
                      log_every=max(1, args.steps // 20),
                      ckpt_every=args.ckpt_every,
                      ckpt_dir=args.ckpt_dir or "/tmp/repro_ckpt")
-    res = train(cfg, pipe, tc, ctx=ctx)
+    res = train(cfg, pipe, tc, ctx=ctx, session=session)
     h = res["history"]
     print(f"done: loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")
 

@@ -118,5 +118,6 @@ def tick_schedules(segs_mb: np.ndarray, n_stages: int, cadcfg: CADConfig,
         stats.append({"tick": t, "moves": sch.n_moves,
                       "comm_bytes": sch.comm_bytes,
                       "loads": sch.loads.copy()})
-    stacked = {k: np.stack([p[k] for p in plans]) for k in plans[0]}
+    stacked = {k: np.stack([p[k] for p in plans])
+               for k in plans[0].keys()}
     return stacked, stats

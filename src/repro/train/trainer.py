@@ -1,19 +1,20 @@
-"""Trainer: the host loop that owns the data pipeline, the CAD scheduler
-(plan per step — the paper's "scheduler prefetches the upcoming batch"),
-jit compilation, checkpointing, and metrics."""
+"""Trainer: the host loop that owns the data pipeline, the CAD attention
+service (plans prefetched asynchronously one step ahead — the paper's
+"scheduler prefetches the upcoming batch"), jit compilation,
+checkpointing, and metrics."""
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.cad import CADSession
 from repro.checkpoint import ckpt
-from repro.core.dispatch import CADContext
-from repro.core.plan import CADConfig
-from repro.data.pipeline import PipelineConfig, batches
+from repro.data.pipeline import PipelineConfig, batches, raw_batches
 from repro.models import model as M
 from repro.optim.adamw import AdamW, cosine_schedule
 from repro.parallel import ParallelContext
@@ -33,10 +34,24 @@ class TrainConfig:
 
 
 def train(cfg, pipe_cfg: PipelineConfig, train_cfg: TrainConfig,
-          ctx: Optional[ParallelContext] = None,
-          params=None) -> Dict[str, Any]:
-    """Train ``cfg`` (a ModelConfig); returns final params + history."""
-    ctx = ctx or ParallelContext(attn_impl="xla", remat=True)
+          ctx: Optional[ParallelContext] = None, params=None,
+          session: Optional[CADSession] = None) -> Dict[str, Any]:
+    """Train ``cfg`` (a ModelConfig); returns final params + history.
+
+    Pass ``session`` (a :class:`repro.cad.CADSession`) to train with the
+    attention service: the session provides the ParallelContext and
+    attaches prefetched plans to every batch.  The legacy path —
+    ``ctx`` from ``make_cad_context`` plus ``pipe_cfg.cad`` — still
+    works."""
+    if session is not None:
+        ctx = session.context()
+        gen = session.attach_plans(raw_batches(pipe_cfg))
+    else:
+        ctx = ctx or ParallelContext(attn_impl="xla", remat=True)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            gen = batches(pipe_cfg, cfg.n_heads or 1, cfg.head_dim or 1,
+                          cfg.n_kv_heads or 1)
     key = jax.random.PRNGKey(train_cfg.seed)
     if params is None:
         params = M.init(key, cfg)
@@ -46,48 +61,47 @@ def train(cfg, pipe_cfg: PipelineConfig, train_cfg: TrainConfig,
     opt_state = opt.init(params)
     step_fn = jax.jit(make_train_step(cfg, ctx, opt))
 
-    gen = batches(pipe_cfg, cfg.n_heads or 1, cfg.head_dim or 1,
-                  cfg.n_kv_heads or 1)
     history = []
     t0 = time.time()
-    for step in range(train_cfg.steps):
-        batch = next(gen)
-        stats = batch.pop("schedule_stats", None)
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        if step % train_cfg.log_every == 0 or step == train_cfg.steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
-            m["step"] = step
-            m["wall_s"] = time.time() - t0
-            if stats:
-                m.update({f"sched_{k}": v for k, v in stats.items()})
-            history.append(m)
-            print(f"step {step:5d} loss {m['loss']:.4f} "
-                  f"gnorm {m['grad_norm']:.3f} ({m['wall_s']:.1f}s)")
-        if train_cfg.ckpt_every and step and \
-                step % train_cfg.ckpt_every == 0:
-            ckpt.save(train_cfg.ckpt_dir, step, params, opt_state)
+    try:
+        for step in range(train_cfg.steps):
+            batch = next(gen)
+            stats = batch.pop("schedule_stats", None)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if step % train_cfg.log_every == 0 \
+                    or step == train_cfg.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                m["wall_s"] = time.time() - t0
+                if stats:
+                    m.update({f"sched_{k}": v for k, v in stats.items()})
+                history.append(m)
+                print(f"step {step:5d} loss {m['loss']:.4f} "
+                      f"gnorm {m['grad_norm']:.3f} ({m['wall_s']:.1f}s)")
+            if train_cfg.ckpt_every and step and \
+                    step % train_cfg.ckpt_every == 0:
+                ckpt.save(train_cfg.ckpt_dir, step, params, opt_state)
+    finally:
+        gen.close()      # stops the plan-prefetch worker, if any
     return {"params": params, "opt_state": opt_state, "history": history}
 
 
 def make_cad_context(cfg, pipe_cfg: PipelineConfig, *, kernel="xla",
                      pingpong=False, mesh=None, rules=None,
                      tolerance=0.1) -> ParallelContext:
-    """Build a ParallelContext with CAD enabled and the pipeline configured
-    to attach plans (single-host: global-sim pool; mesh: shard_map)."""
-    from repro.parallel import ShardingRules
-    n = pipe_cfg.n_ranks
-    rows_per_rank = pipe_cfg.global_batch // n
-    tokens_per_rank = rows_per_rank * pipe_cfg.seq_len
-    if pingpong:
-        tokens_per_rank //= 2
-    cadcfg = CADConfig.default(n, tokens_per_rank,
-                               max_doc_tokens=pipe_cfg.max_doc_len)
-    pipe_cfg.cad = cadcfg
+    """Deprecated: build a :class:`repro.cad.CADSession` instead.
+
+    Kept for one release.  Reproduces the old side effect of configuring
+    ``pipe_cfg`` so the legacy ``batches()`` path attaches plans."""
+    warnings.warn(
+        "make_cad_context is deprecated; use "
+        "CADSession.for_pipeline(cfg, pipe_cfg, ...) and pass the session "
+        "to train()", DeprecationWarning, stacklevel=2)
+    session = CADSession.for_pipeline(cfg, pipe_cfg, kernel=kernel,
+                                      pingpong=pingpong,
+                                      tolerance=tolerance, mesh=mesh,
+                                      rules=rules)
+    pipe_cfg.cad = session.cfg
     pipe_cfg.tolerance = tolerance
     pipe_cfg.pingpong = pingpong
-    jmax = max(1, pipe_cfg.max_doc_len // cadcfg.blk)
-    cad = CADContext(cfg=cadcfg, kernel=kernel, jmax=jmax,
-                     pingpong=pingpong)
-    return ParallelContext(mesh=mesh, rules=rules or ShardingRules(),
-                           attn_impl="cad", cad=cad, remat=True,
-                           pingpong=pingpong)
+    return session.context()

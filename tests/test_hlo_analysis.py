@@ -33,8 +33,10 @@ def test_scan_flops_trip_weighted():
     expected = 10 * 2 * 512 ** 3
     assert abs(c.flops - expected) / expected < 0.05, c.flops
     # sanity: XLA's own cost_analysis misses the trip count
-    xla_flops = jax.jit(f).lower(a, b).compile().cost_analysis()["flops"]
-    assert xla_flops < expected / 5
+    ca = jax.jit(f).lower(a, b).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):      # pre-0.5 jax returns a list
+        ca = ca[0]
+    assert ca["flops"] < expected / 5
 
 
 def test_nested_scan():

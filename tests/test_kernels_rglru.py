@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev extra; property tests only
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.rglru import kernel as K
