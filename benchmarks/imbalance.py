@@ -50,8 +50,9 @@ def run(n_batches=10, seq_len=65536, max_doc=32768):
     return rows
 
 
-def main():
-    for r in run():
+def main(fast=False):
+    rows = run(n_batches=2, seq_len=16384, max_doc=8192) if fast else run()
+    for r in rows:
         d = (f"dist={r['dist']};dp={r['dp']};"
              f"attn_div_fixed={r['attn_divergence_fixed']:.2f};"
              f"attn_div_wlb={r['attn_divergence_wlb']:.2f};"
@@ -59,6 +60,7 @@ def main():
              f"mem_div_wlb={r['mem_divergence_wlb']:.2f};"
              f"idle_fixed={r['idle_frac_fixed']:.2f}")
         print(f"fig4_imbalance,0.0,{d}")
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,13 +1,22 @@
-"""Paper Figure 5 analogue: CA kernel throughput vs document-shard length.
+"""Paper Figure 5 analogue: CA kernel throughput vs document-shard length,
+plus a ``--bwd`` mode measuring the hand-written Pallas backward kernels.
 
-A 32K-token fused chunk is packed with shards of a fixed length (context
-sizes sampled); throughput should be flat down to the 128-token kernel
-tile and collapse below it (sub-tile shards waste their whole tile).
+Forward mode: a 32K-token fused chunk is packed with shards of a fixed
+length (context sizes sampled); throughput should be flat down to the
+128-token kernel tile and collapse below it (sub-tile shards waste their
+whole tile).  Two columns: measured us/call of the jitted blockwise XLA
+kernel on this CPU (relative shape of the curve), and the
+cost-model-predicted TPU v5e throughput (absolute, used by the scheduler).
 
-Two columns: measured us/call of the jitted blockwise XLA kernel on this
-CPU (relative shape of the curve), and the cost-model-predicted TPU v5e
-throughput (absolute, used by the scheduler).
+Backward mode (``--bwd``): end-to-end grad call (fwd + bwd) of the Pallas
+``packed_flash_attention`` and ``ca_server_attention`` custom-vjps, with
+the residual-saving Pallas backward vs the blockwise-XLA recompute
+fallback — the A/B the speedup claim rests on.  On CPU the Pallas side
+runs in interpret mode, so absolute numbers only mean something on TPU;
+the CI smoke records both for the perf trajectory.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,12 +26,11 @@ from repro.core.attention import xla_flash_attention
 from repro.core.cost_model import CostModel, ca_flops
 
 
-def run(chunk=8192, hq=4, hkv=2, dh=64):
-    rng = np.random.default_rng(0)
+def run(chunk=8192, hq=4, hkv=2, dh=64, shard_lens=None):
     key = jax.random.PRNGKey(0)
     cm = CostModel.analytic(n_heads=hq, head_dim=dh)
     rows = []
-    for shard_len in (32, 64, 128, 256, 512, 1024, 4096):
+    for shard_len in shard_lens or (32, 64, 128, 256, 512, 1024, 4096):
         n = chunk // shard_len
         seg = np.repeat(np.arange(1, n + 1), shard_len)[None]
         pos = np.tile(np.arange(shard_len), n)[None]
@@ -45,15 +53,109 @@ def run(chunk=8192, hq=4, hkv=2, dh=64):
     return rows
 
 
-def main():
-    rows = run()
+# ------------------------------------------------------------- bwd mode
+def _packed_inputs(S, hq, hkv, dh, n_docs=4):
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, S, hq, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (1, S, hkv, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (1, S, hkv, dh), jnp.float32)
+    ln = S // n_docs
+    seg = np.repeat(np.arange(1, n_docs + 1), ln)[None]
+    pos = np.tile(np.arange(ln), n_docs)[None]
+    return q, k, v, jnp.asarray(seg), jnp.asarray(pos)
+
+
+def _server_inputs(T, blk, hq, hkv, dh, N):
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 3)
+    rng = np.random.default_rng(0)
+    q = jax.random.normal(ks[0], (T, blk, hq, dh), jnp.float32)
+    kb = jax.random.normal(ks[1], (N, blk, hkv, dh), jnp.float32)
+    vb = jax.random.normal(ks[2], (N, blk, hkv, dh), jnp.float32)
+    kv_start = np.zeros(T, np.int32)
+    kv_len = np.zeros(T, np.int32)
+    q_pos = np.zeros((T, blk), np.int32)
+    kv_pos = np.zeros((N, blk), np.int32)
+    for t in range(T):
+        ln = int(rng.integers(1, N + 1))
+        st = int(rng.integers(0, N - ln + 1))
+        kv_start[t], kv_len[t] = st, ln
+        q_pos[t] = np.arange((ln - 1) * blk, ln * blk)
+        for jj in range(ln):
+            kv_pos[st + jj] = np.arange(jj * blk, (jj + 1) * blk)
+    return (q, kb, vb, jnp.asarray(kv_start), jnp.asarray(kv_len),
+            jnp.asarray(q_pos), jnp.asarray(kv_pos))
+
+
+def _grad_us(attn, *qkv):
+    g = jax.jit(jax.grad(lambda a, b, c: jnp.sum(attn(a, b, c) ** 2),
+                         argnums=(0, 1, 2)))
+    return time_call(g, *qkv, warmup=1, iters=3)
+
+
+def run_bwd(fast=False):
+    """Grad-call us for both Pallas ops, Pallas bwd vs XLA-recompute bwd."""
+    from repro.kernels.packed_flash import ops as O
+    S = 256 if fast else 1024
+    T, blk, N = (3, 128, 4) if fast else (8, 128, 12)
+    hq, hkv, dh = 4, 2, 64
+    rows = []
+
+    q, k, v, seg, pos = _packed_inputs(S, hq, hkv, dh)
+    fwd = jax.jit(lambda a, b, c: O.packed_flash_attention(
+        a, b, c, seg, pos, seg, pos))
+    row = {"kernel": "packed_flash", "seq": S,
+           "fwd_us": time_call(fwd, q, k, v, warmup=1, iters=3)}
+    for impl in ("pallas", "xla"):
+        attn = lambda a, b, c, i=impl: O.packed_flash_attention(
+            a, b, c, seg, pos, seg, pos, True, 0, 0.0, None, i)
+        row[f"grad_{impl}_us"] = _grad_us(attn, q, k, v)
+    rows.append(row)
+
+    qs, kb, vb, st, ln, qp, kp = _server_inputs(T, blk, hq, hkv, dh, N)
+    fwd = jax.jit(lambda a, b, c: O.ca_server_attention(
+        a, b, c, st, ln, qp, kp))
+    row = {"kernel": "ca_server", "tasks": T, "kv_blocks": N,
+           "fwd_us": time_call(fwd, qs, kb, vb, warmup=1, iters=3)}
+    for impl in ("pallas", "xla"):
+        attn = lambda a, b, c, i=impl: O.ca_server_attention(
+            a, b, c, st, ln, qp, kp, True, 0, 0.0, None, 0, i)
+        row[f"grad_{impl}_us"] = _grad_us(attn, qs, kb, vb)
+    rows.append(row)
+    return rows
+
+
+def main_bwd(fast=False):
+    rows = run_bwd(fast=fast)
+    for r in rows:
+        d = ";".join(f"{k}={v:.1f}" if isinstance(v, float) else f"{k}={v}"
+                     for k, v in r.items() if k != "grad_pallas_us")
+        print(f"kernel_bwd,{r['grad_pallas_us']:.1f},{d}")
+    return rows
+
+
+def main(fast=False):
+    # fast: chunk small enough for the CI smoke, keeping the sub-tile
+    # collapse (64 < 128-token tile) and one above-tile point visible
+    rows = run(chunk=2048, shard_lens=(64, 128, 512)) if fast else run()
     base = rows[-1]["model_tpu_flops_s"]
     for r in rows:
         d = (f"shard={r['shard_len']};cpu_tput={r['measured_flops_s']:.3e};"
              f"tpu_model_tput={r['model_tpu_flops_s']:.3e};"
              f"rel_model={r['model_tpu_flops_s']/base:.2f}")
         print(f"fig5_kernel_throughput,{r['us']:.1f},{d}")
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--bwd", action="store_true",
+                    help="measure the Pallas backward kernels vs the "
+                         "XLA recompute fallback")
+    args = ap.parse_args()
+    if args.bwd:
+        main_bwd(fast=args.fast)
+    else:
+        main(fast=args.fast)

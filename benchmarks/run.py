@@ -4,15 +4,22 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py format).
   table1_scaling        Table 1   — CA quadratic vs linear scaling
   fig4_imbalance        Fig. 1/4  — packing-induced load/memory divergence
   fig5_kernel_tput      Fig. 5    — CA throughput vs shard length
+  kernel_bwd            §Perf     — Pallas bwd kernels vs XLA recompute
   fig9_e2e              Fig. 9/10 — DistCA vs fixed/WLB throughput
   fig11_overlap         Fig. 11   — ping-pong communication hiding
   fig12_tolerance       Fig. 12   — tolerance factor sweep (real scheduler)
   sched_microbench      §4.2      — scheduler wall-time per batch
   prefetch_microbench   §4.2      — async plan prefetch vs inline planning
 
-Run: PYTHONPATH=src python -m benchmarks.run [--fast]
+Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--json PATH]
+
+``--json PATH`` additionally writes the machine-readable results the CI
+perf-trajectory artifact is built from (kernel fwd/bwd us, packing plan
+imbalance, prefetch overlap) plus environment metadata.
 """
 import argparse
+import json
+import platform
 import sys
 import time
 import traceback
@@ -87,15 +94,20 @@ def prefetch_microbench(fast=False):
         print(f"prefetch_microbench,{walls[mode]/steps*1e6:.1f},"
               f"mode={mode};steps={steps};ranks={n_ranks};"
               f"compute_ms={compute_s*1e3:.1f}")
+    overlap = walls["sync"] / max(walls["async"], 1e-9)
     print(f"prefetch_microbench,{walls['async']/steps*1e6:.1f},"
-          f"mode=speedup;sync_over_async="
-          f"{walls['sync']/max(walls['async'], 1e-9):.2f}")
+          f"mode=speedup;sync_over_async={overlap:.2f}")
+    return {"sync_us_per_step": walls["sync"] / steps * 1e6,
+            "async_us_per_step": walls["async"] / steps * 1e6,
+            "sync_over_async": overlap}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable results (BENCH_ci.json)")
     args = ap.parse_args()
 
     from benchmarks import (cp_overheads, dedicated_pool, e2e_sim,
@@ -104,8 +116,9 @@ def main() -> None:
     benches = {
         "table1": table1_scaling.main,
         "fig3": cp_overheads.main,
-        "fig4": imbalance.main,
-        "fig5": kernel_throughput.main,
+        "fig4": lambda: imbalance.main(fast=args.fast),
+        "fig5": lambda: kernel_throughput.main(fast=args.fast),
+        "kernel_bwd": lambda: kernel_throughput.main_bwd(fast=args.fast),
         "fig9": lambda: e2e_sim.main(fast=args.fast),
         "fig10": lambda: pp_bubbles.main(fast=args.fast),
         "fig11": lambda: overlap.main(fast=args.fast),
@@ -114,16 +127,38 @@ def main() -> None:
         "prefetch": lambda: prefetch_microbench(fast=args.fast),
         "dedicated": dedicated_pool.main,
     }
-    failed = 0
+    # the machine-readable subset: kernel fwd/bwd, plan imbalance,
+    # prefetch overlap — the CI perf trajectory
+    json_keys = ("fig5", "kernel_bwd", "fig4", "prefetch")
+    results, failed = {}, 0
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
         try:
-            fn()
+            out = fn()
+            if out is not None and name in json_keys:
+                results[name.replace("fig5", "kernel_fwd")
+                        .replace("fig4", "plan_imbalance")] = out
         except Exception:
             failed += 1
             traceback.print_exc()
             print(f"{name},nan,ERROR")
+    if args.json:
+        import jax
+        payload = {
+            "meta": {
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "python": platform.python_version(),
+                "platform": platform.platform(),
+                "fast": args.fast,
+                "failed_benchmarks": failed,
+            },
+            "results": results,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, default=float)
+        print(f"json_results,{len(results)},path={args.json}")
     sys.exit(1 if failed else 0)
 
 

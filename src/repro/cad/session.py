@@ -46,6 +46,7 @@ class CADSession:
     """Immutable description of the attention service for one run."""
     cfg: CADConfig
     kernel: str = "xla"            # "xla" | "pallas" server implementation
+    bwd: Optional[str] = None      # None (default) | "pallas" | "xla"
     pingpong: bool = False
     tolerance: float = 0.1
     plan_policy: str = "balanced"
@@ -89,8 +90,8 @@ class CADSession:
     def context(self, *, remat: bool = True) -> ParallelContext:
         """The ParallelContext consumers jit against.  Plans are bound per
         step by the train step (``CADContext.bind_plan``)."""
-        cad = CADContext(cfg=self.cfg, kernel=self.kernel, jmax=self.jmax,
-                         pingpong=self.pingpong)
+        cad = CADContext(cfg=self.cfg, kernel=self.kernel, bwd=self.bwd,
+                         jmax=self.jmax, pingpong=self.pingpong)
         return ParallelContext(mesh=self.mesh,
                                rules=self.rules or ShardingRules(),
                                attn_impl="cad", cad=cad, remat=remat,

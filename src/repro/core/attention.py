@@ -397,7 +397,8 @@ def core_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
     if impl == "pallas":
         from repro.kernels.packed_flash import ops as pf_ops
         return pf_ops.packed_flash_attention(
-            q, k, v, seg_q, pos_q, seg_kv, pos_kv, **kw)
+            q, k, v, seg_q, pos_q, seg_kv, pos_kv,
+            bwd_impl=getattr(ctx, "attn_bwd", None), **kw)
     if impl == "cad":
         from repro.core import dispatch as cad_dispatch
         return cad_dispatch.cad_attention(

@@ -48,6 +48,7 @@ class CADContext:
     cfg: CADConfig
     plan: Any = None          # StepPlan | PingPongPlan | legacy dict/tuple
     kernel: str = "pallas"    # "pallas" | "xla" server implementation
+    bwd: Any = None           # None (backend default) | "pallas" | "xla"
     jmax: int = 0             # max kv blocks any task touches (0 -> nkv)
     pingpong: bool = False
 
@@ -241,7 +242,7 @@ def _serve(q_tasks, qpos_tasks, k_buf, v_buf, kpos_buf, plan, cad,
         return ca_server_attention(
             q_tasks, k_buf, v_buf, plan["task_kv_start"],
             plan["task_kv_len"], qpos_tasks, kpos_buf,
-            True, window, softcap, scale)
+            True, window, softcap, scale, jmax, cad.bwd)
     return _xla_server(q_tasks, k_buf, v_buf, plan["task_kv_start"],
                        plan["task_kv_len"], qpos_tasks, kpos_buf,
                        jmax, softcap, window, scale)

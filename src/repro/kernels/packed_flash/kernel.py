@@ -1,6 +1,6 @@
 """Pallas TPU kernels for packed flash attention.
 
-Two kernels:
+Forward kernels:
 
 1. ``flash_fwd`` — packed-document self-attention over a chunk.  Grid
    (B, Hq, nq, nk) with the kv dimension innermost/sequential; online
@@ -8,7 +8,8 @@ Two kernels:
    (i, j) pairs above the diagonal; window pruning skips pairs entirely
    outside the sliding window.  Blocks are 128-aligned to the MXU —
    exactly the tile constraint the paper leans on (FA2's 128-token tile,
-   §3.3 Fig. 5).
+   §3.3 Fig. 5).  With ``return_lse`` the per-row log-sum-exp is written
+   as a second output — the residual the backward kernels need.
 
 2. ``ca_server_fwd`` — the attention-server kernel: a fused batch of
    CA-tasks (q-block, kv-prefix-range), where the kv range of each task is
@@ -16,8 +17,30 @@ Two kernels:
    data-dependent BlockSpec index maps.  This is the TPU-native analogue
    of FA2 varlen batching that DistCA's attention servers rely on.
 
-Both are validated in interpret mode against ref.py; on TPU they compile
-with explicit VMEM BlockSpecs.
+Backward kernels (flash-style, recompute-free: ``p`` is rebuilt from the
+saved ``(out, lse)`` residuals instead of a second online-softmax pass):
+
+3. ``flash_bwd`` — two grid passes.  dq iterates kv blocks innermost and
+   accumulates one q-block's gradient in VMEM scratch; dk/dv iterates
+   q blocks innermost and accumulates one kv-block's gradients.  Both
+   reuse the forward's causal/window block pruning, so the backward
+   touches exactly the forward's (i, j) pairs.
+
+4. ``ca_server_bwd`` — the attention-server backward, honoring the same
+   per-task ``kv_start``/``kv_len`` scalar-prefetch layout: dq walks each
+   task's kv range; dk/dv inverts the mapping with a (kv-block, task)
+   grid whose body is predicated on "task t's range covers block n", a
+   scalar-prefetch condition — so servers run balanced bwd tasks in place
+   (paper §4 ping-pong symmetry between fwd and bwd tasks).
+
+GQA note: the dk/dv passes emit per-*query*-head gradients; the jnp
+wrappers fold the repeat groups back onto kv heads.  That costs rep× the
+final dk/dv footprint in f32 intermediates — accumulating the repeat
+group in-kernel (q-heads folded into the sequential grid dim) is a
+recorded §Perf follow-up; it changes memory, not semantics.
+
+All kernels are validated in interpret mode against ref.py; on TPU they
+compile with explicit VMEM BlockSpecs.
 """
 from __future__ import annotations
 
@@ -40,11 +63,35 @@ def _mxu_dot(a, b):
                                preferred_element_type=jnp.float32)
 
 
+LSE_DEAD = 2.0 ** 30   # lse of a fully-masked row: exp(x - LSE_DEAD) == 0
+
+
+def _capped_masked_logits(q, k, m, scale, softcap):
+    """Scaled, softcapped, masked logits — shared by fwd and bwd bodies."""
+    logits = _mxu_dot(q, k.T) * scale
+    if softcap and softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return jnp.where(m, logits, NEG_INF)
+
+
+def _ds_from_p(p, dp, delta, logits, m, scale, softcap):
+    """dL/d(q k^T): softmax bwd + softcap chain rule + scale."""
+    ds = p * (dp - delta[:, None])
+    if softcap and softcap > 0:
+        sc = jnp.where(m, logits / softcap, 0.0)
+        ds = ds * (1.0 - sc * sc)
+    return ds * scale
+
+
 # ----------------------------------------------------------- packed flash
 def _flash_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
-                  q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *,
-                  scale, softcap, causal, window, blk_q, blk_k, nk):
+                  q_ref, k_ref, v_ref, *rest,
+                  scale, softcap, causal, window, blk_q, blk_k, nk,
+                  save_lse=False):
+    if save_lse:
+        o_ref, lse_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        (o_ref, m_scr, l_scr, acc_scr), lse_ref = rest, None
     i = pl.program_id(2)
     j = pl.program_id(3)
 
@@ -66,20 +113,9 @@ def _flash_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
         q = q_ref[0, :, 0, :].astype(jnp.float32)      # [blk_q, dh]
         k = k_ref[0, :, 0, :].astype(jnp.float32)      # [blk_k, dh]
         v = v_ref[0, :, 0, :].astype(jnp.float32)
-        logits = _mxu_dot(q, k.T) * scale              # [blk_q, blk_k]
-        if softcap and softcap > 0:
-            logits = jnp.tanh(logits / softcap) * softcap
-        sq = seg_q_ref[0, :]
-        pq = pos_q_ref[0, :]
-        sk = seg_k_ref[0, :]
-        pk = pos_k_ref[0, :]
-        m = (sq[:, None] == sk[None, :]) & (sq[:, None] > 0) \
-            & (sk[None, :] > 0)
-        if causal:
-            m &= pq[:, None] >= pk[None, :]
-        if window and window > 0:
-            m &= (pq[:, None] - pk[None, :]) < window
-        logits = jnp.where(m, logits, NEG_INF)
+        m = _flash_mask(seg_q_ref[0, :], pos_q_ref[0, :],
+                        seg_k_ref[0, :], pos_k_ref[0, :], causal, window)
+        logits = _capped_masked_logits(q, k, m, scale, softcap)
 
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, logits.max(axis=-1))
@@ -94,14 +130,19 @@ def _flash_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
     @pl.when(j == nk - 1)
     def _finalize():
         l = l_scr[...]
+        live = m_scr[...] > NEG_INF / 2
         out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
-        out = jnp.where((m_scr[...] > NEG_INF / 2)[:, None], out, 0.0)
+        out = jnp.where(live[:, None], out, 0.0)
         o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+        if lse_ref is not None:
+            lse = m_scr[...] + jnp.log(jnp.maximum(l, 1e-30))
+            lse_ref[0, 0, :] = jnp.where(live, lse, LSE_DEAD)
 
 
 def flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
               window=0, softcap=0.0, scale=None,
-              blk_q=DEFAULT_BLOCK, blk_k=DEFAULT_BLOCK, interpret=True):
+              blk_q=DEFAULT_BLOCK, blk_k=DEFAULT_BLOCK, interpret=True,
+              return_lse=False):
     b, sq, hq, dh = q.shape
     skv, hkv = k.shape[1], k.shape[2]
     rep = hq // hkv
@@ -114,7 +155,17 @@ def flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
     grid = (b, hq, nq, nk)
     kernel = functools.partial(
         _flash_kernel, scale=scale, softcap=softcap, causal=causal,
-        window=window, blk_q=blk_q, blk_k=blk_k, nk=nk)
+        window=window, blk_q=blk_q, blk_k=blk_k, nk=nk,
+        save_lse=return_lse)
+    out_shape = jax.ShapeDtypeStruct((b, sq, hq, dh), q.dtype)
+    out_specs = pl.BlockSpec((1, blk_q, 1, dh),
+                             lambda b_, h, i, j: (b_, i, h, 0))
+    if return_lse:
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct((b, hq, sq), jnp.float32))
+        out_specs = (out_specs,
+                     pl.BlockSpec((1, 1, blk_q),
+                                  lambda b_, h, i, j: (b_, h, i)))
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -129,9 +180,8 @@ def flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
             pl.BlockSpec((1, blk_k, 1, dh),
                          lambda b_, h, i, j, r=rep: (b_, j, h // r, 0)),
         ],
-        out_specs=pl.BlockSpec((1, blk_q, 1, dh),
-                               lambda b_, h, i, j: (b_, i, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, sq, hq, dh), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((blk_q,), jnp.float32),
             pltpu.VMEM((blk_q,), jnp.float32),
@@ -144,11 +194,192 @@ def flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
     )(seg_q, pos_q, seg_kv, pos_kv, q, k, v)
 
 
+# ---------------------------------------------------- packed flash bwd
+def _flash_mask(sq, pq, sk, pk, causal, window):
+    m = (sq[:, None] == sk[None, :]) & (sq[:, None] > 0) & (sk[None, :] > 0)
+    if causal:
+        m &= pq[:, None] >= pk[None, :]
+    if window and window > 0:
+        m &= (pq[:, None] - pk[None, :]) < window
+    return m
+
+
+def _flash_bwd_dq_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
+                         q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                         dq_ref, dq_scr, *,
+                         scale, softcap, causal, window, blk_q, blk_k, nk):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    run = jnp.asarray(True)
+    if causal:
+        run = run & (j * blk_k < (i + 1) * blk_q)
+    if window and window > 0:
+        run = run & ((j + 1) * blk_k - 1 >= i * blk_q - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        m = _flash_mask(seg_q_ref[0, :], pos_q_ref[0, :],
+                        seg_k_ref[0, :], pos_k_ref[0, :], causal, window)
+        logits = _capped_masked_logits(q, k, m, scale, softcap)
+        lse = lse_ref[0, 0, :]
+        p = jnp.where(m, jnp.exp(logits - lse[:, None]), 0.0)
+        dp = _mxu_dot(do, v.T)
+        ds = _ds_from_p(p, dp, delta_ref[0, 0, :], logits, m, scale,
+                        softcap)
+        dq_scr[...] += _mxu_dot(ds, k)
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        dq_ref[0, :, 0, :] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
+                          q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                          dk_ref, dv_ref, dk_scr, dv_scr, *,
+                          scale, softcap, causal, window, blk_q, blk_k, nq):
+    j = pl.program_id(2)
+    i = pl.program_id(3)
+
+    @pl.when(i == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    run = jnp.asarray(True)
+    if causal:
+        run = run & (j * blk_k < (i + 1) * blk_q)
+    if window and window > 0:
+        run = run & ((j + 1) * blk_k - 1 >= i * blk_q - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        m = _flash_mask(seg_q_ref[0, :], pos_q_ref[0, :],
+                        seg_k_ref[0, :], pos_k_ref[0, :], causal, window)
+        logits = _capped_masked_logits(q, k, m, scale, softcap)
+        lse = lse_ref[0, 0, :]
+        p = jnp.where(m, jnp.exp(logits - lse[:, None]), 0.0)
+        dv_scr[...] += _mxu_dot(p.T, do)
+        dp = _mxu_dot(do, v.T)
+        ds = _ds_from_p(p, dp, delta_ref[0, 0, :], logits, m, scale,
+                        softcap)
+        dk_scr[...] += _mxu_dot(ds.T, q)
+
+    @pl.when(i == nq - 1)
+    def _finalize():
+        dk_ref[0, :, 0, :] = dk_scr[...]
+        dv_ref[0, :, 0, :] = dv_scr[...]
+
+
+def flash_bwd(q, k, v, out, lse, do, seg_q, pos_q, seg_kv, pos_kv, *,
+              causal=True, window=0, softcap=0.0, scale=None,
+              blk_q=DEFAULT_BLOCK, blk_k=DEFAULT_BLOCK, interpret=True):
+    """Hand-written backward for ``flash_fwd`` from saved (out, lse).
+
+    Two passes over the same pruned (i, j) block pairs as the forward:
+    a dq pass (kv innermost) and a dk/dv pass (q innermost).  Per-q-head
+    dk/dv are folded back onto kv heads here (GQA)."""
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, skv)
+    assert sq % blk_q == 0 and skv % blk_k == 0, "pad seq to block size"
+    nq, nk = sq // blk_q, skv // blk_k
+
+    # delta_i = rowsum(do * out) — linear precompute shared by both passes
+    delta = jnp.einsum("bqhd,bqhd->bhq", do.astype(jnp.float32),
+                       out.astype(jnp.float32))
+
+    seg_spec_q = pl.BlockSpec((1, blk_q), lambda b_, h, i, j: (b_, i))
+    seg_spec_k = pl.BlockSpec((1, blk_k), lambda b_, h, i, j: (b_, j))
+    q_spec = pl.BlockSpec((1, blk_q, 1, dh),
+                          lambda b_, h, i, j: (b_, i, h, 0))
+    kv_spec = pl.BlockSpec((1, blk_k, 1, dh),
+                           lambda b_, h, i, j, r=rep: (b_, j, h // r, 0))
+    row_spec = pl.BlockSpec((1, 1, blk_q), lambda b_, h, i, j: (b_, h, i))
+
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, scale=scale,
+                          softcap=softcap, causal=causal, window=window,
+                          blk_q=blk_q, blk_k=blk_k, nk=nk),
+        grid=(b, hq, nq, nk),
+        in_specs=[seg_spec_q, seg_spec_q, seg_spec_k, seg_spec_k,
+                  q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sq, hq, dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((blk_q, dh), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(seg_q, pos_q, seg_kv, pos_kv, q, k, v, do, lse, delta)
+
+    # dk/dv pass: grid transposed, q-block dim innermost/sequential; the
+    # index maps see grid ids (b, h, j, i)
+    seg_spec_qT = pl.BlockSpec((1, blk_q), lambda b_, h, j, i: (b_, i))
+    seg_spec_kT = pl.BlockSpec((1, blk_k), lambda b_, h, j, i: (b_, j))
+    q_specT = pl.BlockSpec((1, blk_q, 1, dh),
+                           lambda b_, h, j, i: (b_, i, h, 0))
+    kv_specT = pl.BlockSpec((1, blk_k, 1, dh),
+                            lambda b_, h, j, i, r=rep: (b_, j, h // r, 0))
+    kv_out_specT = pl.BlockSpec((1, blk_k, 1, dh),
+                                lambda b_, h, j, i: (b_, j, h, 0))
+    row_specT = pl.BlockSpec((1, 1, blk_q), lambda b_, h, j, i: (b_, h, i))
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, scale=scale,
+                          softcap=softcap, causal=causal, window=window,
+                          blk_q=blk_q, blk_k=blk_k, nq=nq),
+        grid=(b, hq, nk, nq),
+        in_specs=[seg_spec_qT, seg_spec_qT, seg_spec_kT, seg_spec_kT,
+                  q_specT, kv_specT, kv_specT, q_specT, row_specT,
+                  row_specT],
+        out_specs=(kv_out_specT, kv_out_specT),
+        out_shape=(jax.ShapeDtypeStruct((b, skv, hq, dh), jnp.float32),
+                   jax.ShapeDtypeStruct((b, skv, hq, dh), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((blk_k, dh), jnp.float32),
+                        pltpu.VMEM((blk_k, dh), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(seg_q, pos_q, seg_kv, pos_kv, q, k, v, do, lse, delta)
+    dk = dk_h.reshape(b, skv, hkv, rep, dh).sum(3).astype(k.dtype)
+    dv = dv_h.reshape(b, skv, hkv, rep, dh).sum(3).astype(v.dtype)
+    return dq, dk, dv
+
+
 # ------------------------------------------------------- CA-server kernel
+def _ca_mask(pq, pk, causal, window):
+    m = (pq[:, None] >= 0) & (pk[None, :] >= 0)
+    if causal:
+        m &= pq[:, None] >= pk[None, :]
+    if window and window > 0:
+        m &= (pq[:, None] - pk[None, :]) < window
+    return m
+
+
 def _ca_server_kernel(kv_start_ref, kv_len_ref,       # scalar prefetch
-                      q_pos_ref, kv_pos_ref, q_ref, k_ref, v_ref, o_ref,
-                      m_scr, l_scr, acc_scr, *,
-                      scale, softcap, causal, window, jmax):
+                      q_pos_ref, kv_pos_ref, q_ref, k_ref, v_ref, *rest,
+                      scale, softcap, causal, window, jmax,
+                      save_lse=False):
+    if save_lse:
+        o_ref, lse_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        (o_ref, m_scr, l_scr, acc_scr), lse_ref = rest, None
     t = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -163,17 +394,8 @@ def _ca_server_kernel(kv_start_ref, kv_len_ref,       # scalar prefetch
         q = q_ref[0, :, 0, :].astype(jnp.float32)
         k = k_ref[0, :, 0, :].astype(jnp.float32)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
-        logits = _mxu_dot(q, k.T) * scale
-        if softcap and softcap > 0:
-            logits = jnp.tanh(logits / softcap) * softcap
-        pq = q_pos_ref[0, :]
-        pk = kv_pos_ref[0, :]
-        m = (pq[:, None] >= 0) & (pk[None, :] >= 0)
-        if causal:
-            m &= pq[:, None] >= pk[None, :]
-        if window and window > 0:
-            m &= (pq[:, None] - pk[None, :]) < window
-        logits = jnp.where(m, logits, NEG_INF)
+        m = _ca_mask(q_pos_ref[0, :], kv_pos_ref[0, :], causal, window)
+        logits = _capped_masked_logits(q, k, m, scale, softcap)
 
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, logits.max(axis=-1))
@@ -188,14 +410,18 @@ def _ca_server_kernel(kv_start_ref, kv_len_ref,       # scalar prefetch
     @pl.when(j == jmax - 1)
     def _finalize():
         l = l_scr[...]
+        live = m_scr[...] > NEG_INF / 2
         out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
-        out = jnp.where((m_scr[...] > NEG_INF / 2)[:, None], out, 0.0)
+        out = jnp.where(live[:, None], out, 0.0)
         o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+        if lse_ref is not None:
+            lse = m_scr[...] + jnp.log(jnp.maximum(l, 1e-30))
+            lse_ref[0, 0, :] = jnp.where(live, lse, LSE_DEAD)
 
 
 def ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, *,
                   causal=True, window=0, softcap=0.0, scale=None,
-                  jmax=None, interpret=True):
+                  jmax=None, interpret=True, return_lse=False):
     """Fused CA-task batch (see ref.ref_ca_server_attention for semantics).
 
     q_tasks [T,blk,Hq,dh]; k_buf/v_buf [N,blk,Hkv,dh]; kv_start/kv_len [T];
@@ -216,7 +442,16 @@ def ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, *,
 
     kernel = functools.partial(
         _ca_server_kernel, scale=scale, softcap=softcap, causal=causal,
-        window=window, jmax=jmax)
+        window=window, jmax=jmax, save_lse=return_lse)
+    out_shape = jax.ShapeDtypeStruct((T, blk, hq, dh), q_tasks.dtype)
+    out_specs = pl.BlockSpec((1, blk, 1, dh),
+                             lambda t, h, j, st, ln: (t, 0, h, 0))
+    if return_lse:
+        out_shape = (out_shape,
+                     jax.ShapeDtypeStruct((T, hq, blk), jnp.float32))
+        out_specs = (out_specs,
+                     pl.BlockSpec((1, 1, blk),
+                                  lambda t, h, j, st, ln: (t, h, 0)))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(T, hq, jmax),
@@ -227,8 +462,7 @@ def ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, *,
             pl.BlockSpec((1, blk, 1, dh), kv_index),
             pl.BlockSpec((1, blk, 1, dh), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, blk, 1, dh),
-                               lambda t, h, j, st, ln: (t, 0, h, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((blk,), jnp.float32),
             pltpu.VMEM((blk,), jnp.float32),
@@ -238,8 +472,176 @@ def ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, *,
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((T, blk, hq, dh), q_tasks.dtype),
+        out_shape=out_shape,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(kv_start, kv_len, q_pos, kv_pos, q_tasks, k_buf, v_buf)
+
+
+# --------------------------------------------------- CA-server backward
+def _ca_bwd_dq_kernel(kv_start_ref, kv_len_ref,       # scalar prefetch
+                      q_pos_ref, kv_pos_ref, q_ref, k_ref, v_ref, do_ref,
+                      lse_ref, delta_ref, dq_ref, dq_scr, *,
+                      scale, softcap, causal, window, jmax):
+    t = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    @pl.when(j < kv_len_ref[t])
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        m = _ca_mask(q_pos_ref[0, :], kv_pos_ref[0, :], causal, window)
+        logits = _capped_masked_logits(q, k, m, scale, softcap)
+        lse = lse_ref[0, 0, :]
+        p = jnp.where(m, jnp.exp(logits - lse[:, None]), 0.0)
+        dp = _mxu_dot(do, v.T)
+        ds = _ds_from_p(p, dp, delta_ref[0, 0, :], logits, m, scale,
+                        softcap)
+        dq_scr[...] += _mxu_dot(ds, k)
+
+    @pl.when(j == jmax - 1)
+    def _finalize():
+        dq_ref[0, :, 0, :] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _ca_bwd_dkv_kernel(kv_start_ref, kv_len_ref,      # scalar prefetch
+                       q_pos_ref, kv_pos_ref, q_ref, k_ref, v_ref, do_ref,
+                       lse_ref, delta_ref, dk_ref, dv_ref,
+                       dk_scr, dv_scr, *,
+                       scale, softcap, causal, window, n_tasks):
+    n = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    # task t touches kv block n iff its prefix range covers it — a pure
+    # scalar-prefetch predicate, so untouched (block, task) pairs skip the
+    # whole body (the bwd analogue of the fwd's j < kv_len pruning)
+    covers = (kv_start_ref[t] <= n) & (n < kv_start_ref[t] + kv_len_ref[t])
+
+    @pl.when(covers)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        m = _ca_mask(q_pos_ref[0, :], kv_pos_ref[0, :], causal, window)
+        logits = _capped_masked_logits(q, k, m, scale, softcap)
+        lse = lse_ref[0, 0, :]
+        p = jnp.where(m, jnp.exp(logits - lse[:, None]), 0.0)
+        dv_scr[...] += _mxu_dot(p.T, do)
+        dp = _mxu_dot(do, v.T)
+        ds = _ds_from_p(p, dp, delta_ref[0, 0, :], logits, m, scale,
+                        softcap)
+        dk_scr[...] += _mxu_dot(ds.T, q)
+
+    @pl.when(t == n_tasks - 1)
+    def _finalize():
+        dk_ref[0, :, 0, :] = dk_scr[...]
+        dv_ref[0, :, 0, :] = dv_scr[...]
+
+
+def ca_server_bwd(q_tasks, k_buf, v_buf, out, lse, do, kv_start, kv_len,
+                  q_pos, kv_pos, *, causal=True, window=0, softcap=0.0,
+                  scale=None, jmax=None, interpret=True):
+    """Hand-written backward for ``ca_server_fwd`` from saved (out, lse).
+
+    dq walks each task's kv prefix range exactly like the forward (same
+    scalar-prefetch index maps).  dk/dv inverts the task→kv-range mapping
+    with an (kv-block, head, task) grid predicated on range coverage, so
+    every kv block accumulates only the tasks whose prefix contains it."""
+    T, blk, hq, dh = q_tasks.shape
+    N, _, hkv, _ = k_buf.shape
+    rep = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    jmax = jmax or N
+
+    delta = jnp.einsum("tqhd,tqhd->thq", do.astype(jnp.float32),
+                       out.astype(jnp.float32))
+
+    def kv_index(t, h, j, starts, lens, r=rep):
+        return (jnp.minimum(starts[t] + j, N - 1), 0, h // r, 0)
+
+    def kvpos_index(t, h, j, starts, lens):
+        return (jnp.minimum(starts[t] + j, N - 1), 0)
+
+    dq_grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T, hq, jmax),
+        in_specs=[
+            pl.BlockSpec((1, blk), lambda t, h, j, st, ln: (t, 0)),
+            pl.BlockSpec((1, blk), kvpos_index),
+            pl.BlockSpec((1, blk, 1, dh),
+                         lambda t, h, j, st, ln: (t, 0, h, 0)),
+            pl.BlockSpec((1, blk, 1, dh), kv_index),
+            pl.BlockSpec((1, blk, 1, dh), kv_index),
+            pl.BlockSpec((1, blk, 1, dh),
+                         lambda t, h, j, st, ln: (t, 0, h, 0)),
+            pl.BlockSpec((1, 1, blk), lambda t, h, j, st, ln: (t, h, 0)),
+            pl.BlockSpec((1, 1, blk), lambda t, h, j, st, ln: (t, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk, 1, dh),
+                               lambda t, h, j, st, ln: (t, 0, h, 0)),
+        scratch_shapes=[pltpu.VMEM((blk, dh), jnp.float32)],
+    )
+    dq = pl.pallas_call(
+        functools.partial(_ca_bwd_dq_kernel, scale=scale, softcap=softcap,
+                          causal=causal, window=window, jmax=jmax),
+        grid_spec=dq_grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, blk, hq, dh), q_tasks.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_start, kv_len, q_pos, kv_pos, q_tasks, k_buf, v_buf, do, lse,
+      delta)
+
+    dkv_grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N, hq, T),
+        in_specs=[
+            pl.BlockSpec((1, blk), lambda n, h, t, st, ln: (t, 0)),
+            pl.BlockSpec((1, blk), lambda n, h, t, st, ln: (n, 0)),
+            pl.BlockSpec((1, blk, 1, dh),
+                         lambda n, h, t, st, ln: (t, 0, h, 0)),
+            pl.BlockSpec((1, blk, 1, dh),
+                         lambda n, h, t, st, ln, r=rep: (n, 0, h // r, 0)),
+            pl.BlockSpec((1, blk, 1, dh),
+                         lambda n, h, t, st, ln, r=rep: (n, 0, h // r, 0)),
+            pl.BlockSpec((1, blk, 1, dh),
+                         lambda n, h, t, st, ln: (t, 0, h, 0)),
+            pl.BlockSpec((1, 1, blk), lambda n, h, t, st, ln: (t, h, 0)),
+            pl.BlockSpec((1, 1, blk), lambda n, h, t, st, ln: (t, h, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, blk, 1, dh),
+                         lambda n, h, t, st, ln: (n, 0, h, 0)),
+            pl.BlockSpec((1, blk, 1, dh),
+                         lambda n, h, t, st, ln: (n, 0, h, 0)),
+        ),
+        scratch_shapes=[pltpu.VMEM((blk, dh), jnp.float32),
+                        pltpu.VMEM((blk, dh), jnp.float32)],
+    )
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_ca_bwd_dkv_kernel, scale=scale, softcap=softcap,
+                          causal=causal, window=window, n_tasks=T),
+        grid_spec=dkv_grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((N, blk, hq, dh), jnp.float32),
+                   jax.ShapeDtypeStruct((N, blk, hq, dh), jnp.float32)),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_start, kv_len, q_pos, kv_pos, q_tasks, k_buf, v_buf, do, lse,
+      delta)
+    dk = dk_h.reshape(N, blk, hkv, rep, dh).sum(3).astype(k_buf.dtype)
+    dv = dv_h.reshape(N, blk, hkv, rep, dh).sum(3).astype(v_buf.dtype)
+    return dq, dk, dv

@@ -1,44 +1,67 @@
 """Jit'd wrappers for the packed-flash kernels with training-ready VJPs.
 
-Forward runs the Pallas kernel (interpret=True on CPU, compiled on TPU).
-Backward is flash-style recompute expressed in blockwise jnp — numerically
-the same function, so JAX autodiff of the blockwise form is the transpose
-of the kernel.  (A hand-written Pallas backward is a recorded §Perf
-follow-up; it changes throughput, not semantics.)
+Forward runs the Pallas kernel (interpret=True on CPU, compiled on TPU)
+and saves the flash residuals ``(out, lse)``.  Backward runs the
+hand-written Pallas backward kernels (``kernel.flash_bwd`` /
+``kernel.ca_server_bwd``) — recompute-free, rebuilding attention weights
+from the saved log-sum-exp instead of re-deriving them via ``jax.vjp``
+over a forward re-run.
+
+The previous blockwise-jnp recompute backward is kept as an explicit
+fallback: pass ``bwd_impl="xla"`` (or set ``REPRO_KERNEL_BWD=xla``) to
+select it — e.g. on backends where even interpret-mode Pallas is
+undesirable, or to A/B the two in ``benchmarks.kernel_throughput --bwd``.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import attention as A
 from repro.kernels.packed_flash import kernel as K
-from repro.kernels.packed_flash import ref as R
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def _resolve_bwd(bwd_impl) -> str:
+    """"pallas" | "xla"; None defers to $REPRO_KERNEL_BWD (default pallas)."""
+    impl = bwd_impl or os.environ.get("REPRO_KERNEL_BWD", "pallas")
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown kernel bwd impl {impl!r}")
+    return impl
+
+
+# ------------------------------------------------------------ packed flash
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11))
 def packed_flash_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
-                           causal=True, window=0, softcap=0.0, scale=None):
+                           causal=True, window=0, softcap=0.0, scale=None,
+                           bwd_impl=None):
     return K.flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal=causal,
                        window=window, softcap=softcap, scale=scale,
                        interpret=not _on_tpu())
 
 
 def _pf_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal, window, softcap,
-            scale):
-    out = packed_flash_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
-                                 causal, window, softcap, scale)
-    return out, (q, k, v, seg_q, pos_q, seg_kv, pos_kv)
+            scale, bwd_impl):
+    out, lse = K.flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
+                           causal=causal, window=window, softcap=softcap,
+                           scale=scale, interpret=not _on_tpu(),
+                           return_lse=True)
+    return out, (q, k, v, seg_q, pos_q, seg_kv, pos_kv, out, lse)
 
 
-def _pf_bwd(causal, window, softcap, scale, res, g):
-    q, k, v, seg_q, pos_q, seg_kv, pos_kv = res
+def _pf_bwd(causal, window, softcap, scale, bwd_impl, res, g):
+    q, k, v, seg_q, pos_q, seg_kv, pos_kv, out, lse = res
+    if _resolve_bwd(bwd_impl) == "pallas":
+        dq, dk, dv = K.flash_bwd(q, k, v, out, lse, g, seg_q, pos_q,
+                                 seg_kv, pos_kv, causal=causal,
+                                 window=window, softcap=softcap,
+                                 scale=scale, interpret=not _on_tpu())
+        return dq, dk, dv, None, None, None, None
     f = lambda q_, k_, v_: A.xla_flash_attention(
         q_, k_, v_, seg_q, pos_q, seg_kv, pos_kv, causal=causal,
         window=window, softcap=softcap, scale=scale)
@@ -50,29 +73,52 @@ def _pf_bwd(causal, window, softcap, scale, res, g):
 packed_flash_attention.defvjp(_pf_fwd, _pf_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+# -------------------------------------------------------------- CA server
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12))
 def ca_server_attention(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
                         kv_pos, causal=True, window=0, softcap=0.0,
-                        scale=None):
-    """Fused CA-task batch on an attention server (paper §4.1)."""
+                        scale=None, jmax=0, bwd_impl=None):
+    """Fused CA-task batch on an attention server (paper §4.1).
+
+    ``jmax`` bounds the kv blocks any task may touch (0 -> all of k_buf);
+    the scheduler's plan guarantees every ``kv_len`` fits under it."""
     return K.ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
                            kv_pos, causal=causal, window=window,
-                           softcap=softcap, scale=scale,
+                           softcap=softcap, scale=scale, jmax=jmax or None,
                            interpret=not _on_tpu())
 
 
 def _ca_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
-            causal, window, softcap, scale):
-    out = ca_server_attention(q_tasks, k_buf, v_buf, kv_start, kv_len,
-                              q_pos, kv_pos, causal, window, softcap, scale)
-    return out, (q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos)
+            causal, window, softcap, scale, jmax, bwd_impl):
+    out, lse = K.ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len,
+                               q_pos, kv_pos, causal=causal, window=window,
+                               softcap=softcap, scale=scale,
+                               jmax=jmax or None, interpret=not _on_tpu(),
+                               return_lse=True)
+    return out, (q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
+                 out, lse)
 
 
-def _ca_bwd(causal, window, softcap, scale, res, g):
-    q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos = res
-    f = lambda q_, k_, v_: R.ref_ca_server_attention(
-        q_, k_, v_, kv_start, kv_len, q_pos, kv_pos, causal=causal,
-        window=window, softcap=softcap, scale=scale)
+def _ca_bwd(causal, window, softcap, scale, jmax, bwd_impl, res, g):
+    q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, out, lse = res
+    if _resolve_bwd(bwd_impl) == "pallas":
+        dq, dk, dv = K.ca_server_bwd(
+            q_tasks, k_buf, v_buf, out, lse, g, kv_start, kv_len, q_pos,
+            kv_pos, causal=causal, window=window, softcap=softcap,
+            scale=scale, jmax=jmax or None, interpret=not _on_tpu())
+        return dq, dk, dv, None, None, None, None
+    if causal:
+        # blockwise-jnp recompute fallback — the attention-server scan
+        # path (dispatch._xla_server_bwd); its mask is causal-only
+        from repro.core import dispatch as D
+        f = lambda q_, k_, v_: D._xla_server(
+            q_, k_, v_, kv_start, kv_len, q_pos, kv_pos,
+            jmax or k_buf.shape[0], softcap, window, scale)
+    else:
+        from repro.kernels.packed_flash import ref as R
+        f = lambda q_, k_, v_: R.ref_ca_server_attention(
+            q_, k_, v_, kv_start, kv_len, q_pos, kv_pos, causal=False,
+            window=window, softcap=softcap, scale=scale)
     _, vjp = jax.vjp(f, q_tasks, k_buf, v_buf)
     dq, dk, dv = vjp(g)
     return dq, dk, dv, None, None, None, None

@@ -89,10 +89,14 @@ class ParallelContext:
     """Static context threaded through model code.
 
     attn_impl: "ref" | "xla" | "pallas" | "cad"
+    attn_bwd:  None (backend default) | "pallas" | "xla" — backward
+               implementation for the Pallas kernel paths (the xla choice
+               is the blockwise recompute fallback)
     """
     mesh: Optional[Mesh] = None
     rules: ShardingRules = ShardingRules()
     attn_impl: str = "ref"
+    attn_bwd: Optional[str] = None
     cad: Any = None          # CADContext (plan + pool config) when attn_impl=="cad"
     pingpong: bool = False
     remat: bool = True

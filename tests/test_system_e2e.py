@@ -6,9 +6,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.cad import CADSession
 from repro.configs import get_config
+from repro.core.cost_model import CommModel
 from repro.core.plan import CADConfig
-from repro.data.pipeline import PipelineConfig, batches
+from repro.data.pipeline import PipelineConfig, raw_batches
 from repro.models import model as M
 from repro.optim.adamw import AdamW
 from repro.parallel import (ParallelContext, ShardingRules, make_rules,
@@ -24,8 +26,11 @@ def test_cad_training_grads_match_baseline():
     pipe = PipelineConfig(distribution="pretrain", max_doc_len=256,
                           seq_len=256, global_batch=4, n_ranks=2,
                           vocab_size=cfg.vocab_size, seed=3)
-    pipe.cad = CADConfig.default(2, 2 * 256, max_doc_tokens=256)
-    gen = batches(pipe, cfg.n_heads, cfg.head_dim, cfg.n_kv_heads)
+    cadcfg = CADConfig.default(2, 2 * 256, max_doc_tokens=256)
+    session = CADSession.from_legacy(
+        cadcfg, comm=CommModel(n_heads=cfg.n_heads, head_dim=cfg.head_dim,
+                               n_kv_heads=cfg.n_kv_heads))
+    gen = session.attach_plans(raw_batches(pipe), prefetch=0)
     batch = next(gen)
     batch.pop("schedule_stats", None)
 
@@ -33,8 +38,8 @@ def test_cad_training_grads_match_baseline():
     opt = AdamW(lr=1e-2)
 
     from repro.core.dispatch import CADContext
-    cad = CADContext(cfg=pipe.cad, kernel="xla",
-                     jmax=pipe.max_doc_len // pipe.cad.blk)
+    cad = CADContext(cfg=cadcfg, kernel="xla",
+                     jmax=pipe.max_doc_len // cadcfg.blk)
     ctx_cad = ParallelContext(attn_impl="cad", cad=cad, remat=False)
     ctx_ref = ParallelContext(attn_impl="xla", remat=False)
 
