@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py format).
   fig12_tolerance       Fig. 12   — tolerance factor sweep (real scheduler)
   sched_microbench      §4.2      — scheduler wall-time per batch
   prefetch_microbench   §4.2      — async plan prefetch vs inline planning
+  serve_throughput      DESIGN §8 — fused chunked prefill vs per-token
+                                    loop + continuous-batching decode rate
 
 Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--json PATH]
 
@@ -112,7 +114,8 @@ def main() -> None:
 
     from benchmarks import (cp_overheads, dedicated_pool, e2e_sim,
                             imbalance, kernel_throughput, overlap,
-                            pp_bubbles, table1_scaling, tolerance_sweep)
+                            pp_bubbles, serve_throughput, table1_scaling,
+                            tolerance_sweep)
     benches = {
         "table1": table1_scaling.main,
         "fig3": cp_overheads.main,
@@ -126,10 +129,11 @@ def main() -> None:
         "sched": lambda: sched_microbench(fast=args.fast),
         "prefetch": lambda: prefetch_microbench(fast=args.fast),
         "dedicated": dedicated_pool.main,
+        "serve": lambda: serve_throughput.main(fast=args.fast),
     }
     # the machine-readable subset: kernel fwd/bwd, plan imbalance,
-    # prefetch overlap — the CI perf trajectory
-    json_keys = ("fig5", "kernel_bwd", "fig4", "prefetch")
+    # prefetch overlap, serve throughput — the CI perf trajectory
+    json_keys = ("fig5", "kernel_bwd", "fig4", "prefetch", "serve")
     results, failed = {}, 0
     for name, fn in benches.items():
         if args.only and name != args.only:

@@ -1,6 +1,7 @@
-"""Batched serving example: prefill + greedy decode with KV/ring/SSM/LRU
-caches on a reduced gemma2 (alternating local/global attention) and a
-reduced mamba2 (attention-free decode state).
+"""Serving example: fused packed chunked prefill + continuous batching
+on a reduced gemma2 (alternating local/global attention), plus legacy
+batched decode on attention-free state-space archs (mamba2 /
+recurrentgemma) whose prompts stream per-token (DESIGN.md §8).
 
 Run: PYTHONPATH=src python examples/serve_batch.py
 """
@@ -8,16 +9,46 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import model as M
 from repro.parallel import ParallelContext
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve import Engine, ServeConfig
 
 CTX = ParallelContext(attn_impl="ref", remat=False)
 
 
-def run(arch, batch=4, prompt_len=12, new_tokens=16):
+def run_continuous(arch="gemma2-2b", slots=2, new_tokens=8):
+    """6 ragged requests through 2 cache slots: fused chunked prefill,
+    batched ragged decode, admission/eviction between steps."""
+    cfg = get_config(arch).reduced()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    lens = (9, 30, 5, 17, 3, 22)
+    prompts = [rng.integers(1, cfg.vocab_size, int(l)).astype(np.int32)
+               for l in lens]
+    eng = Engine(cfg, params, CTX,
+                 ServeConfig(max_seq=64, max_new_tokens=new_tokens,
+                             chunk_tokens=128),
+                 batch_size=slots)
+    t0 = time.time()
+    results = eng.serve(prompts)
+    dt = time.time() - t0
+    n_tok = sum(len(v) for v in results.values())
+    print(f"{arch:22s} continuous batching: {len(prompts)} ragged requests "
+          f"(lens {lens}) through {slots} slots")
+    print(f"{'':22s} {n_tok} tokens in {dt:.1f}s "
+          f"({n_tok / dt:.1f} tok/s on CPU); "
+          f"events: {[e for e, _ in eng.last_trace]}")
+    for rid in sorted(results):
+        print(f"  req {rid} ({lens[rid]:2d} prompt toks):",
+              results[rid].tolist())
+
+
+def run_static(arch, batch=4, prompt_len=12, new_tokens=16):
+    """Dense-batch generate: fused prefill where the arch supports it,
+    per-token prefill (decode-mode chunks) otherwise."""
     cfg = get_config(arch).reduced()
     params = M.init(jax.random.PRNGKey(0), cfg)
     eng = Engine(cfg, params, CTX,
@@ -29,13 +60,15 @@ def run(arch, batch=4, prompt_len=12, new_tokens=16):
     t0 = time.time()
     out = eng.generate(prompt)
     dt = time.time() - t0
+    mode = "fused prefill" if eng.fused_ok else "per-token prefill"
     print(f"{arch:22s} generated {out.shape} in {dt:.1f}s "
-          f"({batch*new_tokens/dt:.1f} tok/s on CPU)")
+          f"({batch * new_tokens / dt:.1f} tok/s on CPU, {mode})")
     print("  first row:", out[0].tolist())
     assert bool(jnp.isfinite(out).all() if out.dtype != jnp.int32
                 else True)
 
 
 if __name__ == "__main__":
+    run_continuous()
     for arch in ("gemma2-2b", "mamba2-370m", "recurrentgemma-9b"):
-        run(arch)
+        run_static(arch)

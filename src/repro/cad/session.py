@@ -13,6 +13,9 @@ session you derive:
                                  planned asynchronously one step ahead
                                  (the paper's scheduler prefetch)
 
+DESIGN.md §1 places the session in the data → planner → dispatch →
+kernels architecture; §3 explains the static capacities it configures.
+
 Construction::
 
   session = CADSession.for_pipeline(model_cfg, pipe_cfg,

@@ -13,7 +13,8 @@ four interchangeable implementations:
             attention-server pool per a scheduler plan (core/dispatch)
 
 All impls share the exact same semantics; the test suite asserts their
-pairwise agreement.
+pairwise agreement.  DESIGN.md §1 maps the full data → planner →
+dispatch → kernels flow this router sits at the center of.
 
 Shapes: q [B,Sq,Hq,dh], k/v [B,Skv,Hkv,dh] with Hq % Hkv == 0 (GQA).
 segment ids: int32 [B,S]; 0 marks padding (attends nothing / is masked

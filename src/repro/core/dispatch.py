@@ -10,6 +10,7 @@ Dataflow per transformer layer (paper §4.1, Figure 2):
 Everything is linear except the CA kernel, so JAX transposes the backward
 pass to the mirror-image communication automatically (the paper's
 "backward reuses the schedule" property holds by construction).
+DESIGN.md §1-§2 diagram the dataflow and the ping-pong overlap.
 
 Two execution paths with identical math (shared helpers):
   * shard_map over the mesh's data axes with lax.all_to_all — the real

@@ -362,6 +362,129 @@ def flash_bwd(q, k, v, out, lse, do, seg_q, pos_q, seg_kv, pos_kv, *,
     return dq, dk, dv
 
 
+# ---------------------------------------------------- ragged decode (serve)
+def _ragged_decode_kernel(block_req_ref, kv_len_ref, qmin_ref,  # prefetch
+                          q_pos_ref, q_ref, k_ref, v_ref,
+                          o_ref, m_scr, l_scr, acc_scr, *,
+                          scale, softcap, window, blk_q, blk_k, nk):
+    """One (q-block, kv-block) step of the serving attention (DESIGN.md §8).
+
+    Each q block belongs to exactly one request (``block_req``); its kv
+    context is that request's cache rows ``[0, kv_len)`` where slot index
+    == absolute position.  Online-softmax accumulators in VMEM scratch,
+    kv blocks innermost/sequential — the decode/prefill analogue of
+    ``_ca_server_kernel`` with the kv range looked up per request instead
+    of per task."""
+    i = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    req = block_req_ref[i]
+    live = req >= 0
+    kv_len = kv_len_ref[jnp.maximum(req, 0)]
+    run = live & (j * blk_k < kv_len)
+    if window and window > 0:
+        # block j's last slot must be inside the oldest live row's window
+        run = run & ((j + 1) * blk_k - 1 >= qmin_ref[i] - (window - 1))
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)       # [blk_q, dh]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # [blk_k, dh]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        pos = q_pos_ref[0, :]
+        s_pos = j * blk_k + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_q, blk_k), 1)
+        m = (pos[:, None] >= 0) & (s_pos < kv_len) \
+            & (pos[:, None] >= s_pos)
+        if window and window > 0:
+            m &= (pos[:, None] - s_pos) < window
+        logits = _capped_masked_logits(q, k, m, scale, softcap)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[:, None])
+        p = jnp.where(m, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] \
+            + _mxu_dot(p.astype(v.dtype), v)
+        m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        alive = m_scr[...] > NEG_INF / 2
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)[:, None]
+        out = jnp.where(alive[:, None], out, 0.0)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def ragged_decode_fwd(q_blocks, k_cache, v_cache, block_req, kv_len, q_pos,
+                      *, window=0, softcap=0.0, scale=None,
+                      blk_k=DEFAULT_BLOCK, interpret=True):
+    """Fused ragged-batch cache attention (serving hot loop, DESIGN.md §8).
+
+    q_blocks [nq, blk_q, Hq, dh]   request-pure query blocks (blk_q = 1 for
+                                   decode, 128 for chunked prefill)
+    k_cache/v_cache [R, S, Hkv, dh] per-request cache, slot index == position
+    block_req [nq] int32           request of each q block (-1 = dead block)
+    kv_len   [R] int32             live slots per request (visibility bound)
+    q_pos    [nq, blk_q] int32     absolute positions (-1 = padded row)
+
+    ``block_req``/``kv_len`` and the per-block min position ride the
+    scalar-prefetch channel so the kv BlockSpec index map and the
+    per-request block pruning (kv_len upper bound + window lower bound)
+    are data-dependent, exactly like ``ca_server_fwd``'s task ranges."""
+    nq, blk_q, hq, dh = q_blocks.shape
+    R, S, hkv, _ = k_cache.shape
+    rep = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    assert S % blk_k == 0, "pad cache length to the kv block size"
+    nk = S // blk_k
+
+    qmin = jnp.min(jnp.where(q_pos >= 0, q_pos, jnp.int32(2 ** 31 - 1)),
+                   axis=1).astype(jnp.int32)
+
+    def kv_index(i, h, j, br, kl, qm, r=rep):
+        return (jnp.maximum(br[i], 0), j, h // r, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nq, hq, nk),
+        in_specs=[
+            pl.BlockSpec((1, blk_q), lambda i, h, j, br, kl, qm: (i, 0)),
+            pl.BlockSpec((1, blk_q, 1, dh),
+                         lambda i, h, j, br, kl, qm: (i, 0, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, dh), kv_index),
+            pl.BlockSpec((1, blk_k, 1, dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, dh),
+                               lambda i, h, j, br, kl, qm: (i, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_ragged_decode_kernel, scale=scale,
+                          softcap=softcap, window=window, blk_q=blk_q,
+                          blk_k=blk_k, nk=nk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nq, blk_q, hq, dh), q_blocks.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_req.astype(jnp.int32), kv_len.astype(jnp.int32), qmin,
+      q_pos, q_blocks, k_cache, v_cache)
+
+
 # ------------------------------------------------------- CA-server kernel
 def _ca_mask(pq, pk, causal, window):
     m = (pq[:, None] >= 0) & (pk[None, :] >= 0)

@@ -18,6 +18,7 @@ import functools
 import os
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import attention as A
 from repro.kernels.packed_flash import kernel as K
@@ -125,3 +126,106 @@ def _ca_bwd(causal, window, softcap, scale, jmax, bwd_impl, res, g):
 
 
 ca_server_attention.defvjp(_ca_fwd, _ca_bwd)
+
+
+# ---------------------------------------------------- ragged decode (serve)
+def _resolve_decode(impl) -> str:
+    """"pallas" | "xla"; None defers to $REPRO_KERNEL_DECODE (default
+    pallas) — the serving mirror of ``_resolve_bwd``."""
+    impl = impl or os.environ.get("REPRO_KERNEL_DECODE", "pallas")
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown kernel decode impl {impl!r}")
+    return impl
+
+
+def _xla_ragged_decode(q_blocks, k_cache, v_cache, block_req, kv_len, q_pos,
+                       *, window=0, softcap=0.0, scale=None, blk_k=128):
+    """Blockwise-jnp fallback for ``kernel.ragged_decode_fwd``: per q block
+    gather that request's cache and run the same online-softmax recurrence
+    in plain lax — memory O(S·blk) like the kernel, no [T, S] gather."""
+    nq, blk_q, hq, dh = q_blocks.shape
+    R, S, hkv, _ = k_cache.shape
+    rep = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    blk_k = min(blk_k, S)
+    assert S % blk_k == 0, "pad cache length to the kv block size"
+    nk = S // blk_k
+
+    outs = []
+    for i in range(nq):        # static and small: T/128 (prefill) or B (decode)
+        req = jnp.maximum(block_req[i], 0)
+        qb = q_blocks[i].astype(jnp.float32)                  # [blk_q,hq,dh]
+        pos = q_pos[i]
+        kb = jnp.repeat(k_cache[req], rep, axis=1).astype(jnp.float32)
+        vb = jnp.repeat(v_cache[req], rep, axis=1).astype(jnp.float32)
+        kl = kv_len[req]
+
+        def body(carry, j, qb=qb, pos=pos, kb=kb, vb=vb, kl=kl,
+                 live_blk=block_req[i] >= 0):
+            m_acc, l_acc, o_acc = carry
+            k = jax.lax.dynamic_slice_in_dim(kb, j * blk_k, blk_k, 0)
+            v = jax.lax.dynamic_slice_in_dim(vb, j * blk_k, blk_k, 0)
+            s_pos = j * blk_k + jnp.arange(blk_k, dtype=jnp.int32)
+            m = live_blk & (pos[:, None] >= 0) & (s_pos[None, :] < kl) \
+                & (pos[:, None] >= s_pos[None, :])
+            if window and window > 0:
+                m &= (pos[:, None] - s_pos[None, :]) < window
+            logits = jnp.einsum("qhd,khd->hqk", qb, k) * scale
+            if softcap and softcap > 0:
+                logits = jnp.tanh(logits / softcap) * softcap
+            logits = jnp.where(m[None], logits, A.NEG_INF)
+            m_new = jnp.maximum(m_acc, logits.max(axis=-1))
+            p = jnp.where(m[None], jnp.exp(logits - m_new[..., None]), 0.0)
+            corr = jnp.exp(m_acc - m_new)
+            l_new = l_acc * corr + p.sum(axis=-1)
+            contrib = (p[..., None] * v.transpose(1, 0, 2)[:, None]).sum(2)
+            o_new = o_acc * corr[..., None] + contrib
+            return (m_new, l_new, o_new), None
+
+        carry0 = (jnp.full((hq, blk_q), A.NEG_INF, jnp.float32),
+                  jnp.zeros((hq, blk_q), jnp.float32),
+                  jnp.zeros((hq, blk_q, dh), jnp.float32))
+        (m_acc, l_acc, o_acc), _ = jax.lax.scan(
+            body, carry0, jnp.arange(nk, dtype=jnp.int32))
+        live = m_acc > A.NEG_INF / 2
+        out = o_acc / jnp.maximum(l_acc, 1e-30)[..., None]
+        out = jnp.where(live[..., None], out, 0.0)
+        outs.append(out.transpose(1, 0, 2).astype(q_blocks.dtype))
+    return jnp.stack(outs)
+
+
+def ragged_decode_attention(q, k_cache, v_cache, block_req, q_pos, kv_len,
+                            *, window=0, softcap=0.0, scale=None,
+                            impl=None):
+    """Fused cache attention over a ragged request batch (DESIGN.md §8).
+
+    The serving hot loop: every q block is request-pure and attends that
+    request's cache prefix ``[0, kv_len)`` (slot index == position; the
+    serving cache layout is non-ring), in one call for the whole batch —
+    blk_q = 1 for decode steps, 128 for chunked prefill.
+
+    q        [T, Hq, dh]  packed query tokens; T % len(block_req) == 0
+    k_cache  [R, S, Hkv, dh]  (v_cache alike); S must be a 128 multiple
+    block_req [nq] int32  request per q block (-1 = dead block)
+    q_pos    [T] int32    absolute positions (-1 = padded row)
+    kv_len   [R] int32    visibility bound per request
+
+    Inference-only (no VJP).  ``impl`` mirrors the ``bwd_impl`` pattern:
+    "pallas" runs ``kernel.ragged_decode_fwd`` (interpret off-TPU), "xla"
+    the blockwise-jnp fallback; None defers to $REPRO_KERNEL_DECODE.
+    """
+    t, hq, dh = q.shape
+    nq = block_req.shape[0]
+    assert t % nq == 0, (t, nq)
+    blk_q = t // nq
+    qb = q.reshape(nq, blk_q, hq, dh)
+    qp = q_pos.reshape(nq, blk_q)
+    if _resolve_decode(impl) == "pallas":
+        out = K.ragged_decode_fwd(qb, k_cache, v_cache, block_req, kv_len,
+                                  qp, window=window, softcap=softcap,
+                                  scale=scale, interpret=not _on_tpu())
+    else:
+        out = _xla_ragged_decode(qb, k_cache, v_cache, block_req, kv_len,
+                                 qp, window=window, softcap=softcap,
+                                 scale=scale)
+    return out.reshape(t, hq, dh)

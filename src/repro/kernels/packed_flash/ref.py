@@ -1,6 +1,6 @@
 """Pure-jnp oracles for the packed-flash kernels.
 
-Two entry points mirror kernel.py:
+Three entry points mirror kernel.py:
 
   ref_packed_attention    — packed-document self-attention over a chunk
                             (same semantics as core.attention.ref_attention)
@@ -8,6 +8,9 @@ Two entry points mirror kernel.py:
                             task is a (q-block, kv-prefix-range) pair; tasks
                             from any document/rank are batched in one call
                             (paper §3.3 "composability").
+  ref_ragged_decode       — the serving cache-attention batch: request-pure
+                            q blocks against per-request kv caches with
+                            ragged ``kv_len`` (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -73,3 +76,38 @@ def ref_ca_server_attention(q_tasks, k_buf, v_buf, kv_start, kv_len,
     out = jnp.einsum("thqk,khd->tqhd", p,
                      jnp.repeat(vf, rep, axis=1).astype(jnp.float32))
     return out.astype(q_tasks.dtype)
+
+
+def ref_ragged_decode(q_blocks, k_cache, v_cache, block_req, kv_len, q_pos,
+                      *, window=0, softcap=0.0, scale=None):
+    """Materialized oracle for ``kernel.ragged_decode_fwd``.
+
+    q_blocks [nq, blk_q, Hq, dh]; k_cache/v_cache [R, S, Hkv, dh];
+    block_req [nq] (-1 = dead block); kv_len [R]; q_pos [nq, blk_q]
+    (-1 = padded row).  Cache slot index == absolute position (the serving
+    layout is non-ring); causal always.  Returns [nq, blk_q, Hq, dh].
+    """
+    nq, blk_q, hq, dh = q_blocks.shape
+    R, S, hkv, _ = k_cache.shape
+    rep = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+
+    safe_req = jnp.maximum(block_req, 0)
+    kb = jnp.repeat(k_cache, rep, axis=2)[safe_req]    # [nq, S, Hq, dh]
+    vb = jnp.repeat(v_cache, rep, axis=2)[safe_req]
+    logits = jnp.einsum("nqhd,nshd->nhqs", q_blocks.astype(jnp.float32),
+                        kb.astype(jnp.float32)) * scale
+    if softcap and softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    s_pos = jnp.arange(S, dtype=jnp.int32)
+    m = (block_req >= 0)[:, None, None]
+    m = m & (q_pos >= 0)[:, :, None]
+    m = m & (s_pos[None, None, :] < kv_len[safe_req][:, None, None])
+    m = m & (q_pos[:, :, None] >= s_pos[None, None, :])
+    if window and window > 0:
+        m = m & ((q_pos[:, :, None] - s_pos[None, None, :]) < window)
+    logits = jnp.where(m[:, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(m[:, None].any(-1)[..., None], p, 0.0)
+    out = jnp.einsum("nhqs,nshd->nqhd", p, vb.astype(jnp.float32))
+    return out.astype(q_blocks.dtype)

@@ -23,6 +23,10 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+# serving cache padding must equal the prefill packer's piece alignment
+# and the ragged kernel's 128-token kv tile (request-pure-block
+# invariant) — one constant, imported, not re-declared
+from repro.data.packing import BLOCK as SERVE_BLOCK
 from repro.models import layers as L
 
 
@@ -185,9 +189,26 @@ def forward(params, cfg, batch, ctx) -> Tuple[jnp.ndarray, Dict]:
 
 
 # ----------------------------------------------------------------- decode
+
+
 def init_cache(params, cfg, batch_size: int, max_seq: int,
-               memory: Optional[jnp.ndarray] = None, ctx=None):
-    """Build the decode cache pytree (zeros; positions -1 = empty)."""
+               memory: Optional[jnp.ndarray] = None, ctx=None,
+               layout: str = "decode"):
+    """Build the decode cache pytree (zeros; positions -1 = empty).
+
+    ``layout="serve"`` builds the ragged serving layout instead
+    (DESIGN.md §8): attention slots are flat per-request buffers where
+    slot index == absolute position (local layers get full-length buffers
+    rather than ring ones — the window is enforced by the ragged kernel's
+    mask and its block pruning recovers the compute bound), the cache
+    length is padded to the 128-token kernel tile, and a per-request
+    ``kv_len`` visibility bound rides at the top level so requests at
+    different fill levels share one batch (continuous batching).
+    """
+    if layout == "serve":
+        return _init_serve_cache(params, cfg, batch_size, max_seq)
+    if layout != "decode":
+        raise ValueError(f"unknown cache layout {layout!r}")
     b, dt = batch_size, cfg.cdtype
     dh, hkv = cfg.head_dim, cfg.n_kv_heads
     g = cfg.n_groups
@@ -234,6 +255,179 @@ def init_cache(params, cfg, batch_size: int, max_seq: int,
         else:
             raise ValueError(kind)
     return {"slots": tuple(slots)}
+
+
+def _init_serve_cache(params, cfg, batch_size: int, max_seq: int):
+    """Ragged serving layout: see ``init_cache(layout="serve")``."""
+    if (cfg.encoder and cfg.encoder.n_layers) \
+            or "cross" in cfg.layer_pattern:
+        raise ValueError("serve cache layout does not support "
+                         "cross-attention/encoder architectures")
+    b, dt = batch_size, cfg.cdtype
+    dh, hkv = cfg.head_dim, cfg.n_kv_heads
+    g = cfg.n_groups
+    s_pad = -(-max_seq // SERVE_BLOCK) * SERVE_BLOCK
+    slots = []
+    for kind in cfg.layer_pattern:
+        if kind in ("global", "local"):
+            slots.append({"k": jnp.zeros((g, b, s_pad, hkv, dh), dt),
+                          "v": jnp.zeros((g, b, s_pad, hkv, dh), dt)})
+        elif kind == "ssd":
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            conv_ch = d_in + 2 * s.n_groups * s.d_state
+            slots.append({
+                "conv": jnp.zeros((g, b, s.conv_width - 1, conv_ch), dt),
+                "state": jnp.zeros((g, b, nh, s.d_state, s.head_dim),
+                                   jnp.float32)})
+        elif kind == "rglru":
+            w = cfg.rglru.lru_width or cfg.d_model
+            slots.append({
+                "conv": jnp.zeros((g, b, cfg.rglru.conv_width - 1, w), dt),
+                "h": jnp.zeros((g, b, w), jnp.float32)})
+        else:
+            raise ValueError(kind)
+    return {"slots": tuple(slots),
+            "kv_len": jnp.zeros((b,), jnp.int32)}
+
+
+def reset_serve_slots(cache, cfg, reset_mask):
+    """Recycle request slots for continuous-batching admission.
+
+    Attention kv needs no clearing — visibility is bounded by ``kv_len``,
+    which drops to 0 — but recurrent states and conv windows persist
+    across tokens and must be zeroed.  ``reset_mask`` [B] bool."""
+    def zero(x):
+        m = reset_mask.reshape((1, -1) + (1,) * (x.ndim - 2))
+        return jnp.where(m, jnp.zeros_like(x), x)
+
+    new_slots = []
+    for kind, c in zip(cfg.layer_pattern, cache["slots"]):
+        if kind in ("ssd", "rglru"):
+            new_slots.append({k: zero(v) for k, v in c.items()})
+        else:
+            new_slots.append(c)
+    new = dict(cache)
+    new["slots"] = tuple(new_slots)
+    new["kv_len"] = jnp.where(reset_mask, 0, cache["kv_len"])
+    return new
+
+
+def _serve_attn(p, h, cache_slot, pos, token_req, block_req, kv_len_next,
+                cfg, ctx, kind):
+    """Packed ragged-batch cache attention: scatter this step's k/v into
+    the serve-layout cache, then one fused ``ragged_decode_attention``
+    call over the whole batch.  h [1,T,D]."""
+    from repro.kernels.packed_flash import ops as pf_ops
+    t = h.shape[1]
+    dh = cfg.head_dim
+    posc = jnp.maximum(pos, 0)
+    q, k, v = L.qkv_proj(p, h, cfg, posc[None] if cfg.use_rope else None)
+    r, s = cache_slot["k"].shape[0], cache_slot["k"].shape[1]
+    live = pos >= 0
+    # dead rows scatter out of bounds -> dropped
+    wr = jnp.where(live, token_req, r)
+    ws = jnp.where(live, pos, s)
+    ck = cache_slot["k"].at[wr, ws].set(k[0], mode="drop")
+    cv = cache_slot["v"].at[wr, ws].set(v[0], mode="drop")
+    out = pf_ops.ragged_decode_attention(
+        q[0], ck, cv, block_req, pos, kv_len_next,
+        window=cfg.window if kind == "local" else 0,
+        softcap=cfg.attn_logit_softcap,
+        impl=getattr(ctx, "decode_impl", None))
+    out = out.reshape(1, t, cfg.n_heads * dh) @ p["wo"]
+    return out, {"k": ck, "v": cv}
+
+
+def _block_serve(kind, p, h, cache_slot, pos, token_req, block_req,
+                 kv_len_next, cfg, ctx):
+    """Serving analogue of ``block_decode`` over packed [1,T,D] tokens."""
+    if kind in ("global", "local"):
+        a_in = L.norm_apply(p["norm1"], h, cfg.norm)
+        a, new_slot = _serve_attn(p["attn"], a_in, cache_slot, pos,
+                                  token_req, block_req, kv_len_next, cfg,
+                                  ctx, kind)
+        return _attn_residual_tail(p, h, a, cfg, ctx), new_slot
+    if kind in ("ssd", "rglru"):
+        # decode mode only (one token per request, token i == request i):
+        # reinterpret the packed row dim as the request batch and reuse
+        # the decode branches unchanged.  Rows with pos == -1 are idle
+        # slots (e.g. a DECODE-state request waiting while another
+        # prefills): their recurrent state must NOT advance — and the
+        # rglru pos==0 reset must not fire — so dead rows keep their
+        # old state verbatim.
+        hb = h[0][:, None]                               # [B,1,D]
+        hb, upd = block_decode(kind, p, hb, cache_slot,
+                               jnp.maximum(pos, 0), cfg, ctx)
+        live = pos >= 0
+
+        def keep(new, old):
+            m = live.reshape((-1,) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+
+        new_slot = {k: keep(v, cache_slot[k]) for k, v in upd.items()}
+        return hb[:, 0][None], new_slot
+    raise ValueError(kind)
+
+
+def serve_chunk_step(params, cfg, cache, tokens, pos, block_req,
+                     kv_len_next, ctx):
+    """One serving step over a packed ragged request batch (DESIGN.md §8).
+
+    A single entry point serves both halves of the engine: a **fused
+    prefill chunk** (blk_q = 128 request-pure q blocks packed
+    cu_seqlens-style) and a **batched decode step** (blk_q = 1,
+    ``block_req == arange(B)``).  All context-independent layers run once
+    over the packed [T] stream — the linear-layer batching win — and
+    attention runs as one fused ragged cache call per layer.
+
+    tokens [T] int32 packed (0 on padding rows)
+    pos    [T] int32 absolute position per token (-1 = padding row)
+    block_req [nq] int32 request slot per q block (-1 = dead block);
+            blk_q = T // nq, and every q block is request-pure
+    kv_len_next [B] int32 per-request visibility bound AFTER this step's
+            cache writes (prompt progress so far + this chunk)
+
+    Returns (logits [T, V] f32, new_cache).  Recurrent (ssd/rglru) layers
+    are decode-mode only; fused prefill requires attention-only patterns
+    (MoE routing is batch-global, so MoE archs also prefill per-token —
+    the engine gates this).
+    """
+    t = tokens.shape[0]
+    nq = block_req.shape[0]
+    assert t % nq == 0, (t, nq)
+    blk_q = t // nq
+    decode_mode = blk_q == 1
+    if not decode_mode:
+        bad = [k for k in cfg.layer_pattern if k not in ("global", "local")]
+        if bad or (cfg.moe and cfg.moe.n_experts):
+            raise ValueError(
+                f"fused chunked prefill supports attention-only non-MoE "
+                f"patterns; got {cfg.layer_pattern} moe={bool(cfg.moe and cfg.moe.n_experts)}")
+    token_req = jnp.repeat(block_req, blk_q)
+    h = _embed(params, cfg, tokens[None], ctx)
+    if not cfg.use_rope and cfg.has_attention():
+        h = h + L.sinusoidal_pos(jnp.maximum(pos, 0)[None], cfg.d_model,
+                                 cfg.cdtype)
+    pattern = cfg.layer_pattern
+
+    def body(hh, xs):
+        group_params, group_cache = xs
+        new_cache = []
+        for kind, gp, gc in zip(pattern, group_params, group_cache):
+            hh, nc = _block_serve(kind, gp, hh, gc, pos, token_req,
+                                  block_req, kv_len_next, cfg, ctx)
+            new_cache.append(nc)
+        return hh, tuple(new_cache)
+
+    h, new_slots = jax.lax.scan(body, h, (params["blocks"], cache["slots"]))
+    h = L.norm_apply(params["final_norm"], h, cfg.norm)
+    logits = _unembed(params, cfg, h)[0]
+    new_cache = dict(cache)
+    new_cache["slots"] = new_slots
+    new_cache["kv_len"] = kv_len_next
+    return logits, new_cache
 
 
 def _write_cache(cache_k, cache_v, kv_pos, k_new, v_new, pos, ring: bool):
@@ -290,26 +484,37 @@ def cross_decode(p, h, cache_slot, cfg):
     return out
 
 
+def _attn_residual_tail(p, h, a, cfg, ctx, cross_fn=None):
+    """Post-attention wiring shared by the decode and serving block
+    bodies: post-norm, residual, optional cross-attention insert,
+    norm2 -> (MoE | FFN), post-norm, residual.  One copy, so the fused
+    serving path can never silently diverge from decode."""
+    if cfg.post_norms:
+        a = L.norm_apply(p["pnorm1"], a, cfg.norm)
+    h = h + a
+    if cross_fn is not None:
+        h = h + cross_fn(h)
+    f_in = L.norm_apply(p["norm2"], h, cfg.norm)
+    if "moe" in p:
+        f, _ = L.moe_apply(p["moe"], f_in, cfg, ctx, no_drop=True)
+    else:
+        f = L.ffn_apply(p["ffn"], f_in, cfg, ctx)
+    if cfg.post_norms:
+        f = L.norm_apply(p["pnorm2"], f, cfg.norm)
+    return h + f
+
+
 def block_decode(kind, p, h, cache_slot, pos, cfg, ctx):
     if kind in ("global", "local", "cross"):
         a_in = L.norm_apply(p["norm1"], h, cfg.norm)
         a, new_slot = attn_decode(p["attn"], a_in, cache_slot, pos, cfg, ctx,
                                   kind)
-        if cfg.post_norms:
-            a = L.norm_apply(p["pnorm1"], a, cfg.norm)
-        h = h + a
+        cross_fn = None
         if kind == "cross":
-            h = h + cross_decode(p["attn"],
-                                 L.norm_apply(p["xnorm"], h, cfg.norm),
-                                 new_slot, cfg)
-        f_in = L.norm_apply(p["norm2"], h, cfg.norm)
-        if "moe" in p:
-            f, _ = L.moe_apply(p["moe"], f_in, cfg, ctx, no_drop=True)
-        else:
-            f = L.ffn_apply(p["ffn"], f_in, cfg, ctx)
-        if cfg.post_norms:
-            f = L.norm_apply(p["pnorm2"], f, cfg.norm)
-        return h + f, new_slot
+            cross_fn = lambda hh: cross_decode(
+                p["attn"], L.norm_apply(p["xnorm"], hh, cfg.norm),
+                new_slot, cfg)
+        return _attn_residual_tail(p, h, a, cfg, ctx, cross_fn), new_slot
     if kind == "ssd":
         y, conv, state = L.ssd_decode(
             p["mixer"], L.norm_apply(p["norm1"], h, cfg.norm),

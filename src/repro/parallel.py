@@ -92,11 +92,15 @@ class ParallelContext:
     attn_bwd:  None (backend default) | "pallas" | "xla" — backward
                implementation for the Pallas kernel paths (the xla choice
                is the blockwise recompute fallback)
+    decode_impl: None ($REPRO_KERNEL_DECODE / default pallas) | "pallas" |
+               "xla" — the serving ragged-decode kernel selection
+               (DESIGN.md §8), mirroring attn_bwd
     """
     mesh: Optional[Mesh] = None
     rules: ShardingRules = ShardingRules()
     attn_impl: str = "ref"
     attn_bwd: Optional[str] = None
+    decode_impl: Optional[str] = None
     cad: Any = None          # CADContext (plan + pool config) when attn_impl=="cad"
     pingpong: bool = False
     remat: bool = True

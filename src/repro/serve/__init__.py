@@ -1,0 +1,13 @@
+"""Serving subsystem (DESIGN.md §8): fused packed chunked prefill, the
+ragged-decode kernel path, and host-side continuous batching.
+
+  engine     — Engine / ServeConfig: device loop over two static shapes
+               (prefill chunk, decode batch)
+  scheduler  — ContinuousScheduler: admission / chunk packing / eviction
+"""
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.scheduler import (ContinuousScheduler, PrefillChunk,
+                                   Request, SchedulerConfig)
+
+__all__ = ["Engine", "ServeConfig", "ContinuousScheduler", "PrefillChunk",
+           "Request", "SchedulerConfig"]

@@ -1,49 +1,246 @@
-"""Minimal batched serving engine: prefill (teacher-forced forward filling
-the KV cache) + batched greedy decode.  Used by the serving example and
-the decode-shape dry-runs."""
+"""Serving engine: fused packed prefill + continuous batching
+(DESIGN.md §8).
+
+Prefill no longer feeds prompts one token at a time through the decode
+path: prompts are packed cu_seqlens-style into fixed-size chunks (pieces
+128-aligned per request, the same block purity the training packer
+guarantees for documents) and each chunk is ONE ``serve_chunk_step``
+call — the context-independent layers run fused over the ragged token
+stream, k/v scatter straight into the serving cache, and attention is a
+single ``ragged_decode_attention`` call per layer.  The old per-token
+loop survives as ``prefill="loop"`` — it is the benchmark baseline and,
+because both paths route every token through the same row-independent
+block kernels, the fused chunked prefill reproduces its logits
+*bit-exactly* (``tests/test_serve.py`` pins this down).
+
+``Engine.serve`` runs continuous batching on top: a host-side
+``ContinuousScheduler`` admits/evicts requests between decode steps
+under a token budget (admission scored with the CAD cost model), while
+the device sees only two static shapes — the prefill chunk and the
+decode batch.
+
+Architectures outside the serving cache layout (cross-attention /
+encoder archs) fall back to the legacy dense decode path; recurrent and
+MoE archs use the serve layout but prefill per-token (decode-mode
+chunks), since their mixers are sequential (ssd/rglru) or batch-global
+(MoE routing).
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import model as M
-from repro.train.step import make_serve_step
+from repro.serve.scheduler import (ContinuousScheduler, Request,
+                                   SchedulerConfig)
+from repro.train.step import make_serve_chunk_step, make_serve_step
 
 
 @dataclasses.dataclass
 class ServeConfig:
     max_seq: int = 1024
     max_new_tokens: int = 32
+    chunk_tokens: int = 512          # fused prefill chunk (128 multiple)
+    prefill: str = "fused"           # "fused" | "loop"
+    decode_impl: Optional[str] = None  # ragged kernel: None/"pallas"/"xla"
+    token_budget: Optional[int] = None   # continuous-batching kv budget
+    admission: str = "fcfs"          # "fcfs" | "cost"
+    step_cost_budget: float = 0.0    # predicted CA seconds per decode step
+    eos_id: Optional[int] = None
 
 
 class Engine:
     def __init__(self, cfg, params, ctx, serve_cfg: ServeConfig,
                  memory: Optional[jnp.ndarray] = None, batch_size: int = 1):
-        self.cfg, self.params, self.ctx = cfg, params, ctx
+        self.cfg, self.params = cfg, params
         self.scfg = serve_cfg
         self.memory = memory
         self.batch_size = batch_size
-        self.cache = M.init_cache(params, cfg, batch_size, serve_cfg.max_seq,
-                                  memory=memory, ctx=ctx)
-        self._step = jax.jit(make_serve_step(cfg, ctx))
+        if serve_cfg.decode_impl is not None:
+            ctx = dataclasses.replace(ctx,
+                                      decode_impl=serve_cfg.decode_impl)
+        self.ctx = ctx
+        # serving layout hosts everything but cross-attention/encoder archs
+        self.serve_layout = memory is None \
+            and not (cfg.encoder and cfg.encoder.n_layers) \
+            and "cross" not in cfg.layer_pattern
+        # fused chunked prefill additionally needs attention-only non-MoE
+        self.fused_ok = self.serve_layout \
+            and all(k in ("global", "local") for k in cfg.layer_pattern) \
+            and not (cfg.moe and cfg.moe.n_experts)
+        if self.serve_layout:
+            self.cache = M.init_cache(params, cfg, batch_size,
+                                      serve_cfg.max_seq, ctx=ctx,
+                                      layout="serve")
+            self._chunk = jax.jit(make_serve_chunk_step(cfg, ctx))
+            self._reset = jax.jit(
+                lambda cache, mask: M.reset_serve_slots(cache, cfg, mask))
+        else:
+            self.cache = M.init_cache(params, cfg, batch_size,
+                                      serve_cfg.max_seq, memory=memory,
+                                      ctx=ctx)
+            self._step = jax.jit(make_serve_step(cfg, ctx))
 
-    def prefill(self, tokens: jnp.ndarray) -> jnp.ndarray:
-        """tokens [B, P]: feed prompt one position at a time through the
-        decode path (simple, exactly matches decode semantics)."""
+    # ----------------------------------------------------- chunk dispatch
+    def _chunk_call(self, tokens, pos, block_req, kv_len_next):
+        """All serve-layout device calls go through here.  On
+        fused-capable (attention-only) archs, single-row chunks are
+        padded with one dead row: XLA CPU lowers M=1 matmuls to a gemv
+        whose reduction order differs from the M>=2 gemm, which would
+        break the loop-vs-fused bit-parity guarantee for batch_size=1
+        engines.  Dead rows are masked everywhere (scatter dropped,
+        attention zero, logits row ignored).  Recurrent archs are never
+        padded: they have no fused path (so no parity contract) and
+        their per-request state is indexed by the row dim."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        block_req = jnp.asarray(block_req, jnp.int32)
+        if tokens.shape[0] == 1 and self.fused_ok:
+            tokens = jnp.concatenate([tokens, jnp.zeros(1, jnp.int32)])
+            pos = jnp.concatenate([pos, -jnp.ones(1, jnp.int32)])
+            block_req = jnp.concatenate([block_req,
+                                         -jnp.ones(1, jnp.int32)])
+            lg, self.cache = self._chunk(self.params, self.cache, tokens,
+                                         pos, block_req,
+                                         jnp.asarray(kv_len_next,
+                                                     jnp.int32))
+            return lg[:1]
+        lg, self.cache = self._chunk(self.params, self.cache, tokens, pos,
+                                     block_req,
+                                     jnp.asarray(kv_len_next, jnp.int32))
+        return lg
+
+    # ------------------------------------------------- static-batch prefill
+    def prefill(self, tokens: jnp.ndarray, mode: Optional[str] = None,
+                return_logits: bool = False):
+        """Prefill a dense [B, P] prompt batch into the cache.
+
+        mode "fused" (default when supported): chunked packed prefill —
+        one ``serve_chunk_step`` per ``chunk_tokens`` over the ragged
+        batch.  mode "loop": the per-token baseline.  Returns the
+        last-position logits [B, V] (and, with ``return_logits``, the
+        full teacher-forced [B, P, V] — what the parity test compares).
+        """
+        if tokens.shape[1] > self.scfg.max_seq:
+            raise ValueError(
+                f"prompt length {tokens.shape[1]} exceeds max_seq "
+                f"{self.scfg.max_seq}: cache writes past the end would be "
+                f"silently dropped")
+        mode = mode or (self.scfg.prefill if self.fused_ok else "loop")
+        if not self.serve_layout:
+            if mode == "fused":
+                raise ValueError(
+                    f"fused prefill unsupported for {self.cfg.arch_id}: "
+                    f"cross-attention/encoder archs use the legacy path")
+            if return_logits:
+                raise ValueError("return_logits requires the serving "
+                                 "cache layout")
+            return self._prefill_legacy(tokens)
+        # a prefill starts a fresh generation for every slot: drop kv
+        # visibility and zero recurrent state (a second generate() on a
+        # recurrent arch must not inherit the previous batch's state)
+        self.cache = self._reset(
+            self.cache, jnp.ones((self.batch_size,), bool))
+        if mode == "fused":
+            if not self.fused_ok:
+                raise ValueError(
+                    f"fused prefill unsupported for {self.cfg.arch_id} "
+                    f"(pattern {self.cfg.layer_pattern})")
+            return self._prefill_fused(tokens, return_logits)
+        if mode == "loop":
+            return self._prefill_loop(tokens, return_logits)
+        raise ValueError(f"unknown prefill mode {mode!r}")
+
+    def _prefill_fused(self, tokens, return_logits=False):
+        b, p = tokens.shape
+        assert b == self.batch_size
+        prompts = np.asarray(tokens)
+        sched = ContinuousScheduler(SchedulerConfig(
+            n_slots=b, max_seq=self.scfg.max_seq,
+            chunk_tokens=self.scfg.chunk_tokens))
+        for i in range(b):
+            # max_new_tokens=0: prefill-only — a full-max_seq prompt must
+            # pass submit()'s prompt+new capacity check like the loop does
+            sched.submit(Request(rid=i, prompt=prompts[i],
+                                 max_new_tokens=0))
+        sched.admit()
+        full = np.zeros((b, p, self.cfg.vocab_size), np.float32) \
+            if return_logits else None
+        last = np.zeros((b, self.cfg.vocab_size), np.float32)
+        while True:
+            chunk = sched.next_prefill_chunk(fused=True)
+            if chunk is None:
+                break
+            lg = np.asarray(self._chunk_call(chunk.tokens, chunk.pos,
+                                             chunk.block_req,
+                                             chunk.kv_len_next))
+            if return_logits:
+                live = chunk.pos >= 0
+                tok_req = np.repeat(chunk.block_req,
+                                    len(chunk.tokens) // len(chunk.block_req))
+                full[tok_req[live], chunk.pos[live]] = lg[live]
+            for slot, row in chunk.last_rows:
+                last[slot] = lg[row]
+        last = jnp.asarray(last)
+        return (last, jnp.asarray(full)) if return_logits else last
+
+    def _prefill_loop(self, tokens, return_logits=False):
+        b, p = tokens.shape
+        assert b == self.batch_size
+        block_req = jnp.arange(b, dtype=jnp.int32)
+        rows = []
+        lg = None
+        for t in range(p):
+            lg = self._chunk_call(tokens[:, t], jnp.full((b,), t,
+                                                         jnp.int32),
+                                  block_req,
+                                  jnp.full((b,), t + 1, jnp.int32))
+            if return_logits:
+                rows.append(lg)
+        if return_logits:
+            return lg, jnp.stack(rows, axis=1)
+        return lg
+
+    def _prefill_legacy(self, tokens):
         b, p = tokens.shape
         last = None
         for t in range(p):
             pos = jnp.full((b,), t, jnp.int32)
-            last, _, self.cache = self._step(self.params, self.cache,
+            _, last, self.cache = self._step(self.params, self.cache,
                                              tokens[:, t:t + 1], pos)
-        return last
+        return last[:, -1]
 
+    # ------------------------------------------------- static-batch decode
     def generate(self, prompt: jnp.ndarray) -> jnp.ndarray:
+        """Greedy decode of a dense [B, P] batch; returns [B, max_new]."""
         b, p = prompt.shape
-        nxt = self.prefill(prompt)
+        # tokens are cached at positions 0 .. p + max_new - 2
+        if p + self.scfg.max_new_tokens - 1 > self.scfg.max_seq:
+            raise ValueError(
+                f"prompt {p} + max_new_tokens {self.scfg.max_new_tokens} "
+                f"does not fit max_seq {self.scfg.max_seq}")
+        if not self.serve_layout:
+            return self._generate_legacy(prompt)
+        lg = self.prefill(prompt)
+        nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        out = [nxt]
+        block_req = jnp.arange(b, dtype=jnp.int32)
+        for i in range(self.scfg.max_new_tokens - 1):
+            lg = self._chunk_call(nxt, jnp.full((b,), p + i, jnp.int32),
+                                  block_req,
+                                  jnp.full((b,), p + i + 1, jnp.int32))
+            nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            out.append(nxt)
+        return jnp.stack(out, axis=1)
+
+    def _generate_legacy(self, prompt):
+        b, p = prompt.shape
+        lg = self._prefill_legacy(prompt)
+        nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
         out = [nxt]
         for i in range(self.scfg.max_new_tokens - 1):
             pos = jnp.full((b,), p + i, jnp.int32)
@@ -51,3 +248,61 @@ class Engine:
                                             nxt[:, None], pos)
             out.append(nxt)
         return jnp.stack(out, axis=1)
+
+    # --------------------------------------------------- continuous batching
+    def serve(self, prompts: List[np.ndarray],
+              max_new_tokens: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """Continuous batching: stream an arbitrary number of ragged
+        requests through ``batch_size`` cache slots.  Returns
+        {rid: generated tokens} with rid = submission index."""
+        if not self.serve_layout:
+            raise ValueError("continuous batching needs the serving cache "
+                             "layout (no cross-attention/encoder archs)")
+        scfg = self.scfg
+        sched = ContinuousScheduler(SchedulerConfig(
+            n_slots=self.batch_size, max_seq=scfg.max_seq,
+            chunk_tokens=scfg.chunk_tokens,
+            token_budget=scfg.token_budget,
+            admission=scfg.admission,
+            cost_model=self._cost_model()
+            if (scfg.admission == "cost" or scfg.step_cost_budget) else None,
+            step_cost_budget=scfg.step_cost_budget,
+            eos_id=scfg.eos_id))
+        mn = scfg.max_new_tokens if max_new_tokens is None \
+            else max_new_tokens
+        for i, pr in enumerate(prompts):
+            sched.submit(Request(rid=i, prompt=np.asarray(pr, np.int32),
+                                 max_new_tokens=mn))
+        fused = self.fused_ok and scfg.prefill == "fused"
+        while sched.has_work():
+            newly = sched.admit()
+            if newly:
+                mask = np.zeros(self.batch_size, bool)
+                for r in newly:
+                    mask[r.slot] = True
+                self.cache = self._reset(self.cache, jnp.asarray(mask))
+            if sched.has_prefill():
+                chunk = sched.next_prefill_chunk(fused=fused)
+                lg = self._chunk_call(chunk.tokens, chunk.pos,
+                                      chunk.block_req, chunk.kv_len_next)
+                if chunk.last_rows:
+                    nxt = np.asarray(jnp.argmax(lg, axis=-1))
+                    sched.commit_prefill(
+                        chunk, {slot: nxt[row]
+                                for slot, row in chunk.last_rows})
+                continue
+            sched.evict_for_budget()
+            batch = sched.decode_batch()
+            if batch is None:
+                continue
+            tokens, pos, block_req, kv_next = batch
+            lg = self._chunk_call(tokens, pos, block_req, kv_next)
+            sched.commit_decode(np.asarray(jnp.argmax(lg, axis=-1)))
+        out = {r.rid: np.asarray(r.out_tokens, np.int32)
+               for r in sched.done}
+        self.last_trace = sched.trace
+        return out
+
+    def _cost_model(self):
+        from repro.core.cost_model import CostModel
+        return CostModel.analytic(self.cfg.n_heads, self.cfg.head_dim)

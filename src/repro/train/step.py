@@ -49,9 +49,27 @@ def make_eval_step(cfg, ctx):
 
 
 def make_serve_step(cfg, ctx):
-    """decode_32k / long_500k shapes: one new token against a KV cache."""
+    """decode_32k / long_500k shapes: one new token against a KV cache
+    (the legacy dense-batch decode path; the serving engine's ragged
+    batches use ``make_serve_chunk_step``)."""
     def serve_step(params, cache, tokens, pos):
         logits, cache = M.decode_step(params, cfg, cache, tokens, pos, ctx)
         next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         return next_tok, logits, cache
     return serve_step
+
+
+def make_serve_chunk_step(cfg, ctx):
+    """Packed-prefill / ragged-decode serving step (DESIGN.md §8).
+
+    One jitted function serves both engine phases against a
+    ``layout="serve"`` cache: a fused chunked-prefill call (blk_q = 128
+    request-pure q blocks packed cu_seqlens-style into ``tokens [T]``)
+    and a batched decode step (blk_q = 1, one token per request slot).
+    The two phases trace to different shapes, so each gets its own
+    executable under one ``jax.jit``.
+    """
+    def chunk_step(params, cache, tokens, pos, block_req, kv_len_next):
+        return M.serve_chunk_step(params, cfg, cache, tokens, pos,
+                                  block_req, kv_len_next, ctx)
+    return chunk_step

@@ -1,0 +1,446 @@
+"""Serving-path tests (DESIGN.md §8).
+
+Three contracts:
+
+1. **Prefill parity** — fused chunked prefill reproduces the per-token
+   loop's teacher-forced logits *bit-exactly*.  Both paths route every
+   token through the same row-independent block kernels
+   (``serve_chunk_step`` with blk_q 128 vs 1), so equality is exact, not
+   approximate — any reduction-order change in the packed path is a bug.
+2. **Continuous batching** — admission/eviction ordering is
+   deterministic (the ``trace`` contract) and slot recycling never leaks
+   state between requests (every request's tokens equal a solo run).
+3. **Ragged decode kernel** — ``ragged_decode_attention`` (pallas
+   interpret and the blockwise-XLA fallback) agrees with the dense
+   ``decode_attention`` reference and the materialized oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.attention import decode_attention
+from repro.core.cost_model import CostModel
+from repro.kernels.packed_flash import ops as pf_ops
+from repro.kernels.packed_flash import ref as pf_ref
+from repro.models import model as M
+from repro.parallel import ParallelContext
+from repro.serve import (ContinuousScheduler, Engine, Request,
+                         SchedulerConfig, ServeConfig)
+from repro.train.step import make_serve_step
+
+CTX = ParallelContext(attn_impl="ref", remat=False)
+
+
+# ------------------------------------------------------ ragged decode kernel
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (37, 0.0), (0, 30.0)])
+def test_ragged_decode_parity_vs_dense(impl, window, softcap):
+    """Fused ragged decode (one call, per-request kv_len) vs the dense
+    ``decode_attention`` reference, one request at a time."""
+    rng = np.random.default_rng(0)
+    R, S, hq, hkv, dh = 4, 256, 4, 2, 64
+    kc = jnp.asarray(rng.normal(size=(R, S, hkv, dh)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(R, S, hkv, dh)), jnp.float32)
+    kv_len = jnp.asarray([200, 1, 130, 77], jnp.int32)
+    q = jnp.asarray(rng.normal(size=(R, hq, dh)), jnp.float32)
+    q_pos = kv_len - 1
+
+    out = pf_ops.ragged_decode_attention(
+        q, kc, vc, jnp.arange(R, dtype=jnp.int32), q_pos, kv_len,
+        window=window, softcap=softcap, impl=impl)
+
+    # dense reference: full-cache mask per request
+    s_idx = jnp.arange(S, dtype=jnp.int32)
+    mask = s_idx[None, :] < kv_len[:, None]
+    dense = decode_attention(q[:, None], kc, vc, mask, q_pos[:, None],
+                             jnp.broadcast_to(s_idx, (R, S)),
+                             window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense[:, 0]),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_ragged_decode_prefill_blocks_vs_oracle(impl):
+    """Chunk-prefill shape (blk_q=128, dead blocks, padded rows, window)
+    vs the materialized oracle."""
+    rng = np.random.default_rng(1)
+    R, S, hq, hkv, dh = 3, 256, 4, 2, 32
+    kc = jnp.asarray(rng.normal(size=(R, S, hkv, dh)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(R, S, hkv, dh)), jnp.float32)
+    kv_len = jnp.asarray([190, 0, 130], jnp.int32)
+    q = jnp.asarray(rng.normal(size=(384, hq, dh)), jnp.float32)
+    block_req = jnp.asarray([2, 0, -1], jnp.int32)
+    pos = np.concatenate([np.arange(60, 188),       # req 2 rows
+                          np.arange(62, 190),       # req 0 rows
+                          -np.ones(128)]).astype(np.int32)
+    pos[100:128] = -1                               # padded rows mid-block
+    pos = jnp.asarray(pos)
+    out = pf_ops.ragged_decode_attention(q, kc, vc, block_req, pos, kv_len,
+                                         window=50, impl=impl)
+    ref = pf_ref.ref_ragged_decode(q.reshape(3, 128, hq, dh), kc, vc,
+                                   block_req, kv_len, pos.reshape(3, 128),
+                                   window=50)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.reshape(384, hq, dh)),
+                               atol=2e-5, rtol=2e-5)
+    assert np.asarray(out[256:] == 0).all(), "dead block must be zero"
+
+
+def test_ragged_decode_impl_resolution(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_DECODE", "nope")
+    with pytest.raises(ValueError, match="unknown kernel decode impl"):
+        pf_ops._resolve_decode(None)
+    assert pf_ops._resolve_decode("xla") == "xla"
+    monkeypatch.setenv("REPRO_KERNEL_DECODE", "xla")
+    assert pf_ops._resolve_decode(None) == "xla"
+    monkeypatch.delenv("REPRO_KERNEL_DECODE")
+    assert pf_ops._resolve_decode(None) == "pallas"
+
+
+# ----------------------------------------------------------- prefill parity
+@pytest.mark.parametrize("arch", ["gemma2-2b", "smollm-360m"])
+@pytest.mark.parametrize("impl", ["pallas", "xla"])
+def test_prefill_fused_matches_loop_bitwise(arch, impl):
+    """Fused chunked prefill == per-token loop, bit for bit, on every
+    teacher-forced logit (gemma2: local+global+softcaps; smollm: pure
+    global GQA)."""
+    cfg = get_config(arch).reduced()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    B, P = 3, 33          # ragged vs the 128 block: padded rows in chunk
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, P), 1,
+                                cfg.vocab_size)
+    scfg = ServeConfig(max_seq=P + 8, chunk_tokens=128, decode_impl=impl)
+    fused = Engine(cfg, params, CTX, scfg, batch_size=B)
+    _, lg_fused = fused.prefill(prompt, mode="fused", return_logits=True)
+    loop = Engine(cfg, params, CTX, scfg, batch_size=B)
+    _, lg_loop = loop.prefill(prompt, mode="loop", return_logits=True)
+    np.testing.assert_array_equal(np.asarray(lg_fused),
+                                  np.asarray(lg_loop))
+
+
+def test_generate_matches_legacy_decode_path():
+    """Serve-layout generation (ragged kernel, non-ring local cache)
+    reproduces the legacy dense decode path's greedy tokens."""
+    for arch in ("gemma2-2b", "mamba2-370m"):
+        cfg = get_config(arch).reduced()
+        params = M.init(jax.random.PRNGKey(0), cfg)
+        B, P, new = 2, 12, 6
+        prompt = jax.random.randint(jax.random.PRNGKey(1), (B, P), 1,
+                                    cfg.vocab_size)
+        eng = Engine(cfg, params, CTX,
+                     ServeConfig(max_seq=P + new + 1, max_new_tokens=new),
+                     batch_size=B)
+        out = eng.generate(prompt)
+
+        cache = M.init_cache(params, cfg, B, P + new + 1, ctx=CTX)
+        step = jax.jit(make_serve_step(cfg, CTX))
+        last = None
+        for t in range(P):
+            last, _, cache = step(params, cache, prompt[:, t:t + 1],
+                                  jnp.full((B,), t, jnp.int32))
+        ref = [last]
+        for i in range(new - 1):
+            last, _, cache = step(params, cache, last[:, None],
+                                  jnp.full((B,), P + i, jnp.int32))
+            ref.append(last)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(jnp.stack(ref, 1)))
+
+
+# ------------------------------------------------------- continuous batching
+def _mk_reqs(lens, max_new=4, vocab=100, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(1, vocab, int(l))
+                    .astype(np.int32), max_new_tokens=max_new)
+            for i, l in enumerate(lens)]
+
+
+def _drain(sched):
+    """Drive the scheduler without a model: prefill chunks + dummy decode
+    commits, recording nothing but the trace."""
+    guard = 0
+    while sched.has_work():
+        guard += 1
+        assert guard < 500, "scheduler did not converge"
+        sched.admit()
+        chunk = sched.next_prefill_chunk(fused=True)
+        if chunk is not None:
+            sched.commit_prefill(chunk, {s: 7 for s, _ in chunk.last_rows})
+            continue
+        sched.evict_for_budget()
+        batch = sched.decode_batch()
+        if batch is None:
+            continue
+        sched.commit_decode(np.full(sched.cfg.n_slots, 7, np.int32))
+
+
+def test_admission_fcfs_ordering():
+    """FCFS admission with head-of-line blocking: slots fill in arrival
+    order; later requests wait for finishes, deterministically."""
+    sched = ContinuousScheduler(SchedulerConfig(
+        n_slots=2, max_seq=64, chunk_tokens=128))
+    for r in _mk_reqs([8, 8, 8, 8]):
+        sched.submit(r)
+    _drain(sched)
+    admits = [rid for ev, rid in sched.trace if ev == "admit"]
+    finishes = [rid for ev, rid in sched.trace if ev == "finish"]
+    assert admits == [0, 1, 2, 3]
+    assert finishes == [0, 1, 2, 3]
+    # requests 2/3 were admitted only after 0/1 freed their slots
+    assert sched.trace.index(("admit", 2)) \
+        > sched.trace.index(("finish", 0))
+
+
+def test_admission_cost_policy_orders_by_predicted_cost():
+    """"cost" admission = the CAD cost model repurposed: cheapest
+    predicted steady-state CA first."""
+    cm = CostModel.analytic(n_heads=4, head_dim=64)
+    sched = ContinuousScheduler(SchedulerConfig(
+        n_slots=1, max_seq=2048, chunk_tokens=128, admission="cost",
+        cost_model=cm))
+    for r in _mk_reqs([1024, 8, 300], max_new=2):
+        sched.submit(r)
+    _drain(sched)
+    admits = [rid for ev, rid in sched.trace if ev == "admit"]
+    assert admits == [1, 2, 0]          # shortest predicted cost first
+
+
+def test_eviction_lifo_under_token_budget():
+    """Decode growth past the token budget preempts the most recently
+    admitted request, which requeues at the FRONT and reruns."""
+    sched = ContinuousScheduler(SchedulerConfig(
+        n_slots=2, max_seq=40, chunk_tokens=128, token_budget=28))
+    for r in _mk_reqs([8, 8], max_new=16):
+        sched.submit(r)
+    _drain(sched)
+    assert ("evict", 1) in sched.trace, "LIFO evicts the younger request"
+    assert ("evict", 0) not in sched.trace
+    t = sched.trace
+    assert t.index(("evict", 1)) < t.index(("finish", 0)) \
+        < t.index(("finish", 1))
+    req1 = next(r for r in sched.done if r.rid == 1)
+    assert req1.n_evictions >= 1
+    assert len(req1.out_tokens) == 16   # full generation after rerun
+
+
+def test_unadmissible_request_raises():
+    sched = ContinuousScheduler(SchedulerConfig(
+        n_slots=1, max_seq=64, chunk_tokens=128, token_budget=8))
+    sched.submit(_mk_reqs([32], max_new=4)[0])
+    with pytest.raises(RuntimeError, match="never be admitted"):
+        sched.admit()
+
+
+def test_continuous_batching_matches_solo_runs():
+    """Slot recycling and packed prefill across concurrent ragged
+    requests must not change any request's tokens vs running it alone
+    (state isolation across admissions)."""
+    cfg = get_config("gemma2-2b").reduced()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, int(l)).astype(np.int32)
+               for l in (9, 30, 5, 17)]
+    scfg = ServeConfig(max_seq=64, max_new_tokens=4, chunk_tokens=128)
+    eng = Engine(cfg, params, CTX, scfg, batch_size=2)
+    res = eng.serve(prompts)
+    assert sorted(res) == [0, 1, 2, 3]
+    solo = Engine(cfg, params, CTX, scfg, batch_size=2)
+    for i, pr in enumerate(prompts):
+        np.testing.assert_array_equal(solo.serve([pr])[0], res[i])
+
+
+def test_continuous_batching_eviction_end_to_end():
+    """A request evicted mid-decode re-prefills from scratch and still
+    produces its solo tokens."""
+    cfg = get_config("smollm-360m").reduced()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(2)]
+    scfg = ServeConfig(max_seq=40, max_new_tokens=12, chunk_tokens=128,
+                       token_budget=28)
+    eng = Engine(cfg, params, CTX, scfg, batch_size=2)
+    res = eng.serve(prompts)
+    assert ("evict", 1) in eng.last_trace
+    solo = Engine(cfg, params, CTX, scfg, batch_size=2)
+    for i, pr in enumerate(prompts):
+        np.testing.assert_array_equal(solo.serve([pr])[0], res[i])
+
+
+def test_serve_loop_prefill_mode_matches_fused():
+    """prefill="loop" continuous batching (the recurrent/MoE path) yields
+    the same tokens as fused — they are bit-identical computations."""
+    cfg = get_config("gemma2-2b").reduced()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, cfg.vocab_size, int(l)).astype(np.int32)
+               for l in (7, 13, 4)]
+    out = {}
+    for mode in ("fused", "loop"):
+        eng = Engine(cfg, params, CTX,
+                     ServeConfig(max_seq=48, max_new_tokens=3,
+                                 chunk_tokens=128, prefill=mode),
+                     batch_size=2)
+        out[mode] = eng.serve(prompts)
+    for i in range(len(prompts)):
+        np.testing.assert_array_equal(out["fused"][i], out["loop"][i])
+
+
+def test_continuous_batching_recurrent_state_isolation():
+    """Recurrent archs: a DECODE-state request idling (pos = -1 rows)
+    while another request prefills must keep its conv/SSM/LRU state
+    frozen — ragged concurrent serving equals solo serving."""
+    for arch in ("mamba2-370m", "recurrentgemma-9b"):
+        cfg = get_config(arch).reduced()
+        params = M.init(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(3)
+        prompts = [rng.integers(1, cfg.vocab_size, int(l))
+                   .astype(np.int32) for l in (4, 19, 7)]
+        scfg = ServeConfig(max_seq=48, max_new_tokens=4, chunk_tokens=128)
+        eng = Engine(cfg, params, CTX, scfg, batch_size=2)
+        res = eng.serve(prompts)
+        solo = Engine(cfg, params, CTX, scfg, batch_size=2)
+        for i, pr in enumerate(prompts):
+            np.testing.assert_array_equal(solo.serve([pr])[0], res[i],
+                                          err_msg=f"{arch} req {i}")
+
+
+def test_single_over_budget_request_completes():
+    """The budget goes soft for the oldest active request: a request
+    whose decode growth alone busts the budget still completes instead
+    of evict/re-admit livelocking."""
+    sched = ContinuousScheduler(SchedulerConfig(
+        n_slots=1, max_seq=64, chunk_tokens=128, token_budget=16))
+    sched.submit(_mk_reqs([10], max_new=20)[0])
+    _drain(sched)
+    assert [e for e, _ in sched.trace] == ["admit", "finish"]
+    assert len(sched.done[0].out_tokens) == 20
+
+
+def test_engine_rejects_overflowing_requests():
+    cfg = get_config("smollm-360m").reduced()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, CTX,
+                 ServeConfig(max_seq=32, max_new_tokens=16), batch_size=1)
+    with pytest.raises(ValueError, match="exceeds max_seq"):
+        eng.prefill(jnp.ones((1, 40), jnp.int32))
+    with pytest.raises(ValueError, match="does not fit max_seq"):
+        eng.generate(jnp.ones((1, 20), jnp.int32))
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.serve([np.ones(40, np.int32)])
+
+
+def test_recurrent_batch_size_one():
+    """Recurrent archs at batch_size=1: the single-row chunk must NOT be
+    dead-row padded (their per-request state is indexed by the row dim);
+    generate and serve both work and agree with a 2-slot engine."""
+    cfg = get_config("mamba2-370m").reduced()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 10), 1,
+                                cfg.vocab_size)
+    scfg = ServeConfig(max_seq=24, max_new_tokens=3)
+    out1 = Engine(cfg, params, CTX, scfg, batch_size=1).generate(prompt)
+    res = Engine(cfg, params, CTX, scfg, batch_size=1).serve(
+        [np.asarray(prompt[0])])
+    out2 = Engine(cfg, params, CTX, scfg, batch_size=2).generate(
+        jnp.concatenate([prompt, prompt]))
+    np.testing.assert_array_equal(np.asarray(out1[0]), res[0])
+    np.testing.assert_array_equal(np.asarray(out1[0]),
+                                  np.asarray(out2[0]))
+
+
+def test_admission_counts_committed_prefill():
+    """Two large prompts must not co-admit past the token budget just
+    because their kv_len is still 0 at admission time (the committed
+    prompt counts from admission)."""
+    sched = ContinuousScheduler(SchedulerConfig(
+        n_slots=2, max_seq=640, chunk_tokens=128, token_budget=1024))
+    for r in _mk_reqs([600, 600], max_new=4):
+        sched.submit(r)
+    assert [r.rid for r in sched.admit()] == [0]
+    _drain(sched)
+    assert [e for e, _ in sched.trace] == \
+        ["admit", "finish", "admit", "finish"]
+    assert not any(e == "evict" for e, _ in sched.trace)
+
+
+def test_empty_prompt_rejected():
+    sched = ContinuousScheduler(SchedulerConfig(
+        n_slots=1, max_seq=64, chunk_tokens=128))
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit(Request(rid=0, prompt=np.zeros(0, np.int32)))
+
+
+def test_misaligned_chunk_tokens_rejected():
+    with pytest.raises(ValueError, match="multiple of"):
+        SchedulerConfig(n_slots=1, max_seq=64, chunk_tokens=100)
+
+
+def test_prefill_accepts_full_max_seq_prompt():
+    """A prompt of exactly max_seq tokens is legal on BOTH prefill paths
+    even at batch_size=1 (the fused path's internal scheduler must not
+    impose a stricter capacity check than the loop's)."""
+    cfg = get_config("smollm-360m").reduced()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    P = 128
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, P), 1,
+                                cfg.vocab_size)
+    scfg = ServeConfig(max_seq=P, max_new_tokens=1, chunk_tokens=128)
+    eng = Engine(cfg, params, CTX, scfg, batch_size=1)
+    lf = eng.prefill(prompt, mode="fused")
+    ll = eng.prefill(prompt, mode="loop")
+    np.testing.assert_array_equal(np.asarray(lf), np.asarray(ll))
+
+
+def test_serve_explicit_zero_max_new_tokens():
+    """serve(..., max_new_tokens=0) means prefill-only — the explicit 0
+    must not fall back to the config default."""
+    cfg = get_config("smollm-360m").reduced()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, CTX,
+                 ServeConfig(max_seq=32, max_new_tokens=8), batch_size=1)
+    res = eng.serve([np.arange(1, 30, dtype=np.int32)], max_new_tokens=0)
+    assert res[0].shape == (0,)
+
+
+def test_legacy_prefill_rejects_fused_and_return_logits():
+    cfg = get_config("whisper-large-v3").reduced()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    mem = jax.random.normal(jax.random.PRNGKey(1),
+                            (1, cfg.encoder.n_ctx, cfg.d_model),
+                            jnp.float32) * 0.02
+    eng = Engine(cfg, params, CTX, ServeConfig(max_seq=16), memory=mem,
+                 batch_size=1)
+    toks = jnp.ones((1, 4), jnp.int32)
+    with pytest.raises(ValueError, match="fused prefill unsupported"):
+        eng.prefill(toks, mode="fused")
+    with pytest.raises(ValueError, match="return_logits"):
+        eng.prefill(toks, return_logits=True)
+    assert eng.prefill(toks).shape == (1, cfg.vocab_size)
+
+
+def test_engine_reuse_resets_recurrent_state():
+    """A second generate() on the same engine must match a fresh engine
+    (prefill resets kv visibility AND recurrent state)."""
+    cfg = get_config("mamba2-370m").reduced()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 1,
+                                cfg.vocab_size)
+    scfg = ServeConfig(max_seq=24, max_new_tokens=4)
+    eng = Engine(cfg, params, CTX, scfg, batch_size=2)
+    first = eng.generate(prompt)
+    second = eng.generate(prompt)
+    np.testing.assert_array_equal(np.asarray(first), np.asarray(second))
+
+
+def test_serve_cache_layout_guards():
+    cfg = get_config("gemma2-2b").reduced()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="unknown cache layout"):
+        M.init_cache(params, cfg, 1, 32, layout="paged")
+    vcfg = get_config("llama-3.2-vision-11b").reduced()
+    vparams = M.init(jax.random.PRNGKey(0), vcfg)
+    with pytest.raises(ValueError, match="cross-attention"):
+        M.init_cache(vparams, vcfg, 1, 32, layout="serve")
