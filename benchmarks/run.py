@@ -10,6 +10,10 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py format).
   fig12_tolerance       Fig. 12   — tolerance factor sweep (real scheduler)
   sched_microbench      §4.2      — scheduler wall-time per batch
   prefetch_microbench   §4.2      — async plan prefetch vs inline planning
+  straggler_elim        §4.2/D§3  — runtime calibration on a pool with an
+                                    injected 0.5x server: measured
+                                    max/mean per-server compute,
+                                    calibrated vs uncalibrated
   serve_throughput      DESIGN §8 — fused chunked prefill vs per-token
                                     loop + continuous-batching decode rate
 
@@ -114,7 +118,8 @@ def main() -> None:
 
     from benchmarks import (cp_overheads, dedicated_pool, e2e_sim,
                             imbalance, kernel_throughput, overlap,
-                            pp_bubbles, serve_throughput, table1_scaling,
+                            pp_bubbles, serve_throughput,
+                            straggler_elim, table1_scaling,
                             tolerance_sweep)
     benches = {
         "table1": table1_scaling.main,
@@ -128,12 +133,15 @@ def main() -> None:
         "fig12": lambda: tolerance_sweep.main(fast=args.fast),
         "sched": lambda: sched_microbench(fast=args.fast),
         "prefetch": lambda: prefetch_microbench(fast=args.fast),
+        "straggler": lambda: straggler_elim.main(fast=args.fast),
         "dedicated": dedicated_pool.main,
         "serve": lambda: serve_throughput.main(fast=args.fast),
     }
     # the machine-readable subset: kernel fwd/bwd, plan imbalance,
-    # prefetch overlap, serve throughput — the CI perf trajectory
-    json_keys = ("fig5", "kernel_bwd", "fig4", "prefetch", "serve")
+    # prefetch overlap, straggler elimination, serve throughput — the
+    # CI perf trajectory
+    json_keys = ("fig5", "kernel_bwd", "fig4", "prefetch", "straggler",
+                 "serve")
     results, failed = {}, 0
     for name, fn in benches.items():
         if args.only and name != args.only:

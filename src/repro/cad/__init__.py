@@ -3,13 +3,17 @@
 This package is the single entry point for CAD:
 
   CADSession          owns pool config, kernel, ping-pong, tolerance,
-                      plan policy; builds contexts and plans
+                      plan policy; builds contexts and plans; feeds
+                      measured timings back to the calibrator
   StepPlan            one step's dispatch plan, a typed JAX pytree
   PingPongPlan        the two nano-batch plans of a ping-pong step
   register_planner /  string-keyed plan-policy registry
   get_planner         ("identity" | "per_doc_cp" | "balanced")
-  PlanPrefetcher      async host-side plan prefetch (bounded queue)
+  PlanPrefetcher      async host-side plan prefetch (bounded queue,
+                      stale-plan refresh under calibration)
   PlanCapacityError   static-capacity overflow diagnostics
+  GridCalibrator      runtime (q_len, kv_len) latency-grid profiler with
+                      per-server speed estimation (DESIGN.md §3)
 
 Legacy entry points (``make_cad_context``, raw dict plans through
 ``CADContext``) keep working for one release; new code should construct
@@ -19,6 +23,7 @@ from repro.cad.planner import (PlanResult, Planner, available_policies,
                                get_planner, register_planner)
 from repro.cad.prefetch import PlanPrefetcher
 from repro.cad.session import CADSession
+from repro.core.cost_model import CalibrationSnapshot, GridCalibrator
 from repro.core.plan import (CADConfig, PingPongPlan, PlanCapacityError,
                              StepPlan)
 
@@ -26,4 +31,5 @@ __all__ = [
     "CADSession", "StepPlan", "PingPongPlan", "CADConfig",
     "PlanCapacityError", "Planner", "PlanResult", "register_planner",
     "get_planner", "available_policies", "PlanPrefetcher",
+    "GridCalibrator", "CalibrationSnapshot",
 ]

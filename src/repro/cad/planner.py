@@ -23,6 +23,15 @@ to a unit-size byte model — pass the real ``CommModel`` whenever stats
 are compared across call sites.  ``build_plan=False`` skips the
 dispatch-array construction (and its capacity checks) for
 analysis-only callers that never dispatch.
+
+Heterogeneous pools and runtime calibration (DESIGN.md §3): every
+policy accepts ``cost_model`` (a measured/calibrated latency grid;
+``None`` = relative FLOPs) and ``speeds`` (per-server speed factors;
+``None`` = ``cfg.speeds()``).  Reported ``loads`` are per-server
+modeled *time* — assigned cost over speed — so stats stay comparable
+across policies on a heterogeneous pool; ``balanced`` additionally
+balances against per-server capacity, giving a 0.5x server half the
+FLOPs.
 """
 from __future__ import annotations
 
@@ -31,7 +40,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.cost_model import CommModel
+from repro.core.cost_model import CommModel, CostModel
 from repro.core.plan import CADConfig, StepPlan, head_tail_assignment, \
     identity_assignment, plan_from_assignment
 from repro.core.scheduler import block_costs, layout_from_segments, \
@@ -43,15 +52,18 @@ class PlanResult:
     """A planner's output: the typed plan, the raw per-block assignment
     (for analysis/benchmarks), per-server loads, and summary stats.
     ``plan`` is None when the planner ran with ``build_plan=False``
-    (analysis-only callers that never dispatch)."""
+    (analysis-only callers that never dispatch).  ``loads`` is modeled
+    per-server time (cost / speed); with the homogeneous default and no
+    cost model it equals relative FLOPs."""
     plan: Optional[StepPlan]
     assign: np.ndarray            # [G] server per global q-block
-    loads: np.ndarray             # [S] per-server cost (relative FLOPs)
+    loads: np.ndarray             # [S] per-server modeled time
     stats: Dict[str, float]       # comm_bytes, n_moves, load_max_over_mean
 
 
 # planner signature:
-#   (cfg, segment_ids, *, comm, tolerance, build_plan) -> PlanResult
+#   (cfg, segment_ids, *, comm, tolerance, build_plan, cost_model,
+#    speeds) -> PlanResult
 Planner = Callable[..., PlanResult]
 
 _PLANNERS: Dict[str, Planner] = {}
@@ -77,13 +89,20 @@ def available_policies() -> Tuple[str, ...]:
     return tuple(sorted(_PLANNERS))
 
 
+def _resolve_speeds(cfg: CADConfig, speeds) -> np.ndarray:
+    return cfg.speeds() if speeds is None \
+        else np.asarray(speeds, np.float64)
+
+
 def _loads_of(assign: np.ndarray, doc_of: np.ndarray, bi_of: np.ndarray,
-              blk: int, n_servers: int) -> np.ndarray:
-    cost = block_costs(doc_of, bi_of, blk)
+              blk: int, n_servers: int,
+              cost_model: Optional[CostModel] = None,
+              speeds: Optional[np.ndarray] = None) -> np.ndarray:
+    cost = block_costs(doc_of, bi_of, blk, cost_model)
     loads = np.zeros(n_servers)
     live = doc_of >= 0
     np.add.at(loads, assign[live].astype(np.int64), cost[live])
-    return loads
+    return loads if speeds is None else loads / speeds
 
 
 def _migration_bytes(cfg: CADConfig, assign: np.ndarray, docs,
@@ -123,13 +142,16 @@ def _stats(loads: np.ndarray, comm_bytes: float, n_moves: int) \
 def identity_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
                      comm: Optional[CommModel] = None,
                      tolerance: float = 0.0,
-                     build_plan: bool = True) -> PlanResult:
+                     build_plan: bool = True,
+                     cost_model: Optional[CostModel] = None,
+                     speeds: Optional[np.ndarray] = None) -> PlanResult:
     docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
                                                cfg.n_servers)
     assign = identity_assignment(cfg)
     plan = plan_from_assignment(cfg, assign, doc_of, bi_of, docs) \
         if build_plan else None
-    loads = _loads_of(assign, doc_of, bi_of, cfg.blk, cfg.n_servers)
+    loads = _loads_of(assign, doc_of, bi_of, cfg.blk, cfg.n_servers,
+                      cost_model, _resolve_speeds(cfg, speeds))
     return PlanResult(plan=plan, assign=assign, loads=loads,
                       stats=_stats(loads, 0.0, 0))
 
@@ -138,14 +160,20 @@ def identity_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
 def per_doc_cp_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
                        comm: Optional[CommModel] = None,
                        tolerance: float = 0.0,
-                       build_plan: bool = True) -> PlanResult:
-    """Head-tail per-document CP (paper §2.2 as a special-case plan)."""
+                       build_plan: bool = True,
+                       cost_model: Optional[CostModel] = None,
+                       speeds: Optional[np.ndarray] = None) -> PlanResult:
+    """Head-tail per-document CP (paper §2.2 as a special-case plan).
+    The dealing order is the paper's fixed head-tail pairing — speed-
+    oblivious by construction — but loads/stats are still reported in
+    modeled time so heterogeneous-pool comparisons stay honest."""
     docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
                                                cfg.n_servers)
     assign = head_tail_assignment(cfg, docs)
     plan = plan_from_assignment(cfg, assign, doc_of, bi_of, docs) \
         if build_plan else None
-    loads = _loads_of(assign, doc_of, bi_of, cfg.blk, cfg.n_servers)
+    loads = _loads_of(assign, doc_of, bi_of, cfg.blk, cfg.n_servers,
+                      cost_model, _resolve_speeds(cfg, speeds))
     n_moves = int((assign != identity_assignment(cfg)).sum())
     return PlanResult(
         plan=plan, assign=assign, loads=loads,
@@ -157,12 +185,18 @@ def per_doc_cp_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
 def balanced_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
                      comm: Optional[CommModel] = None,
                      tolerance: float = 0.1,
-                     build_plan: bool = True) -> PlanResult:
-    """The paper's communication-aware greedy scheduler (§4.2)."""
+                     build_plan: bool = True,
+                     cost_model: Optional[CostModel] = None,
+                     speeds: Optional[np.ndarray] = None) -> PlanResult:
+    """The paper's communication-aware greedy scheduler (§4.2), balancing
+    modeled time across per-server capacities (calibrated cost model +
+    speed factors) when provided."""
     if comm is None:
         comm = CommModel(n_heads=1, head_dim=1, n_kv_heads=1)
     sch = schedule(segment_ids, blk=cfg.blk, n_servers=cfg.n_servers,
-                   comm=comm, caps=cfg.caps(), tolerance=tolerance)
+                   comm=comm, caps=cfg.caps(), tolerance=tolerance,
+                   speeds=_resolve_speeds(cfg, speeds),
+                   cost_model=cost_model)
     plan = plan_from_assignment(cfg, sch.assign, sch.doc_of_block,
                                 sch.bi_of_block, sch.docs) \
         if build_plan else None

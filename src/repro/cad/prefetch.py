@@ -10,12 +10,22 @@ planning genuinely overlaps device compute.
 If the worker dies, its exception is re-raised at the consumer's next
 pull — a failed plan is never silently swallowed.  ``CADSession`` falls
 back to fully synchronous planning when ``prefetch=0``.
+
+Runtime calibration crosses this thread boundary (DESIGN.md §3): the
+worker plans ahead with whatever calibration snapshot is current *when
+it plans*, so a prefetched plan can be up to ``depth`` steps stale by
+the time the consumer pulls it.  ``is_stale``/``refresh`` close the
+loop deterministically: the staleness check and the synchronous re-plan
+both run on the *consumer* thread at pull time, so which snapshot a
+yielded plan was built from is a pure function of the pull sequence —
+never of worker-thread timing — and replay stays deterministic (each
+plan records its ``calib_version``).
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Callable, Iterable, Iterator
+from typing import Any, Callable, Iterable, Iterator, Optional
 
 _DONE = object()
 
@@ -27,14 +37,25 @@ class PlanPrefetcher:
     items beyond what the consumer has taken.  Order is preserved (single
     worker, FIFO queue).  ``close()`` — also invoked by ``with`` exit and
     generator teardown — stops the worker and joins it.
+
+    ``is_stale`` (optional) is evaluated against each planned item on
+    the consumer thread at pull time; when it returns True the item is
+    re-planned synchronously with ``refresh`` (default: ``fn``) before
+    being yielded — the calibration feedback path.  ``stale_refreshes``
+    counts how many pulls re-planned.
     """
 
     def __init__(self, source: Iterable[Any], fn: Callable[[Any], Any],
-                 depth: int = 2):
+                 depth: int = 2, *,
+                 is_stale: Optional[Callable[[Any], bool]] = None,
+                 refresh: Optional[Callable[[Any], Any]] = None):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self._source = iter(source)
         self._fn = fn
+        self._is_stale = is_stale
+        self._refresh = refresh if refresh is not None else fn
+        self.stale_refreshes = 0
         self._queue: "queue.Queue[Any]" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._exc: BaseException | None = None
@@ -84,6 +105,9 @@ class PlanPrefetcher:
                 if self._exc is not None:
                     raise self._exc
                 raise StopIteration
+            if self._is_stale is not None and self._is_stale(item):
+                item = self._refresh(item)
+                self.stale_refreshes += 1
             return item
 
     def close(self) -> None:

@@ -12,17 +12,24 @@ session you derive:
   session.attach_plans(batches)  a batch stream with plans attached,
                                  planned asynchronously one step ahead
                                  (the paper's scheduler prefetch)
+  session.observe*(...)          measured CA-task timings fed back into
+                                 the runtime calibrator, so batch i+1
+                                 is planned from batch i's costs
 
 DESIGN.md §1 places the session in the data → planner → dispatch →
-kernels architecture; §3 explains the static capacities it configures.
+kernels architecture; §3 explains the static capacities it configures
+and the measure → fit → replan calibration loop.
 
 Construction::
 
   session = CADSession.for_pipeline(model_cfg, pipe_cfg,
-                                    plan_policy="balanced")
+                                    plan_policy="balanced",
+                                    server_speeds=(1.0, 0.5),
+                                    calibrate=True)
   ctx = session.context()
   for batch in session.attach_plans(raw_batches(pipe_cfg)):
       params, opt_state, metrics = step(params, opt_state, batch)
+      session.observe_probe(batch["plan"])    # feed measured timings
 
 Unlike the deprecated ``make_cad_context``, ``for_pipeline`` never
 mutates the pipeline config.
@@ -36,8 +43,10 @@ import numpy as np
 
 from repro.cad.planner import get_planner
 from repro.cad.prefetch import PlanPrefetcher
-from repro.core.cost_model import CommModel
-from repro.core.dispatch import CADContext
+from repro.core.cost_model import (CalibrationSnapshot, CommModel,
+                                   CostModel, GridCalibrator)
+from repro.core.dispatch import CADContext, iter_plan_tasks, \
+    probe_plan_times
 from repro.core.plan import CADConfig, PingPongPlan, StepPlan
 from repro.parallel import ParallelContext, ShardingRules
 
@@ -46,7 +55,14 @@ Plan = Union[StepPlan, PingPongPlan]
 
 @dataclasses.dataclass(frozen=True)
 class CADSession:
-    """Immutable description of the attention service for one run."""
+    """Immutable description of the attention service for one run.
+
+    ``calibrator`` (optional) owns the runtime measure → fit → replan
+    loop: every ``plan()`` call consumes one immutable calibration
+    snapshot (cost model + per-server speeds) and records its version
+    in the schedule stats; ``observe*`` feeds measured timings back.
+    The calibrator object itself is mutable shared state — the one
+    deliberate exception to the session's immutability."""
     cfg: CADConfig
     kernel: str = "xla"            # "xla" | "pallas" server implementation
     bwd: Optional[str] = None      # None (default) | "pallas" | "xla"
@@ -58,17 +74,27 @@ class CADSession:
     mesh: Any = None
     rules: Any = None
     prefetch: int = 2              # plan look-ahead depth; 0 = synchronous
+    calibrator: Optional[GridCalibrator] = None
+    recalib_threshold: float = 0.05   # speed drift that re-plans a
+                                      # prefetched (stale) plan at pull
 
     # ------------------------------------------------------- constructors
     @classmethod
     def for_pipeline(cls, model_cfg, pipe_cfg, *, kernel: str = "xla",
                      pingpong: bool = False, tolerance: float = 0.1,
                      plan_policy: str = "balanced", mesh=None, rules=None,
-                     prefetch: int = 2) -> "CADSession":
+                     prefetch: int = 2, server_speeds=None,
+                     calibrate: bool = False,
+                     calib_ema: float = 0.5) -> "CADSession":
         """Size the attention-server pool for a training pipeline.
 
         ``pipe_cfg`` needs ``n_ranks``, ``global_batch``, ``seq_len`` and
-        ``max_doc_len``; it is read, never mutated."""
+        ``max_doc_len``; it is read, never mutated.  ``server_speeds``
+        declares known pool heterogeneity (a 0.5 entry = half-speed
+        server); ``calibrate=True`` additionally attaches a
+        :class:`GridCalibrator` (seeded with the analytic model and the
+        declared speeds as prior) so measured timings keep refining
+        both the latency grid and the speed estimates."""
         n = pipe_cfg.n_ranks
         rows_per_rank = pipe_cfg.global_batch // n
         tokens_per_rank = rows_per_rank * pipe_cfg.seq_len
@@ -78,16 +104,23 @@ class CADSession:
                                  f"per rank, got {rows_per_rank}")
             tokens_per_rank //= 2          # pool sized per nano-batch
         cadcfg = CADConfig.default(n, tokens_per_rank,
-                                   max_doc_tokens=pipe_cfg.max_doc_len)
-        comm = CommModel(n_heads=getattr(model_cfg, "n_heads", 1) or 1,
-                         head_dim=getattr(model_cfg, "head_dim", 1) or 1,
+                                   max_doc_tokens=pipe_cfg.max_doc_len,
+                                   server_speeds=server_speeds)
+        n_heads = getattr(model_cfg, "n_heads", 1) or 1
+        head_dim = getattr(model_cfg, "head_dim", 1) or 1
+        comm = CommModel(n_heads=n_heads, head_dim=head_dim,
                          n_kv_heads=getattr(model_cfg, "n_kv_heads", 1)
                          or 1)
+        calibrator = None
+        if calibrate:
+            calibrator = GridCalibrator(
+                CostModel.analytic(n_heads, head_dim), n,
+                ema=calib_ema, prior_speeds=cadcfg.speeds())
         jmax = max(1, pipe_cfg.max_doc_len // cadcfg.blk)
         return cls(cfg=cadcfg, kernel=kernel, pingpong=pingpong,
                    tolerance=tolerance, plan_policy=plan_policy,
                    jmax=jmax, comm=comm, mesh=mesh, rules=rules,
-                   prefetch=prefetch)
+                   prefetch=prefetch, calibrator=calibrator)
 
     # ------------------------------------------------------------ context
     def context(self, *, remat: bool = True) -> ParallelContext:
@@ -100,17 +133,115 @@ class CADSession:
                                attn_impl="cad", cad=cad, remat=remat,
                                pingpong=self.pingpong)
 
+    # ------------------------------------------------------- calibration
+    def _snapshot(self) -> Optional[CalibrationSnapshot]:
+        return None if self.calibrator is None \
+            else self.calibrator.snapshot()
+
+    def _planner_kwargs(self, snap: Optional[CalibrationSnapshot]) \
+            -> Dict[str, Any]:
+        if snap is None:
+            return {}
+        return {"cost_model": snap.cost_model,
+                "speeds": snap.speeds_array()}
+
+    def _annotate(self, stats: Dict[str, float],
+                  snap: Optional[CalibrationSnapshot]) -> Dict[str, float]:
+        if snap is not None:
+            stats["calib_version"] = float(snap.version)
+            for s, sp in enumerate(snap.speeds):
+                stats[f"calib_speed_{s}"] = float(sp)
+        return stats
+
+    def _plan_stale(self, batch: Dict[str, Any]) -> bool:
+        """True when a prefetched batch's plan was built from speeds
+        that have since drifted beyond ``recalib_threshold`` — checked
+        (and re-planned) on the consumer thread at pull time."""
+        snap = self._snapshot()
+        st = batch.get("schedule_stats") or {}
+        if snap is None or "calib_version" not in st:
+            return False
+        if int(st["calib_version"]) == snap.version:
+            return False
+        drift = max(abs(st.get(f"calib_speed_{s}", 1.0) - snap.speeds[s])
+                    for s in range(self.cfg.n_servers))
+        return drift > self.recalib_threshold
+
+    def observe(self, q_tokens: int, kv_tokens: int, seconds: float,
+                server: Optional[int] = None) -> None:
+        """Feed one measured CA-task timing into the calibrator."""
+        if self.calibrator is not None:
+            self.calibrator.observe(q_tokens, kv_tokens, seconds,
+                                    server=server)
+
+    def observe_server(self, server: int, tasks, seconds: float) -> None:
+        """Feed one per-server fused-batch timing (``tasks`` is the
+        server's [(q_tokens, kv_tokens), ...] composition)."""
+        if self.calibrator is not None:
+            self.calibrator.observe_tasks(tasks, seconds, server=server)
+
+    def observe_plan(self, plan, per_server_seconds) -> None:
+        """Feed measured per-server serve times for one executed plan;
+        task shapes are recovered from the plan's dispatch arrays.  A
+        ping-pong step's timing covers both nano-batch halves, so a
+        :class:`PingPongPlan` contributes the tasks of both."""
+        if self.calibrator is None:
+            return
+        halves = list(plan) if isinstance(plan, (tuple, list,
+                                                 PingPongPlan)) \
+            else [plan]
+        by_server: Dict[int, list] = {}
+        for p in halves:
+            for s, _slot, qt, kvt in iter_plan_tasks(self.cfg, p):
+                by_server.setdefault(s, []).append((qt, kvt))
+        if not isinstance(per_server_seconds, dict):
+            per_server_seconds = dict(enumerate(per_server_seconds))
+        for s, seconds in per_server_seconds.items():
+            if s in by_server:
+                self.calibrator.observe_tasks(by_server[s], float(seconds),
+                                              server=s)
+
+    def observe_probe(self, plan, *, repeats: int = 1,
+                      seed: int = 0) -> None:
+        """Measure per-server serve time for ``plan`` with the eager
+        synthetic-tensor probe (``core.dispatch.probe_plan_times``) and
+        feed the timings back — the trainer's ``calibrate_every`` hook.
+        Ping-pong plans probe both nano-batch halves."""
+        if self.calibrator is None:
+            return
+        comm = self.comm or CommModel(1, 1, 1)
+        plans = list(plan) if isinstance(plan, (tuple, list, PingPongPlan)) \
+            else [plan]
+        for p in plans:
+            # ping-pong halves may have been planned with a nano-batch
+            # re-sized config; recover the geometry from the arrays
+            nb = np.asarray(p["q_home_idx"]).shape[1]
+            cfg = self.cfg if nb == self.cfg.nb \
+                else dataclasses.replace(self.cfg, nb=nb)
+            cad = CADContext(cfg=cfg, kernel=self.kernel, bwd=self.bwd,
+                             jmax=self.jmax)
+            for s, tasks, seconds in probe_plan_times(
+                    cad, p, n_heads=comm.n_heads, head_dim=comm.head_dim,
+                    n_kv_heads=comm.n_kv_heads, seed=seed,
+                    repeats=repeats):
+                self.calibrator.observe_tasks(tasks, seconds, server=s)
+
     # ----------------------------------------------------------- planning
     def plan(self, segment_ids: np.ndarray) \
             -> Tuple[Plan, Dict[str, float]]:
         """Plan one step.  ``segment_ids`` is the rank-major [D, T] packed
-        layout (T = tokens per rank; 2·nb·blk when ping-pong is on)."""
+        layout (T = tokens per rank; 2·nb·blk when ping-pong is on).
+        With a calibrator attached, the whole step — both ping-pong
+        halves — plans from ONE calibration snapshot, recorded in the
+        stats as ``calib_version`` (+ the per-server speeds used)."""
         segs = np.asarray(segment_ids)
         planner = get_planner(self.plan_policy)
+        snap = self._snapshot()
+        kw = self._planner_kwargs(snap)
         if not self.pingpong:
             res = planner(self.cfg, segs, comm=self.comm,
-                          tolerance=self.tolerance)
-            return res.plan, dict(res.stats)
+                          tolerance=self.tolerance, **kw)
+            return res.plan, self._annotate(dict(res.stats), snap)
         half = segs.shape[1] // 2
         if half % self.cfg.blk:
             raise ValueError(
@@ -125,14 +256,14 @@ class CADSession:
                                    "load_max_over_mean": 0.0}
         for i in range(2):
             res = planner(cfg, segs[:, i * half:(i + 1) * half],
-                          comm=self.comm, tolerance=self.tolerance)
+                          comm=self.comm, tolerance=self.tolerance, **kw)
             halves.append(res.plan)
             stats["comm_bytes"] += res.stats["comm_bytes"]
             stats["n_moves"] += res.stats["n_moves"]
             stats["load_max_over_mean"] = max(
                 stats["load_max_over_mean"],
                 res.stats["load_max_over_mean"])
-        return PingPongPlan(*halves), stats
+        return PingPongPlan(*halves), self._annotate(stats, snap)
 
     def plan_batch(self, batch: Dict[str, Any]) -> Dict[str, Any]:
         """Attach ``plan`` + ``schedule_stats`` to one pipeline batch
@@ -158,13 +289,22 @@ class CADSession:
         """Yield batches with plans attached.  With ``prefetch >= 1`` a
         background worker plans batch *i+1* while the caller's device
         computes batch *i* (bounded queue, order-preserving); with
-        ``prefetch=0`` planning happens inline."""
+        ``prefetch=0`` planning happens inline.
+
+        With a calibrator attached, prefetched plans whose speed
+        estimates have drifted past ``recalib_threshold`` are re-planned
+        synchronously at pull time (consumer thread), so calibration
+        feedback is never more than one *materially different* snapshot
+        behind despite the look-ahead — and after the estimates
+        converge, no pull pays the re-plan."""
         depth = self.prefetch if prefetch is None else prefetch
         if depth <= 0:
             for batch in batch_iter:
                 yield self.plan_batch(batch)
             return
-        pf = PlanPrefetcher(batch_iter, self.plan_batch, depth=depth)
+        stale = self._plan_stale if self.calibrator is not None else None
+        pf = PlanPrefetcher(batch_iter, self.plan_batch, depth=depth,
+                            is_stale=stale)
         try:
             yield from pf
         finally:

@@ -8,17 +8,20 @@
 """
 from repro.core.attention import core_attention, ref_attention, \
     xla_flash_attention
-from repro.core.cost_model import CommModel, CostModel, ca_flops, \
-    causal_doc_flops
-from repro.core.dispatch import CADContext, cad_attention
+from repro.core.cost_model import CalibrationSnapshot, CommModel, \
+    CostModel, GridCalibrator, ca_flops, causal_doc_flops
+from repro.core.dispatch import CADContext, cad_attention, \
+    iter_plan_tasks, probe_plan_times
 from repro.core.plan import CADConfig, PingPongPlan, PlanCapacityError, \
     StepPlan, identity_plan, per_document_cp_plan, plan_from_schedule
 from repro.core.scheduler import Caps, Schedule, imbalance, schedule
 
 __all__ = [
     "core_attention", "ref_attention", "xla_flash_attention",
-    "CommModel", "CostModel", "ca_flops", "causal_doc_flops",
-    "CADContext", "cad_attention", "CADConfig", "identity_plan",
+    "CalibrationSnapshot", "CommModel", "CostModel", "GridCalibrator",
+    "ca_flops", "causal_doc_flops",
+    "CADContext", "cad_attention", "iter_plan_tasks", "probe_plan_times",
+    "CADConfig", "identity_plan",
     "per_document_cp_plan", "plan_from_schedule", "Caps", "Schedule",
     "imbalance", "schedule", "StepPlan", "PingPongPlan",
     "PlanCapacityError",

@@ -27,10 +27,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.attention import NEG_INF, xla_flash_attention
@@ -337,6 +339,106 @@ def _global_sim(q, k, v, pos, plan, cad, softcap, scale):
                                             q.shape[2], q.shape[3], q.dtype)
     )(out_tasks, ret_recv, plan)
     return out.reshape(q.shape)
+
+
+# ----------------------------------------------------- calibration probes
+def iter_plan_tasks(cfg: CADConfig, plan) \
+        -> "list[Tuple[int, int, int, int]]":
+    """Host-side: the (server, task_slot, q_tokens, kv_tokens) list of
+    every live CA task in a :class:`StepPlan` (or legacy dict plan).
+    Every task is one q block against a (kv_len · blk)-token context —
+    the shapes the runtime calibrator's grid cells are keyed by.  Task
+    count comes from the plan arrays themselves, so nano-batch plans
+    built from a re-sized ping-pong config iterate correctly."""
+    kv_len = np.asarray(plan["task_kv_len"])
+    d, n_tasks = kv_len.shape
+    out = []
+    for s in range(d):
+        for slot in range(n_tasks):
+            kvl = int(kv_len[s, slot])
+            if kvl > 0:
+                out.append((s, slot, cfg.blk, kvl * cfg.blk))
+    return out
+
+
+@functools.lru_cache(maxsize=16)
+def _probe_serve_fn(cfg: CADConfig, kernel: str, bwd, jmax: int):
+    """One jitted serve per pool geometry — probes recur every
+    ``calibrate_every`` steps and must not pay a re-trace each time
+    (jit caches per argument shape under the returned callable)."""
+    cad = CADContext(cfg=cfg, kernel=kernel, bwd=bwd, jmax=jmax)
+    return jax.jit(lambda qt, qp, kb_, vb_, kp, st, ln: _serve(
+        qt, qp, kb_, vb_, kp,
+        {"task_kv_start": st, "task_kv_len": ln}, cad, 0.0, 0, None))
+
+
+def probe_plan_times(cad: CADContext, plan, *, n_heads: int = 1,
+                     head_dim: int = 8, n_kv_heads: Optional[int] = None,
+                     dtype=jnp.float32, seed: int = 0,
+                     repeats: int = 1) \
+        -> List[Tuple[int, List[Tuple[int, int]], float]]:
+    """Time each server's fused CA-task batch for one plan, eagerly,
+    with synthetic q/k/v — the per-task kernel-timing hook of the
+    runtime calibration loop (DESIGN.md §3).
+
+    Kernel time depends on shapes, not values, so random tensors give a
+    faithful measurement; the compiled serve is warmed up once so every
+    server's timing excludes compilation.  Returns one
+    ``(server, [(q_tokens, kv_tokens), ...], seconds)`` entry per
+    server, ready for ``GridCalibrator.observe_tasks``.
+
+    Honesty note: the blockwise-XLA fallback server scans a jmax-padded
+    kv range for every task, so off-TPU its per-task time is nearly
+    flat in kv length; the Pallas kernel (block-pruned scalar-prefetch
+    ranges) is where timings genuinely track task shapes."""
+    cfg = cad.cfg
+    d, nb, blk = cfg.n_servers, cfg.nb, cfg.blk
+    s_len = nb * blk
+    hkv = n_kv_heads or n_heads
+    plan_np = jax.tree.map(np.asarray, dict(plan.items()))
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (d, 1, s_len, n_heads, head_dim), dtype)
+    k = jax.random.normal(kk, (d, 1, s_len, hkv, head_dim), dtype)
+    v = jax.random.normal(kv, (d, 1, s_len, hkv, head_dim), dtype)
+    pos = jnp.broadcast_to(jnp.arange(s_len, dtype=jnp.int32)[None],
+                           (1, s_len))
+
+    blocks, sends = [], []
+    for r in range(d):
+        plan_r = jax.tree.map(lambda a, r=r: jnp.asarray(a[r]), plan_np)
+        qb, kb, vb = (_to_blocks(x[r], blk) for x in (q, k, v))
+        posb = _to_blocks(pos, blk)
+        blocks.append((qb, kb, vb, posb, plan_r))
+        sends.append(_make_sends(qb, kb, vb, posb, plan_r))
+    # stacked exchange: [D_src, D_dst, C, ...] -> [D_dst, D_src, C, ...]
+    recv = tuple(jnp.swapaxes(jnp.stack([s[i] for s in sends]), 0, 1)
+                 for i in range(len(sends[0])))
+
+    serve = _probe_serve_fn(cfg, cad.kernel, cad.bwd, cad.jmax)
+
+    by_server: Dict[int, List[Tuple[int, int]]] = {s: [] for s in range(d)}
+    for s, _slot, qt, kvt in iter_plan_tasks(cfg, plan_np):
+        by_server[s].append((qt, kvt))
+
+    results = []
+    warm = False
+    for s in range(d):
+        qb, kb, vb, posb, plan_s = blocks[s]
+        recv_s = tuple(f[s] for f in recv)
+        q_tasks, qpos, k_buf, v_buf, kpos = _server_tasks(
+            qb, kb, vb, posb, recv_s, plan_s, cfg)
+        args = (q_tasks, qpos, k_buf, v_buf, kpos,
+                plan_s["task_kv_start"], plan_s["task_kv_len"])
+        if not warm:      # one compile for the shared shape
+            jax.block_until_ready(serve(*args))
+            warm = True
+        t0 = time.perf_counter()
+        for _ in range(max(1, repeats)):
+            out = serve(*args)
+        jax.block_until_ready(out)
+        seconds = (time.perf_counter() - t0) / max(1, repeats)
+        results.append((s, by_server[s], seconds))
+    return results
 
 
 # --------------------------------------------------------------- frontend

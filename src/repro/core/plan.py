@@ -32,7 +32,7 @@ Plan builders:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterator, Tuple
+from typing import Any, Dict, Iterator, Optional, Tuple
 
 import numpy as np
 
@@ -135,12 +135,31 @@ PingPongPlan = _register_plan_dataclass(PingPongPlan)
 
 @dataclasses.dataclass(frozen=True)
 class CADConfig:
+    """Attention-server pool description: geometry (static dispatch
+    capacities) plus per-server compute capacity.  ``server_speeds``
+    holds relative speed factors — a 0.5 entry is a half-speed server
+    that should receive half the FLOPs; ``None`` means a homogeneous
+    pool.  Speeds only steer host-side planning (load targets are
+    proportional to speed); the dispatch arrays and compiled shapes are
+    speed-independent."""
     n_servers: int
     blk: int
     nb: int               # q/kv blocks per rank
     cq: int
     ckv: int
     nkv: int
+    server_speeds: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if self.server_speeds is not None:
+            sp = tuple(float(s) for s in self.server_speeds)
+            if len(sp) != self.n_servers:
+                raise ValueError(
+                    f"server_speeds needs {self.n_servers} entries, got "
+                    f"{len(sp)}")
+            if any(s <= 0 for s in sp):
+                raise ValueError(f"server speeds must be > 0, got {sp}")
+            object.__setattr__(self, "server_speeds", sp)
 
     @property
     def n_tasks(self) -> int:
@@ -149,9 +168,15 @@ class CADConfig:
     def caps(self) -> Caps:
         return Caps(cq=self.cq, ckv=self.ckv, nkv=self.nkv)
 
+    def speeds(self) -> np.ndarray:
+        """Per-server speed factors as an array (1.0 = homogeneous)."""
+        if self.server_speeds is None:
+            return np.ones(self.n_servers)
+        return np.asarray(self.server_speeds, np.float64)
+
     @classmethod
     def default(cls, n_servers: int, tokens_per_rank: int, blk: int = 128,
-                max_doc_tokens: int = 0):
+                max_doc_tokens: int = 0, server_speeds=None):
         """Per-pair capacities must cover a full document's kv prefix
         (its blocks live on one home rank): ckv >= max_doc_blocks, else
         the scheduler cannot offload long-document tails — the exact case
@@ -163,7 +188,9 @@ class CADConfig:
         ckv = max(2 * per, mdb)
         nkv = nb + min(n_servers * ckv, 4 * nb)
         return cls(n_servers=n_servers, blk=blk, nb=nb, cq=cq, ckv=ckv,
-                   nkv=nkv)
+                   nkv=nkv,
+                   server_speeds=None if server_speeds is None
+                   else tuple(server_speeds))
 
 
 def empty_plan(cfg: CADConfig) -> Dict[str, np.ndarray]:

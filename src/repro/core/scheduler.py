@@ -17,6 +17,14 @@ Algorithm (faithful to the paper):
      score E = ΔF_max / V_comm, pick the best candidate.
   3. stop when every load is within (1±ε)·F̄ or no move improves.
 
+Heterogeneous pools and measured costs (DESIGN.md §3): ``speeds`` gives
+per-server relative speed factors and ``cost_model`` a (runtime-
+calibrated) latency model; balancing then runs in *time* units — each
+server's load is its assigned cost divided by its speed, and the ideal
+target is equal time, i.e. FLOPs proportional to speed (a 0.5x server
+receives half the work).  With both left at their defaults the
+arithmetic reduces exactly to the homogeneous relative-FLOPs balance.
+
 Capacities (per-pair q/kv send slots, per-server kv buffer slots) mirror
 the static shapes of the compiled dispatch; moves that would overflow a
 capacity are rejected (TPU adaptation — see DESIGN.md §3).
@@ -24,11 +32,11 @@ capacity are rejected (TPU adaptation — see DESIGN.md §3).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.cost_model import CommModel
+from repro.core.cost_model import CommModel, CostModel
 
 
 @dataclasses.dataclass
@@ -52,7 +60,11 @@ class Caps:
 
 @dataclasses.dataclass
 class Schedule:
-    """Scheduler output: per-block server assignment + stats."""
+    """Scheduler output: per-block server assignment + stats.
+    ``loads`` is per-server modeled *time*: assigned cost (relative
+    FLOPs, or seconds under a calibrated cost model) divided by the
+    server's speed factor — identical to relative FLOPs for the
+    homogeneous default."""
     assign: np.ndarray           # [G] server per global q-block
     docs: List[Doc]
     doc_of_block: np.ndarray     # [G] doc index (-1 = padding block)
@@ -60,9 +72,10 @@ class Schedule:
     n_servers: int
     nb: int                      # blocks per rank
     blk: int
-    loads: np.ndarray            # [S] final per-server cost (rel. FLOPs)
+    loads: np.ndarray            # [S] final per-server modeled time
     comm_bytes: float
     n_moves: int
+    speeds: Optional[np.ndarray] = None   # [S] speed factors (None = 1)
 
 
 def layout_from_segments(segment_ids: np.ndarray, blk: int,
@@ -102,33 +115,61 @@ def layout_from_segments(segment_ids: np.ndarray, blk: int,
     return docs, doc_of, bi_of
 
 
-def block_costs(doc_of: np.ndarray, bi_of: np.ndarray,
-                blk: int) -> np.ndarray:
-    """Relative CA FLOPs per q-block: (bi+1)·blk² for live blocks, 0 for
-    padding.  The single cost formula shared by the scheduler and the
-    plan-policy load accounting (repro.cad.planner)."""
-    return np.where(doc_of >= 0, (bi_of + 1) * float(blk * blk), 0.0)
+def block_costs(doc_of: np.ndarray, bi_of: np.ndarray, blk: int,
+                cost_model: Optional[CostModel] = None) -> np.ndarray:
+    """Per-q-block CA cost for live blocks, 0 for padding.  Default:
+    relative FLOPs (bi+1)·blk².  With a (runtime-calibrated)
+    ``cost_model``: predicted seconds for a blk-token shard against its
+    (bi+1)·blk context.  The single cost formula shared by the scheduler
+    and the plan-policy load accounting (repro.cad.planner)."""
+    if cost_model is None:
+        return np.where(doc_of >= 0, (bi_of + 1) * float(blk * blk), 0.0)
+    out = np.zeros(len(doc_of))
+    live = doc_of >= 0
+    out[live] = cost_model.predict(blk, (bi_of[live] + 1) * blk)
+    return out
 
 
-def _range_cost(blk: int, lo: int, hi: int) -> float:
-    """Sum of per-block CA cost over block-in-doc range [lo, hi):
-    cost(bi) = (bi+1)·blk² (relative FLOPs; H·dh factors cancel)."""
-    n = hi - lo
-    return float(blk * blk) * n * (lo + hi + 1) / 2.0
+def _bi_cost_table(blk: int, max_blocks: int,
+                   cost_model: Optional[CostModel]) -> np.ndarray:
+    """cost of block-in-doc index bi, for bi in [0, max_blocks)."""
+    ctx = (np.arange(max_blocks, dtype=np.int64) + 1)
+    if cost_model is None:
+        return (ctx * (blk * blk)).astype(np.float64)
+    return np.asarray(cost_model.predict(blk, ctx * blk), np.float64)
 
 
 def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
              comm: CommModel, caps: Caps, tolerance: float = 0.1,
-             max_moves: int = 100000) -> Schedule:
+             max_moves: int = 100000,
+             speeds: Optional[np.ndarray] = None,
+             cost_model: Optional[CostModel] = None) -> Schedule:
     docs, doc_of, bi_of = layout_from_segments(segment_ids, blk, n_servers)
     nb = segment_ids.shape[1] // blk
     G = n_servers * nb
     assign = (np.arange(G) // nb).astype(np.int64)     # home assignment
 
-    cost_of = block_costs(doc_of, bi_of, blk)
-    loads = np.array([cost_of[s * nb:(s + 1) * nb].sum()
-                      for s in range(n_servers)])
-    fbar = loads.sum() / n_servers
+    speeds = np.ones(n_servers) if speeds is None \
+        else np.asarray(speeds, np.float64)
+    if speeds.shape != (n_servers,):
+        raise ValueError(f"speeds needs {n_servers} entries, got "
+                         f"{speeds.shape}")
+    if (speeds <= 0).any():
+        raise ValueError(f"server speeds must be > 0, got {speeds}")
+    cost_of = block_costs(doc_of, bi_of, blk, cost_model)
+    max_blocks = int(bi_of.max()) + 1 if len(bi_of) else 1
+    bi_cost = _bi_cost_table(blk, max_blocks, cost_model)
+    bi_csum = np.concatenate([[0.0], np.cumsum(bi_cost)])
+
+    def range_cost(lo: int, hi: int) -> float:
+        """Sum of per-block CA cost over block-in-doc range [lo, hi)."""
+        return float(bi_csum[hi] - bi_csum[lo])
+
+    # loads are modeled *time*: assigned base cost / server speed
+    loads_base = np.array([cost_of[s * nb:(s + 1) * nb].sum()
+                           for s in range(n_servers)])
+    loads = loads_base / speeds
+    fbar = loads_base.sum() / speeds.sum()
 
     # items[s][doc_id] -> sorted list of disjoint (lo, hi) block ranges
     items: List[Dict[int, List[Tuple[int, int]]]] = \
@@ -147,17 +188,18 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
     def suffix_take(lo: int, hi: int, budget: float) -> int:
         """Largest t in [lo, hi) such that cost of [t, hi) <= budget, but
         always at least one block if a single block fits 1.5x the budget
-        (avoids stalling on coarse granularity)."""
+        (avoids stalling on coarse granularity).  ``budget`` is in base
+        cost units (the destination's time budget times its speed)."""
         t = hi
         acc = 0.0
         while t > lo:
-            c = float(blk * blk) * t          # block (t-1) has cost t·blk²
+            c = float(bi_cost[t - 1])         # cost of block (t-1)
             if acc + c > budget:
                 break
             acc += c
             t -= 1
         if t == hi and hi - lo >= 1:
-            c = float(blk * blk) * hi
+            c = float(bi_cost[hi - 1])
             if c <= 1.5 * budget:
                 t = hi - 1
         return t
@@ -176,7 +218,8 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
                 break
             if src == dst:
                 continue
-            budget = min(surplus, deficit)
+            # time budgets converted to base cost units per endpoint
+            budget = min(surplus * speeds[src], deficit * speeds[dst])
             for doc_id, ranges in items[src].items():
                 d = docs[doc_id]
                 # only the latest range's suffix migrates (comm-minimal)
@@ -197,9 +240,10 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
                             continue
                         if nkv_used[dst] + need_kv > caps.nkv:
                             continue
-                    df = _range_cost(blk, t, hi)
+                    df = range_cost(t, hi)
                     vbytes = comm.migration_bytes(n_q * blk, need_kv * blk)
-                    e_score = df / max(vbytes, 1.0)
+                    # time gained by the deficit server per byte moved
+                    e_score = df / speeds[dst] / max(vbytes, 1.0)
                     if best is None or e_score > best[0]:
                         best = (e_score, src, doc_id, ridx, t, hi, df,
                                 vbytes, need_kv)
@@ -230,8 +274,8 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
         items[dst][doc_id] = merged
 
         assign[d.g0 + t: d.g0 + hi] = dst
-        loads[src] -= df
-        loads[dst] += df
+        loads[src] -= df / speeds[src]
+        loads[dst] += df / speeds[dst]
         q_used[d.home, dst] += hi - t
         if d.home != dst:
             kv_used[d.home, dst] += need_kv
@@ -242,7 +286,8 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
 
     return Schedule(assign=assign, docs=docs, doc_of_block=doc_of,
                     bi_of_block=bi_of, n_servers=n_servers, nb=nb, blk=blk,
-                    loads=loads, comm_bytes=comm_bytes, n_moves=n_moves)
+                    loads=loads, comm_bytes=comm_bytes, n_moves=n_moves,
+                    speeds=speeds)
 
 
 def imbalance(loads: np.ndarray) -> float:

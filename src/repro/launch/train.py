@@ -10,7 +10,12 @@ Flags mirror the paper's system knobs: --cad (core attention
 disaggregation on/off), --plan-policy (identity | per_doc_cp |
 balanced), --pingpong (nano-batch overlap), --tolerance (scheduler
 imbalance budget), --prefetch (async plan look-ahead; 0 = synchronous),
---strategy fixed|variable (packing baseline).
+--strategy fixed|variable (packing baseline), --server-speeds
+(heterogeneous pool: comma-separated per-rank speed factors, e.g.
+"1,0.5" gives rank 1 half the FLOPs), --calibrate (runtime cost-model
+calibration: per-server kernel timings are probed every
+--calibrate-every steps and fed back so later batches are planned from
+measured costs).
 """
 import argparse
 
@@ -40,6 +45,14 @@ def main():
     ap.add_argument("--tolerance", type=float, default=0.1)
     ap.add_argument("--prefetch", type=int, default=2,
                     help="plan look-ahead depth (0 = synchronous)")
+    ap.add_argument("--server-speeds", default="",
+                    help="comma-separated per-rank speed factors "
+                         "(heterogeneous pool), e.g. '1,0.5'")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="runtime cost-model calibration: probe "
+                         "per-server CA timings and replan from them")
+    ap.add_argument("--calibrate-every", type=int, default=5,
+                    help="steps between calibration probes")
     ap.add_argument("--kernel", default="xla", choices=["xla", "pallas"])
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="")
@@ -53,23 +66,35 @@ def main():
         distribution=args.dist, max_doc_len=args.max_doc or args.seq,
         seq_len=args.seq, global_batch=args.batch, n_ranks=args.ranks,
         vocab_size=cfg.vocab_size, strategy=args.strategy)
+    speeds = None
+    if args.server_speeds:
+        speeds = tuple(float(s) for s in args.server_speeds.split(","))
+        if len(speeds) != args.ranks:
+            raise SystemExit(f"--server-speeds needs {args.ranks} "
+                             f"entries, got {len(speeds)}")
     session = None
     if args.cad and cfg.has_attention():
         session = CADSession.for_pipeline(
             cfg, pipe, kernel=args.kernel, pingpong=args.pingpong,
             tolerance=args.tolerance, plan_policy=args.plan_policy,
-            prefetch=args.prefetch)
+            prefetch=args.prefetch, server_speeds=speeds,
+            calibrate=args.calibrate)
         ctx = None
     else:
         if args.cad:
             print(f"note: {cfg.arch_id} is attention-free; CAD is "
                   f"inapplicable (DESIGN.md §5) — training without it")
+        if args.calibrate or speeds:
+            print("note: --calibrate/--server-speeds only apply to the "
+                  "CAD attention service — ignored")
         ctx = ParallelContext(attn_impl="xla", remat=True)
     tc = TrainConfig(steps=args.steps, peak_lr=args.lr,
                      warmup=max(1, args.steps // 10),
                      log_every=max(1, args.steps // 20),
                      ckpt_every=args.ckpt_every,
-                     ckpt_dir=args.ckpt_dir or "/tmp/repro_ckpt")
+                     ckpt_dir=args.ckpt_dir or "/tmp/repro_ckpt",
+                     calibrate_every=args.calibrate_every
+                     if args.calibrate else 0)
     res = train(cfg, pipe, tc, ctx=ctx, session=session)
     h = res["history"]
     print(f"done: loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")

@@ -31,6 +31,8 @@ class TrainConfig:
     ckpt_every: int = 0
     ckpt_dir: str = "/tmp/repro_ckpt"
     seed: int = 0
+    calibrate_every: int = 0      # probe + feed CA timings every N steps
+                                  # (0 = off; needs a session calibrator)
 
 
 def train(cfg, pipe_cfg: PipelineConfig, train_cfg: TrainConfig,
@@ -61,13 +63,23 @@ def train(cfg, pipe_cfg: PipelineConfig, train_cfg: TrainConfig,
     opt_state = opt.init(params)
     step_fn = jax.jit(make_train_step(cfg, ctx, opt))
 
+    calibrating = (session is not None
+                   and session.calibrator is not None
+                   and train_cfg.calibrate_every > 0)
     history = []
     t0 = time.time()
     try:
         for step in range(train_cfg.steps):
             batch = next(gen)
             stats = batch.pop("schedule_stats", None)
+            plan = batch.get("plan") if calibrating else None
             params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if calibrating and plan is not None \
+                    and step % train_cfg.calibrate_every == 0:
+                # measure → fit: per-server kernel timings feed the
+                # calibrator, so the (prefetched) plan for a later batch
+                # is built from these measured costs (DESIGN.md §3)
+                session.observe_probe(plan, seed=train_cfg.seed + step)
             if step % train_cfg.log_every == 0 \
                     or step == train_cfg.steps - 1:
                 m = {k: float(v) for k, v in metrics.items()}

@@ -1,0 +1,445 @@
+"""Runtime calibration: the measure → fit → replan loop (DESIGN.md §3).
+
+Covers the ``GridCalibrator`` (EMA grid fitting, per-server speed
+estimation, snapshot/version semantics, serialization), heterogeneous
+scheduling (a 0.5x server receives half the FLOPs), the CADSession
+feedback channel (stats annotation, stale-plan refresh across the
+prefetch thread boundary), the dispatch timing probe, and the
+straggler regression that pins the ``benchmarks/straggler_elim.py``
+headline: with one 0.5x server, the calibrated ``balanced`` planner
+keeps measured per-server time near-flat while ``identity`` and the
+uncalibrated balance demonstrably do not.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.cad import (CADConfig, CADSession, GridCalibrator,
+                       PlanPrefetcher, get_planner)
+from repro.core import iter_plan_tasks, probe_plan_times
+from repro.core.cost_model import CalibrationSnapshot, CommModel, \
+    CostModel
+from repro.core.dispatch import CADContext
+from repro.core.scheduler import layout_from_segments, schedule
+
+BLK = 32
+
+
+def make_cfg(d, nb, blk=BLK, speeds=None):
+    return CADConfig(n_servers=d, blk=blk, nb=nb, cq=2 * nb, ckv=2 * nb,
+                     nkv=4 * nb, server_speeds=speeds)
+
+
+def uniform_doc_segs(d, nb, blk=BLK, doc_blocks=2):
+    """Every rank packed with doc_blocks-block documents, no padding."""
+    segs = np.zeros((d, nb * blk), np.int32)
+    sid = 1
+    for r in range(d):
+        for t in range(0, nb, doc_blocks):
+            n = min(doc_blocks, nb - t)
+            segs[r, t * blk:(t + n) * blk] = sid
+            sid += 1
+    return segs
+
+
+def random_segs(rng, d, nb, blk=BLK, max_doc_blocks=8):
+    segs = np.zeros((d, nb * blk), np.int32)
+    sid = 1
+    for r in range(d):
+        t = 0
+        while t < nb:
+            n = min(int(rng.integers(1, max_doc_blocks + 1)), nb - t)
+            segs[r, t * blk:(t + n) * blk] = sid
+            sid += 1
+            t += n
+    return segs
+
+
+# ------------------------------------------------------------ cost model
+def test_cost_model_serialization_roundtrip(tmp_path):
+    cm = CostModel.analytic(8, 64)
+    path = str(tmp_path / "grid.json")
+    cm.save(path)
+    back = CostModel.load(path)
+    q = np.array([64, 128, 1000])
+    kv = np.array([256, 4096, 100000])
+    np.testing.assert_allclose(back.predict(q, kv), cm.predict(q, kv))
+    assert back.n_heads == cm.n_heads and back.head_dim == cm.head_dim
+    assert back.peak_flops == cm.peak_flops
+
+
+def test_cost_model_scaled():
+    cm = CostModel.analytic(4, 32)
+    np.testing.assert_allclose(cm.scaled(2.5).predict(128, 4096),
+                               2.5 * cm.predict(128, 4096))
+
+
+# ------------------------------------------------------------ calibrator
+def test_calibrator_fits_measured_grid():
+    """Measured timings 3x the analytic model: the fitted grid predicts
+    the measured hardware, not the analytic prior."""
+    base = CostModel.analytic(4, 32)
+    truth = base.scaled(3.0)
+    cal = GridCalibrator(base, n_servers=1, ema=1.0)
+    shapes = [(128, kv) for kv in (128, 512, 2048, 8192, 65536)]
+    for _ in range(3):
+        for q, kv in shapes:
+            cal.observe(q, kv, float(truth.predict(q, kv)))
+    fitted = cal.snapshot().cost_model
+    for q, kv in shapes:
+        np.testing.assert_allclose(float(fitted.predict(q, kv)),
+                                   float(truth.predict(q, kv)),
+                                   rtol=0.05)
+    # unobserved region falls back to the base model
+    np.testing.assert_allclose(float(fitted.predict(16, 524288)),
+                               float(base.predict(16, 524288)), rtol=1e-6)
+
+
+def test_calibrator_estimates_relative_speeds():
+    """A server measuring 2x slower converges to speed 0.5, independent
+    of a uniform hardware-vs-model scale error."""
+    base = CostModel.analytic(4, 32)
+    truth = base.scaled(2.0)               # hardware 2x the model
+    speeds = np.array([1.0, 0.5, 1.0])
+    cal = GridCalibrator(base, n_servers=3, ema=0.5)
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        s = int(rng.integers(3))
+        kv = int(rng.choice([256, 1024, 4096]))
+        cal.observe(128, kv, float(truth.predict(128, kv)) / speeds[s],
+                    server=s)
+    np.testing.assert_allclose(cal.speeds(), speeds, rtol=0.05)
+
+
+def test_calibrator_snapshot_version_and_cache():
+    cal = GridCalibrator(CostModel.analytic(2, 16), n_servers=2)
+    s0 = cal.snapshot()
+    assert isinstance(s0, CalibrationSnapshot)
+    assert s0.version == 0 and cal.snapshot() is s0       # cached
+    cal.observe(128, 256, 1e-3, server=0)
+    s1 = cal.snapshot()
+    assert s1.version == cal.version > 0
+    assert s1 is not s0
+    assert len(s1.speeds) == 2
+
+
+def test_calibrator_ignores_degenerate_samples():
+    cal = GridCalibrator(CostModel.analytic(2, 16), n_servers=1)
+    cal.observe(128, 256, 0.0)             # non-positive time
+    cal.observe(0, 256, 1.0)               # empty task
+    cal.observe_tasks([], 1.0)             # empty batch
+    assert cal.version == 0 and cal.n_observations == 0
+
+
+def test_calibrator_observe_tasks_batch_attribution():
+    """A fused-batch timing updates the server's speed from the batch
+    total — same estimate a per-task timer would converge to."""
+    base = CostModel.analytic(4, 32)
+    cal = GridCalibrator(base, n_servers=2, ema=1.0)
+    tasks = [(128, 512), (128, 2048), (128, 8192)]
+    total = float(sum(base.predict(q, kv) for q, kv in tasks))
+    cal.observe_tasks(tasks, 2.0 * total, server=0)   # server 0 at 0.5x
+    cal.observe_tasks(tasks, total, server=1)
+    np.testing.assert_allclose(cal.speeds(), [0.5, 1.0], rtol=1e-6)
+
+
+def test_calibrator_anchors_unobserved_servers_to_observed_scale():
+    """Partial observation must not skew relative speeds: with hardware
+    1000x slower than the analytic model, observing only server 0 keeps
+    the unobserved server at the *observed* scale (prior-anchored), not
+    at raw prior 1.0 — which would make server 0 look 1000x slower."""
+    base = CostModel.analytic(4, 32)
+    truth = base.scaled(1000.0)
+    cal = GridCalibrator(base, n_servers=2, ema=1.0)
+    cal.observe(128, 2048, float(truth.predict(128, 2048)), server=0)
+    np.testing.assert_allclose(cal.speeds(), [1.0, 1.0])
+    # declared priors stay relative under the same anchoring
+    cal2 = GridCalibrator(base, n_servers=2, ema=1.0,
+                          prior_speeds=(1.0, 0.5))
+    cal2.observe(128, 2048, float(truth.predict(128, 2048)), server=0)
+    np.testing.assert_allclose(cal2.speeds(), [1.0, 0.5])
+
+
+def test_observe_plan_accepts_pingpong_plans():
+    """The feedback channel unwraps PingPongPlan (both nano-batches'
+    tasks) instead of crashing on string indexing."""
+    from repro.core.plan import PingPongPlan
+    d, nb = 2, 8
+    cfg = make_cfg(d, nb)
+    session = CADSession(cfg=cfg, comm=CommModel(2, 16, 2),
+                         pingpong=True, tolerance=0.05, prefetch=0,
+                         calibrator=GridCalibrator(
+                             CostModel.analytic(2, 16), d))
+    segs = uniform_doc_segs(d, 2 * nb)      # full step = 2 nano-batches
+    plan, _stats = session.plan(segs)
+    assert isinstance(plan, PingPongPlan)
+    session.observe_plan(plan, np.full(d, 1e-3))
+    assert session.calibrator.version > 0
+
+
+def test_calibrator_state_dict_roundtrip():
+    cal = GridCalibrator(CostModel.analytic(4, 32), n_servers=2)
+    cal.observe(128, 512, 1e-3, server=0)
+    cal.observe(128, 2048, 2e-3, server=1)
+    state = cal.state_dict()
+    cal2 = GridCalibrator(CostModel.analytic(4, 32), n_servers=2)
+    cal2.load_state_dict(state)
+    assert cal2.version == cal.version
+    np.testing.assert_allclose(cal2.speeds(), cal.speeds())
+    np.testing.assert_allclose(
+        cal2.snapshot().cost_model.time_grid,
+        cal.snapshot().cost_model.time_grid)
+
+
+def test_calibrator_thread_safety_smoke():
+    """Concurrent observe + snapshot never corrupts state (the prefetch
+    worker snapshots while the train loop observes)."""
+    cal = GridCalibrator(CostModel.analytic(2, 16), n_servers=2)
+    stop = threading.Event()
+    errs = []
+
+    def snapshotter():
+        try:
+            while not stop.is_set():
+                snap = cal.snapshot()
+                assert np.isfinite(snap.cost_model.time_grid).all()
+        except Exception as e:              # pragma: no cover
+            errs.append(e)
+
+    t = threading.Thread(target=snapshotter)
+    t.start()
+    for i in range(300):
+        cal.observe(128, 256 * (1 + i % 4), 1e-3, server=i % 2)
+    stop.set()
+    t.join(timeout=5)
+    assert not errs
+    assert cal.version == 300
+
+
+# ------------------------------------------------- heterogeneous pools
+def test_cadconfig_validates_speeds():
+    with pytest.raises(ValueError, match="entries"):
+        make_cfg(2, 4, speeds=(1.0,))
+    with pytest.raises(ValueError, match="> 0"):
+        make_cfg(2, 4, speeds=(1.0, 0.0))
+    np.testing.assert_array_equal(make_cfg(2, 4).speeds(), [1.0, 1.0])
+    np.testing.assert_array_equal(
+        make_cfg(2, 4, speeds=(1, 0.5)).speeds(), [1.0, 0.5])
+
+
+def test_schedule_gives_slow_server_proportional_flops():
+    """With speeds (1, 0.5) a perfectly divisible workload ends up ~2:1
+    in FLOPs — the slow server receives half the work — and near-flat
+    in modeled time."""
+    d, nb = 2, 16
+    segs = uniform_doc_segs(d, nb, doc_blocks=2)
+    speeds = np.array([1.0, 0.5])
+    sch = schedule(segs, blk=BLK, n_servers=d,
+                   comm=CommModel(2, 16, 2), caps=make_cfg(d, nb).caps(),
+                   tolerance=0.02, speeds=speeds)
+    flops = sch.loads * speeds
+    ratio = flops[0] / flops[1]
+    assert 1.7 <= ratio <= 2.4, ratio
+    assert sch.loads.max() / sch.loads.mean() <= 1.1
+
+
+def test_planners_report_time_loads_on_heterogeneous_pool():
+    """identity/per_doc_cp don't re-route for speeds (fixed policies)
+    but must report speed-scaled time loads."""
+    d, nb = 2, 8
+    segs = uniform_doc_segs(d, nb)
+    cfg_flat = make_cfg(d, nb)
+    cfg_het = make_cfg(d, nb, speeds=(1.0, 0.25))
+    for policy in ("identity", "per_doc_cp"):
+        flat = get_planner(policy)(cfg_flat, segs, build_plan=False)
+        het = get_planner(policy)(cfg_het, segs, build_plan=False)
+        np.testing.assert_array_equal(flat.assign, het.assign)
+        np.testing.assert_allclose(het.loads,
+                                   flat.loads / np.array([1.0, 0.25]))
+
+
+# ------------------------------------------------ straggler regression
+def test_straggler_elimination_regression():
+    """The benchmark's headline claim as a test: on a pool with one
+    0.5x server, the calibrated balanced planner keeps measured
+    per-server time within ~tolerance of flat, while identity and the
+    uncalibrated (FLOPs-equalizing) balance sit far outside it."""
+    d, nb, blk = 4, 16, 128
+    cfg = CADConfig(n_servers=d, blk=blk, nb=nb, cq=2 * nb, ckv=2 * nb,
+                    nkv=4 * nb)
+    comm = CommModel(8, 64, 4)
+    true_speeds = np.array([1.0, 1.0, 0.5, 1.0])
+    truth = CostModel.analytic(8, 64).scaled(2.0)
+    session = CADSession(
+        cfg=cfg, comm=comm, tolerance=0.02, plan_policy="balanced",
+        prefetch=0,
+        calibrator=GridCalibrator(CostModel.analytic(8, 64), d))
+    rng = np.random.default_rng(0)
+
+    def measured(assign, doc_of, bi_of):
+        live = doc_of >= 0
+        t = np.zeros(len(doc_of))
+        t[live] = truth.predict(blk, (bi_of[live] + 1) * blk)
+        per = np.zeros(d)
+        srv = assign[live].astype(np.int64)
+        np.add.at(per, srv, t[live] / true_speeds[srv])
+        return per
+
+    calibrated, identity, uncal = [], [], []
+    for step in range(8):
+        segs = random_segs(rng, d, nb, blk=blk)
+        _docs, doc_of, bi_of = layout_from_segments(segs, blk, d)
+        identity.append(measured(
+            get_planner("identity")(cfg, segs, build_plan=False).assign,
+            doc_of, bi_of))
+        uncal.append(measured(
+            get_planner("balanced")(cfg, segs, comm=comm, tolerance=0.02,
+                                    build_plan=False).assign,
+            doc_of, bi_of))
+        plan, stats = session.plan(segs)
+        assert stats["calib_version"] == float(session.calibrator
+                                               .snapshot().version)
+        per_server = np.zeros(d)
+        for s, _slot, qt, kvt in iter_plan_tasks(cfg, plan):
+            t = float(truth.predict(qt, kvt)) / true_speeds[s]
+            per_server[s] += t
+            session.observe(qt, kvt, t, server=s)
+        calibrated.append(per_server)
+
+    def max_over_mean(rows):
+        return float(np.mean([r.max() / r.mean() for r in rows]))
+
+    tail = slice(4, None)                    # skip convergence transient
+    cal_mm = max_over_mean(calibrated[tail])
+    id_mm = max_over_mean(identity[tail])
+    uc_mm = max_over_mean(uncal[tail])
+    assert cal_mm <= 1.1, (cal_mm, id_mm, uc_mm)
+    assert id_mm > 1.4, id_mm
+    assert uc_mm > 1.4, uc_mm
+    # ... and the speeds were actually learned, not declared
+    np.testing.assert_allclose(session.calibrator.speeds(), true_speeds,
+                               rtol=0.05)
+
+
+# ----------------------------------------------- session feedback path
+def test_session_plan_annotates_calibration_stats():
+    d, nb = 2, 8
+    cfg = make_cfg(d, nb)
+    session = CADSession(cfg=cfg, comm=CommModel(2, 16, 2),
+                         tolerance=0.05, prefetch=0,
+                         calibrator=GridCalibrator(
+                             CostModel.analytic(2, 16), d))
+    segs = uniform_doc_segs(d, nb)
+    _plan, stats = session.plan(segs)
+    assert stats["calib_version"] == 0.0
+    assert stats["calib_speed_0"] == 1.0
+    assert stats["calib_speed_1"] == 1.0
+    # without a calibrator the keys stay absent (legacy stats shape)
+    plain = CADSession(cfg=cfg, comm=CommModel(2, 16, 2), prefetch=0)
+    _plan, stats2 = plain.plan(segs)
+    assert "calib_version" not in stats2
+
+
+def test_prefetcher_stale_refresh():
+    """Items planned ahead are re-planned at pull time when flagged
+    stale — on the consumer thread, preserving order."""
+    calls = []
+
+    def plan(x):
+        # idempotent on planned items, like CADSession.plan_batch
+        item = x["item"] if isinstance(x, dict) else x
+        calls.append(item)
+        return {"item": item, "planned_at": len(calls)}
+
+    stale_items = {1}
+    pf = PlanPrefetcher(iter(range(4)), plan, depth=2,
+                        is_stale=lambda it: it["item"] in stale_items)
+    out = list(pf)
+    assert [o["item"] for o in out] == [0, 1, 2, 3]
+    assert pf.stale_refreshes == 1
+    assert calls.count(1) == 2 and calls.count(0) == 1
+
+
+def test_session_attach_plans_refreshes_on_speed_drift():
+    """The cross-thread loop: plans prefetched with stale speeds are
+    re-planned at pull after feedback shifts the speed estimates."""
+    d, nb = 2, 8
+    cfg = make_cfg(d, nb)
+    base = CostModel.analytic(2, 16)
+    session = CADSession(cfg=cfg, comm=CommModel(2, 16, 2),
+                         tolerance=0.05, prefetch=2,
+                         calibrator=GridCalibrator(base, d, ema=1.0))
+    segs = uniform_doc_segs(d, nb)
+
+    def batches(n):
+        for _ in range(n):
+            yield {"segment_ids": segs.copy()}
+
+    gen = session.attach_plans(batches(4))
+    first = next(gen)
+    assert first["schedule_stats"]["calib_version"] == 0.0
+    # big drift: server 1 measures 4x slower than server 0
+    for kv in (256, 512, 1024):
+        session.observe(BLK, kv, float(base.predict(BLK, kv)), server=0)
+        session.observe(BLK, kv, 4 * float(base.predict(BLK, kv)),
+                        server=1)
+    later = [next(gen) for _ in range(3)]
+    for b in later:
+        # the guarantee is *speed* freshness: a plan built from drifted
+        # speeds is re-planned at pull; one built between observes with
+        # the same speeds may keep its (older) version
+        st = b["schedule_stats"]
+        np.testing.assert_allclose(
+            [st["calib_speed_0"], st["calib_speed_1"]], [1.0, 0.25])
+    gen.close()
+
+
+def test_probe_plan_times_feeds_calibrator():
+    """The dispatch probe measures real (eager) serve time per server
+    and the session feeds it back — version advances, speeds defined."""
+    d, nb = 2, 2
+    cfg = make_cfg(d, nb)
+    comm = CommModel(2, 8, 2)
+    session = CADSession(cfg=cfg, comm=comm, tolerance=0.05, prefetch=0,
+                         jmax=cfg.nkv,
+                         calibrator=GridCalibrator(
+                             CostModel.analytic(2, 8), d))
+    segs = uniform_doc_segs(d, nb)
+    plan, _ = session.plan(segs)
+
+    cad = CADContext(cfg=cfg, kernel="xla", jmax=cfg.nkv)
+    res = probe_plan_times(cad, plan, n_heads=2, head_dim=8,
+                           n_kv_heads=2)
+    assert [s for s, _t, _sec in res] == list(range(d))
+    assert all(sec > 0 for _s, _t, sec in res)
+    tasks_of = {s: t for s, t, _sec in res}
+    expect = {}
+    for s, _slot, qt, kvt in iter_plan_tasks(cfg, plan):
+        expect.setdefault(s, []).append((qt, kvt))
+    assert tasks_of == expect
+
+    session.observe_probe(plan)
+    assert session.calibrator.version > 0
+    assert len(session.calibrator.speeds()) == d
+
+
+def test_trainer_calibrate_smoke():
+    """train(..., calibrate_every=1) runs the probe + feedback loop and
+    logs calibration stats in the history."""
+    from repro.configs import get_config
+    from repro.data.pipeline import PipelineConfig
+    from repro.train.trainer import TrainConfig, train
+    cfg = get_config("smollm-360m").reduced()
+    pipe = PipelineConfig(distribution="pretrain", max_doc_len=256,
+                          seq_len=256, global_batch=4, n_ranks=2,
+                          vocab_size=cfg.vocab_size, seed=3)
+    session = CADSession.for_pipeline(cfg, pipe, plan_policy="balanced",
+                                      calibrate=True)
+    assert session.calibrator is not None
+    res = train(cfg, pipe, TrainConfig(steps=2, peak_lr=1e-3, warmup=1,
+                                       log_every=1, calibrate_every=1),
+                session=session)
+    assert np.isfinite(res["history"][-1]["loss"])
+    assert "sched_calib_version" in res["history"][-1]
+    assert session.calibrator.version > 0
