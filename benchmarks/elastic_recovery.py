@@ -1,0 +1,142 @@
+"""Elastic recovery: kill an attention server mid-run, lose no step.
+
+The acceptance experiment for the elastic runtime (DESIGN.md §9):
+
+  * a pool of N in-place attention servers executes packed CAD steps
+    through :class:`ElasticExecutor` (decomposed per-server dispatch);
+  * a seeded :class:`FaultSchedule` kills one server *during* step K:
+    its in-flight CA tasks are lost, recovered onto survivors via a
+    recovery sub-plan, and the merged step output must be
+    **bit-identical** to a fault-free run of the same batches on the
+    (N-1)-server pool — core attention is stateless, so where a task
+    runs can never change its value;
+  * after the kill the planner is re-invoked against the surviving
+    endpoints (membership epoch bump): steady-state modeled step time
+    must be within 10% of the (N-1)-pool baseline (it is in fact
+    identical here — same planner, same survivors, same batches);
+  * the same schedule replays deterministically: a second run produces
+    identical step times, events and output digests.
+
+Emits ``elastic_recovery,<us>,...`` CSV rows and returns the
+machine-readable dict wired into ``benchmarks/run.py --json`` under
+``"elastic"``.
+"""
+import hashlib
+import types
+
+import numpy as np
+
+from repro.cad import CADSession
+from repro.data.pipeline import PipelineConfig, raw_batches
+from repro.runtime import ElasticExecutor, FaultSchedule, ServerPool
+
+HEADS = types.SimpleNamespace(n_heads=2, head_dim=16, n_kv_heads=2)
+
+
+def _digest(x) -> str:
+    return hashlib.sha1(np.ascontiguousarray(np.asarray(x))
+                        .tobytes()).hexdigest()
+
+
+def _batches(n_ranks, tokens_per_rank, max_doc, steps, seed):
+    pipe = PipelineConfig(distribution="pretrain", max_doc_len=max_doc,
+                          seq_len=tokens_per_rank, global_batch=n_ranks,
+                          n_ranks=n_ranks, seed=seed)
+    gen = raw_batches(pipe)
+    out = []
+    for _ in range(steps):
+        b = next(gen)
+        out.append((b["segment_ids"], b["positions"]))
+    return pipe, out
+
+
+def _run(pipe, batches, *, faults=None, dead=(), speculate_pct=0.0,
+         seed=0):
+    """One elastic run over ``batches``; ``dead`` slots are removed
+    before step 0 (the fault-free reduced-pool baseline)."""
+    session = CADSession.for_pipeline(HEADS, pipe, plan_policy="balanced",
+                                      prefetch=0)
+    pool = ServerPool(session.cfg.n_servers)
+    for s in dead:
+        pool.remove(s)
+    session = session.with_pool(pool)
+    ex = ElasticExecutor(session, faults=faults,
+                         speculate_pct=speculate_pct,
+                         feed_calibrator=False)
+    digests, reports = [], []
+    for step, (segs, positions) in enumerate(batches):
+        q, k, v, pos = ex.synth_inputs(segs, positions,
+                                       seed=seed + step)
+        out, rep = ex.run_step(step, q, k, v, pos, segs)
+        digests.append(_digest(out))
+        reports.append(rep)
+    return digests, reports
+
+
+def run(n_ranks=4, tokens_per_rank=2048, max_doc=1024, steps=10,
+        kill_step=4, victim=1, speculate_pct=0.0, seed=0):
+    pipe, batches = _batches(n_ranks, tokens_per_rank, max_doc, steps,
+                             seed)
+    faults = FaultSchedule.parse(f"kill:{victim}@{kill_step}")
+
+    fault_d, fault_r = _run(pipe, batches, faults=faults,
+                            speculate_pct=speculate_pct, seed=seed)
+    replay_d, replay_r = _run(pipe, batches, faults=faults,
+                              speculate_pct=speculate_pct, seed=seed)
+    base_d, base_r = _run(pipe, batches, dead=(victim,), seed=seed)
+
+    deterministic = fault_d == replay_d and \
+        [r.step_seconds for r in fault_r] \
+        == [r.step_seconds for r in replay_r] and \
+        [r.events for r in fault_r] == [r.events for r in replay_r]
+    # every step's output (including the kill step's recovered merge)
+    # must match the fault-free reduced-pool run bit-identically: CA
+    # tasks are pure functions of (q block, kv prefix)
+    bit_identical = fault_d == base_d
+    post = slice(kill_step + 1, None)
+    steady_fault = float(np.mean([r.step_seconds
+                                  for r in fault_r[post]]))
+    steady_base = float(np.mean([r.step_seconds
+                                 for r in base_r[post]]))
+    steady_ratio = steady_fault / max(steady_base, 1e-30)
+    kill_rep = fault_r[kill_step]
+    return {
+        "n_ranks": n_ranks,
+        "steps": steps,
+        "kill_step": kill_step,
+        "victim": victim,
+        "no_step_failed": len(fault_r) == steps,
+        "bit_identical": bool(bit_identical),
+        "deterministic_replay": bool(deterministic),
+        "recovered_blocks": kill_rep.recovered_blocks,
+        "kill_step_seconds": kill_rep.step_seconds,
+        "baseline_kill_step_seconds": base_r[kill_step].step_seconds,
+        "steady_fault_seconds": steady_fault,
+        "steady_base_seconds": steady_base,
+        "steady_ratio": float(steady_ratio),
+        "epoch_final": fault_r[-1].epoch,
+    }
+
+
+def main(fast=False):
+    kw = dict(n_ranks=3, tokens_per_rank=1024, max_doc=512, steps=8,
+              kill_step=3) if fast else {}
+    r = run(**kw)
+    ok = r["no_step_failed"] and r["bit_identical"] \
+        and r["deterministic_replay"] and abs(r["steady_ratio"] - 1) < 0.1
+    print(f"elastic_recovery,{r['kill_step_seconds']*1e6:.2f},"
+          f"phase=kill_step;recovered={r['recovered_blocks']};"
+          f"ranks={r['n_ranks']};victim={r['victim']}")
+    print(f"elastic_recovery,{r['steady_fault_seconds']*1e6:.2f},"
+          f"phase=steady;ratio_vs_reduced={r['steady_ratio']:.3f}")
+    print(f"elastic_recovery,0.0,phase=verdict;"
+          f"bit_identical={r['bit_identical']};"
+          f"deterministic={r['deterministic_replay']};"
+          f"no_step_failed={r['no_step_failed']};ok={ok}")
+    if not ok:
+        raise RuntimeError(f"elastic recovery acceptance failed: {r}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,11 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py format).
                                     calibrated vs uncalibrated
   serve_throughput      DESIGN §8 — fused chunked prefill vs per-token
                                     loop + continuous-batching decode rate
+  elastic_recovery      DESIGN §9 — kill one of N servers mid-run:
+                                    recovery sub-plan outputs bit-identical
+                                    to a fault-free (N-1)-pool run,
+                                    deterministic seeded replay,
+                                    steady-state within 10% of baseline
 
 Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--json PATH]
 
@@ -117,10 +122,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (cp_overheads, dedicated_pool, e2e_sim,
-                            imbalance, kernel_throughput, overlap,
-                            pp_bubbles, serve_throughput,
-                            straggler_elim, table1_scaling,
-                            tolerance_sweep)
+                            elastic_recovery, imbalance,
+                            kernel_throughput, overlap, pp_bubbles,
+                            serve_throughput, straggler_elim,
+                            table1_scaling, tolerance_sweep)
     benches = {
         "table1": table1_scaling.main,
         "fig3": cp_overheads.main,
@@ -136,12 +141,13 @@ def main() -> None:
         "straggler": lambda: straggler_elim.main(fast=args.fast),
         "dedicated": dedicated_pool.main,
         "serve": lambda: serve_throughput.main(fast=args.fast),
+        "elastic": lambda: elastic_recovery.main(fast=args.fast),
     }
     # the machine-readable subset: kernel fwd/bwd, plan imbalance,
-    # prefetch overlap, straggler elimination, serve throughput — the
-    # CI perf trajectory
+    # prefetch overlap, straggler elimination, serve throughput,
+    # elastic recovery — the CI perf trajectory
     json_keys = ("fig5", "kernel_bwd", "fig4", "prefetch", "straggler",
-                 "serve")
+                 "serve", "elastic")
     results, failed = {}, 0
     for name, fn in benches.items():
         if args.only and name != args.only:

@@ -37,6 +37,9 @@ from repro.core.plan import CADConfig
 from repro.core.scheduler import layout_from_segments
 from repro.data.distributions import sample_lengths
 from repro.data.packing import BLOCK, pack_documents
+# the benchmark measures what would actually execute, not the
+# scheduler's claim: recover the assignment from the dispatch arrays
+from repro.runtime import assignment_of_plan
 
 
 def _measured_times(truth: CostModel, speeds: np.ndarray,
@@ -104,7 +107,7 @@ def run(arch="llama3-8b", n_ranks=8, tokens_per_rank=65536,
         # feed the per-task timings back for the next step's plan
         plan, _stats = session.plan(segs)
         rows["calibrated"].append(max_over_mean(
-            _assign_of_plan(cadcfg, plan)))
+            assignment_of_plan(cadcfg, plan)))
         for s, _slot, qt, kvt in iter_plan_tasks(cadcfg, plan):
             session.observe(qt, kvt,
                             float(truth.predict(qt, kvt))
@@ -120,21 +123,6 @@ def run(arch="llama3-8b", n_ranks=8, tokens_per_rank=65536,
     out["n_ranks"] = n_ranks
     out["slow_factor"] = slow_factor
     return out
-
-
-def _assign_of_plan(cadcfg: CADConfig, plan) -> np.ndarray:
-    """Recover the per-block assignment from the dispatch arrays (the
-    benchmark measures what would actually execute, not the scheduler's
-    claim)."""
-    d, nb = cadcfg.n_servers, cadcfg.nb
-    assign = np.arange(d * nb) // nb
-    q_send = np.asarray(plan["q_send_idx"])
-    for src in range(d):
-        for dst in range(d):
-            for c in q_send[src, dst]:
-                if c >= 0:
-                    assign[src * nb + int(c)] = dst
-    return assign
 
 
 def main(fast=False):

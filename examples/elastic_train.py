@@ -1,0 +1,68 @@
+"""Elastic training demo: lose an attention server mid-run, keep going.
+
+Trains a tiny llama-family model with CAD active on a pool of
+attention servers and — via a deterministic :class:`FaultSchedule` —
+kills one server halfway through.  The pool's membership epoch bumps,
+the planner is re-invoked against the survivors (any prefetched plan
+from the dead epoch is re-planned at pull), and training finishes every
+configured step with a finite loss.  Flap the server instead with
+``--flap`` to watch it rejoin a few steps later.
+
+Run:  PYTHONPATH=src python examples/elastic_train.py
+      PYTHONPATH=src python examples/elastic_train.py --steps 12 --flap
+"""
+import argparse
+
+from repro.cad import CADSession
+from repro.configs import ModelConfig
+from repro.data.pipeline import PipelineConfig
+from repro.runtime import ServerPool
+from repro.train.trainer import TrainConfig, train
+
+TINY = ModelConfig(
+    arch_id="llama-tiny-elastic", family="dense",
+    source="examples/elastic_train",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, layer_pattern=("global",),
+    tie_embeddings=True, param_dtype="float32",
+    compute_dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--ranks", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--victim", type=int, default=1)
+    ap.add_argument("--flap", action="store_true",
+                    help="kill + rejoin instead of a permanent kill")
+    args = ap.parse_args()
+
+    kill_step = max(1, args.steps // 2)
+    spec = (f"flap:{args.victim}@{kill_step}+2" if args.flap
+            else f"kill:{args.victim}@{kill_step}")
+    print(f"model: {TINY.arch_id} | pool: {args.ranks} servers | "
+          f"fault schedule: {spec}")
+
+    pipe = PipelineConfig(distribution="pretrain", max_doc_len=args.seq,
+                          seq_len=args.seq, global_batch=2 * args.ranks,
+                          n_ranks=args.ranks, vocab_size=TINY.vocab_size,
+                          seed=0)
+    session = CADSession.for_pipeline(TINY, pipe, plan_policy="balanced")
+    session = session.with_pool(ServerPool(session.cfg.n_servers))
+
+    res = train(TINY, pipe, TrainConfig(
+        steps=args.steps, peak_lr=1e-3, warmup=1, log_every=1,
+        fault_schedule=spec), session=session)
+
+    h = res["history"]
+    assert len(h) == args.steps, "training must finish every step"
+    epochs = sorted({m.get("sched_pool_epoch", 0.0) for m in h})
+    print(f"finished {args.steps}/{args.steps} steps | "
+          f"loss {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} | "
+          f"pool epochs seen: {[int(e) for e in epochs]}")
+    print(f"membership log: {session.pool.history()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,19 +32,25 @@ modeled *time* — assigned cost over speed — so stats stay comparable
 across policies on a heterogeneous pool; ``balanced`` additionally
 balances against per-server capacity, giving a 0.5x server half the
 FLOPs.
+
+Elastic membership (DESIGN.md §9): every policy accepts ``exclude`` — a
+set of servers (drained or dead pool members) that must not hold CA
+tasks.  Documents homed on an excluded server are evacuated to the
+survivors; the dispatch geometry (array shapes) never changes, so one
+compiled executable serves every membership epoch.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Iterable, Optional, Tuple
 
 import numpy as np
 
 from repro.core.cost_model import CommModel, CostModel
 from repro.core.plan import CADConfig, StepPlan, head_tail_assignment, \
     identity_assignment, plan_from_assignment
-from repro.core.scheduler import block_costs, layout_from_segments, \
-    schedule
+from repro.core.scheduler import block_costs, check_exclude, \
+    layout_from_segments, schedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +98,20 @@ def available_policies() -> Tuple[str, ...]:
 def _resolve_speeds(cfg: CADConfig, speeds) -> np.ndarray:
     return cfg.speeds() if speeds is None \
         else np.asarray(speeds, np.float64)
+
+
+def _evacuate_whole_docs(assign: np.ndarray, docs,
+                         exclude: Tuple[int, ...],
+                         allowed: Tuple[int, ...]) -> np.ndarray:
+    """Deterministic fallback evacuation for the fixed-layout policies
+    (identity / per_doc_cp): whole documents homed on an excluded server
+    are dealt round-robin over the survivors, in document order."""
+    i = 0
+    for d in docs:
+        if d.home in exclude:
+            assign[d.g0:d.g0 + d.n_blocks] = allowed[i % len(allowed)]
+            i += 1
+    return assign
 
 
 def _loads_of(assign: np.ndarray, doc_of: np.ndarray, bi_of: np.ndarray,
@@ -144,16 +164,28 @@ def identity_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
                      tolerance: float = 0.0,
                      build_plan: bool = True,
                      cost_model: Optional[CostModel] = None,
-                     speeds: Optional[np.ndarray] = None) -> PlanResult:
+                     speeds: Optional[np.ndarray] = None,
+                     exclude: Optional[Iterable[int]] = None) -> PlanResult:
     docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
                                                cfg.n_servers)
+    exclude = check_exclude(exclude, cfg.n_servers)
     assign = identity_assignment(cfg)
+    n_moves = 0
+    if exclude:
+        allowed = tuple(s for s in range(cfg.n_servers)
+                        if s not in exclude)
+        assign = _evacuate_whole_docs(assign, docs, exclude, allowed)
+        home = identity_assignment(cfg)
+        live = doc_of >= 0
+        n_moves = int((assign[live] != home[live]).sum())
     plan = plan_from_assignment(cfg, assign, doc_of, bi_of, docs) \
         if build_plan else None
     loads = _loads_of(assign, doc_of, bi_of, cfg.blk, cfg.n_servers,
                       cost_model, _resolve_speeds(cfg, speeds))
     return PlanResult(plan=plan, assign=assign, loads=loads,
-                      stats=_stats(loads, 0.0, 0))
+                      stats=_stats(loads, _migration_bytes(
+                          cfg, assign, docs, doc_of, bi_of, comm)
+                          if exclude else 0.0, n_moves))
 
 
 @register_planner("per_doc_cp")
@@ -162,14 +194,20 @@ def per_doc_cp_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
                        tolerance: float = 0.0,
                        build_plan: bool = True,
                        cost_model: Optional[CostModel] = None,
-                       speeds: Optional[np.ndarray] = None) -> PlanResult:
+                       speeds: Optional[np.ndarray] = None,
+                       exclude: Optional[Iterable[int]] = None) \
+        -> PlanResult:
     """Head-tail per-document CP (paper §2.2 as a special-case plan).
     The dealing order is the paper's fixed head-tail pairing — speed-
     oblivious by construction — but loads/stats are still reported in
-    modeled time so heterogeneous-pool comparisons stay honest."""
+    modeled time so heterogeneous-pool comparisons stay honest.  With
+    ``exclude`` the head-tail deal runs over the surviving servers."""
     docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
                                                cfg.n_servers)
-    assign = head_tail_assignment(cfg, docs)
+    exclude = check_exclude(exclude, cfg.n_servers)
+    servers = tuple(s for s in range(cfg.n_servers)
+                    if s not in exclude) if exclude else None
+    assign = head_tail_assignment(cfg, docs, servers)
     plan = plan_from_assignment(cfg, assign, doc_of, bi_of, docs) \
         if build_plan else None
     loads = _loads_of(assign, doc_of, bi_of, cfg.blk, cfg.n_servers,
@@ -187,16 +225,19 @@ def balanced_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
                      tolerance: float = 0.1,
                      build_plan: bool = True,
                      cost_model: Optional[CostModel] = None,
-                     speeds: Optional[np.ndarray] = None) -> PlanResult:
+                     speeds: Optional[np.ndarray] = None,
+                     exclude: Optional[Iterable[int]] = None) \
+        -> PlanResult:
     """The paper's communication-aware greedy scheduler (§4.2), balancing
     modeled time across per-server capacities (calibrated cost model +
-    speed factors) when provided."""
+    speed factors) when provided; ``exclude`` withdraws drained/dead
+    pool members from the balance (DESIGN.md §9)."""
     if comm is None:
         comm = CommModel(n_heads=1, head_dim=1, n_kv_heads=1)
     sch = schedule(segment_ids, blk=cfg.blk, n_servers=cfg.n_servers,
                    comm=comm, caps=cfg.caps(), tolerance=tolerance,
                    speeds=_resolve_speeds(cfg, speeds),
-                   cost_model=cost_model)
+                   cost_model=cost_model, exclude=exclude)
     plan = plan_from_assignment(cfg, sch.assign, sch.doc_of_block,
                                 sch.bi_of_block, sch.docs) \
         if build_plan else None

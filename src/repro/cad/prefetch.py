@@ -105,6 +105,11 @@ class PlanPrefetcher:
                 if self._exc is not None:
                     raise self._exc
                 raise StopIteration
+            if self._stop.is_set():
+                # close() raced the get: the item was planned for a
+                # world that no longer exists (a dead pool epoch, a
+                # torn-down session) — drop it, never deliver it
+                raise StopIteration
             if self._is_stale is not None and self._is_stale(item):
                 item = self._refresh(item)
                 self.stale_refreshes += 1

@@ -77,6 +77,8 @@ class CADSession:
     calibrator: Optional[GridCalibrator] = None
     recalib_threshold: float = 0.05   # speed drift that re-plans a
                                       # prefetched (stale) plan at pull
+    pool: Any = None               # ServerPool: elastic membership; like
+                                   # the calibrator, mutable shared state
 
     # ------------------------------------------------------- constructors
     @classmethod
@@ -133,6 +135,22 @@ class CADSession:
                                attn_impl="cad", cad=cad, remat=remat,
                                pingpong=self.pingpong)
 
+    # --------------------------------------------------------- elasticity
+    def with_pool(self, pool) -> "CADSession":
+        """Attach a :class:`repro.runtime.ServerPool`: planning then
+        runs against the pool's surviving members only, every plan's
+        stats record the membership epoch it was built from, and
+        prefetched plans from a superseded epoch are re-planned at pull
+        (DESIGN.md §9)."""
+        if pool is not None and pool.n_slots != self.cfg.n_servers:
+            raise ValueError(
+                f"pool has {pool.n_slots} slots, session pool geometry "
+                f"is {self.cfg.n_servers} servers")
+        return dataclasses.replace(self, pool=pool)
+
+    def _pool_view(self):
+        return None if self.pool is None else self.pool.view()
+
     # ------------------------------------------------------- calibration
     def _snapshot(self) -> Optional[CalibrationSnapshot]:
         return None if self.calibrator is None \
@@ -146,19 +164,29 @@ class CADSession:
                 "speeds": snap.speeds_array()}
 
     def _annotate(self, stats: Dict[str, float],
-                  snap: Optional[CalibrationSnapshot]) -> Dict[str, float]:
+                  snap: Optional[CalibrationSnapshot],
+                  view=None) -> Dict[str, float]:
         if snap is not None:
             stats["calib_version"] = float(snap.version)
             for s, sp in enumerate(snap.speeds):
                 stats[f"calib_speed_{s}"] = float(sp)
+        if view is not None:
+            stats["pool_epoch"] = float(view.epoch)
+            stats["pool_active"] = float(len(view.active))
         return stats
 
     def _plan_stale(self, batch: Dict[str, Any]) -> bool:
-        """True when a prefetched batch's plan was built from speeds
-        that have since drifted beyond ``recalib_threshold`` — checked
-        (and re-planned) on the consumer thread at pull time."""
-        snap = self._snapshot()
+        """True when a prefetched batch's plan was built from a
+        superseded pool-membership epoch (it may still assign tasks to a
+        drained or dead server — never executable) or from speeds that
+        have since drifted beyond ``recalib_threshold`` — checked (and
+        re-planned) on the consumer thread at pull time."""
         st = batch.get("schedule_stats") or {}
+        view = self._pool_view()
+        if view is not None \
+                and int(st.get("pool_epoch", -1)) != view.epoch:
+            return True
+        snap = self._snapshot()
         if snap is None or "calib_version" not in st:
             return False
         if int(st["calib_version"]) == snap.version:
@@ -237,11 +265,17 @@ class CADSession:
         segs = np.asarray(segment_ids)
         planner = get_planner(self.plan_policy)
         snap = self._snapshot()
+        view = self._pool_view()
         kw = self._planner_kwargs(snap)
+        if view is not None:
+            # ONE membership view per step: both ping-pong halves plan
+            # against the same surviving-endpoint set, and the epoch is
+            # recorded so prefetched plans invalidate on change
+            kw["exclude"] = view.excluded
         if not self.pingpong:
             res = planner(self.cfg, segs, comm=self.comm,
                           tolerance=self.tolerance, **kw)
-            return res.plan, self._annotate(dict(res.stats), snap)
+            return res.plan, self._annotate(dict(res.stats), snap, view)
         half = segs.shape[1] // 2
         if half % self.cfg.blk:
             raise ValueError(
@@ -263,7 +297,7 @@ class CADSession:
             stats["load_max_over_mean"] = max(
                 stats["load_max_over_mean"],
                 res.stats["load_max_over_mean"])
-        return PingPongPlan(*halves), self._annotate(stats, snap)
+        return PingPongPlan(*halves), self._annotate(stats, snap, view)
 
     def plan_batch(self, batch: Dict[str, Any]) -> Dict[str, Any]:
         """Attach ``plan`` + ``schedule_stats`` to one pipeline batch
@@ -296,13 +330,17 @@ class CADSession:
         synchronously at pull time (consumer thread), so calibration
         feedback is never more than one *materially different* snapshot
         behind despite the look-ahead — and after the estimates
-        converge, no pull pays the re-plan."""
+        converge, no pull pays the re-plan.  With a pool attached, a
+        plan prefetched under a superseded membership epoch is *always*
+        re-planned at pull — a plan that routes tasks to a dead server
+        must never reach the dispatch."""
         depth = self.prefetch if prefetch is None else prefetch
         if depth <= 0:
             for batch in batch_iter:
                 yield self.plan_batch(batch)
             return
-        stale = self._plan_stale if self.calibrator is not None else None
+        stale = self._plan_stale if (self.calibrator is not None
+                                     or self.pool is not None) else None
         pf = PlanPrefetcher(batch_iter, self.plan_batch, depth=depth,
                             is_stale=stale)
         try:

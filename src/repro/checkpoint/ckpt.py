@@ -3,6 +3,13 @@
 Layout: one .npz per checkpoint step holding flattened leaves keyed by
 their tree path, plus a metadata json.  On restore the arrays are
 device_put with the caller's shardings (or left as host arrays).
+
+Runtime-calibration state (the :class:`GridCalibrator` latency grid +
+per-server speed ratios, DESIGN.md §3) rides along in the metadata
+json: pass ``calibrator=`` to :func:`save` and call
+:func:`restore_calibration` after a restart so the measured cost model
+survives — a restore from an older checkpoint without calibration
+state is a silent no-op (the calibrator simply keeps its base model).
 """
 from __future__ import annotations
 
@@ -23,7 +30,7 @@ def _flatten(tree):
 
 
 def save(path: str, step: int, params: Any, opt_state: Any = None,
-         extra: Optional[dict] = None) -> str:
+         extra: Optional[dict] = None, calibrator: Any = None) -> str:
     os.makedirs(path, exist_ok=True)
     tree = {"params": params}
     if opt_state is not None:
@@ -33,11 +40,44 @@ def save(path: str, step: int, params: Any, opt_state: Any = None,
               for i, l in enumerate(leaves)}
     fname = os.path.join(path, f"ckpt_{step:08d}.npz")
     np.savez(fname, **arrays)
+    extra = dict(extra or {})
+    if calibrator is not None:
+        extra["calibration"] = calibrator.state_dict()
     meta = {"step": step, "paths": paths,
-            "extra": extra or {}}
+            "extra": extra}
     with open(fname + ".json", "w") as f:
         json.dump(meta, f)
     return fname
+
+
+def read_meta(path: str, step: int) -> dict:
+    """The metadata json saved alongside a checkpoint step."""
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz.json")
+    with open(fname) as f:
+        return json.load(f)
+
+
+def restore_calibration(path: str, step: int, calibrator: Any) -> bool:
+    """Load a checkpoint's calibration state into ``calibrator``
+    (:meth:`GridCalibrator.load_state_dict`).  Returns True when state
+    was restored; False — leaving the calibrator untouched — for
+    checkpoints written before calibration rode along (older seeds),
+    saved without a calibrator, or whose state describes a different
+    pool geometry (e.g. a shared ckpt dir reused across runs with a
+    different server count)."""
+    try:
+        meta = read_meta(path, step)
+    except FileNotFoundError:
+        return False
+    state = (meta.get("extra") or {}).get("calibration")
+    if not state:
+        return False
+    try:
+        calibrator.load_state_dict(state)
+    except ValueError as e:
+        print(f"note: ignoring checkpoint calibration state: {e}")
+        return False
+    return True
 
 
 def latest_step(path: str) -> Optional[int]:

@@ -395,6 +395,29 @@ class GridCalibrator:
                 speeds=tuple(float(s) for s in self._speeds_locked()))
             return self._snap
 
+    # ------------------------------------------------------- pool elasticity
+    def reset_server(self, server: int,
+                     prior_speed: Optional[float] = None) -> None:
+        """Forget one server's measured speed ratio — the elastic-pool
+        carryover hook (DESIGN.md §9): when a *new* endpoint joins at a
+        dispatch slot, its predecessor's speed estimate must not leak
+        onto it, so the slot restarts from the base model (and
+        ``prior_speed`` if declared).  Surviving servers keep their
+        state untouched; a same-endpoint rejoin (flap) should NOT call
+        this — its calibration is still valid."""
+        with self._lock:
+            if not 0 <= server < self.n_servers:
+                raise ValueError(f"server {server} outside pool of "
+                                 f"{self.n_servers}")
+            self._ratio[server] = np.nan
+            if prior_speed is not None:
+                if prior_speed <= 0:
+                    raise ValueError(
+                        f"prior_speed must be > 0, got {prior_speed}")
+                self._prior[server] = float(prior_speed)
+            self._version += 1
+            self._snap = None
+
     # -------------------------------------------------------- serialization
     def state_dict(self) -> Dict:
         with self._lock:
@@ -410,12 +433,30 @@ class GridCalibrator:
             }
 
     def load_state_dict(self, d: Dict) -> None:
+        """Restore saved calibration.  The state must describe the same
+        pool size this calibrator was built for — silently adopting a
+        differently-sized ``ratio``/``prior`` would hand the planners a
+        wrong-length speeds array (or mis-index servers)."""
+        ratio = np.asarray(d["ratio"], np.float64)
+        prior = np.asarray(d["prior"], np.float64)
+        if ratio.shape != (self.n_servers,) \
+                or prior.shape != (self.n_servers,):
+            raise ValueError(
+                f"calibration state is for a {ratio.shape[0]}-server "
+                f"pool, this calibrator has {self.n_servers} servers")
+        cells = np.asarray(d["cells"], np.float64)
+        q_grid = np.asarray(d["q_grid"], np.float64)
+        kv_grid = np.asarray(d["kv_grid"], np.float64)
+        if cells.shape != (len(q_grid), len(kv_grid)):
+            raise ValueError(
+                f"calibration grid {cells.shape} does not match its "
+                f"axes ({len(q_grid)}, {len(kv_grid)})")
         with self._lock:
-            self.q_grid = np.asarray(d["q_grid"], np.float64)
-            self.kv_grid = np.asarray(d["kv_grid"], np.float64)
-            self._cells = np.asarray(d["cells"], np.float64)
-            self._ratio = np.asarray(d["ratio"], np.float64)
-            self._prior = np.asarray(d["prior"], np.float64)
+            self.q_grid = q_grid
+            self.kv_grid = kv_grid
+            self._cells = cells
+            self._ratio = ratio
+            self._prior = prior
             self.ema = float(d["ema"])
             self._n_obs = int(d["n_obs"])
             self._version = int(d["version"])

@@ -362,14 +362,124 @@ def iter_plan_tasks(cfg: CADConfig, plan) \
 
 
 @functools.lru_cache(maxsize=16)
-def _probe_serve_fn(cfg: CADConfig, kernel: str, bwd, jmax: int):
+def _probe_serve_fn(cfg: CADConfig, kernel: str, bwd, jmax: int,
+                    softcap: float = 0.0, scale=None):
     """One jitted serve per pool geometry — probes recur every
     ``calibrate_every`` steps and must not pay a re-trace each time
     (jit caches per argument shape under the returned callable)."""
     cad = CADContext(cfg=cfg, kernel=kernel, bwd=bwd, jmax=jmax)
     return jax.jit(lambda qt, qp, kb_, vb_, kp, st, ln: _serve(
         qt, qp, kb_, vb_, kp,
-        {"task_kv_start": st, "task_kv_len": ln}, cad, 0.0, 0, None))
+        {"task_kv_start": st, "task_kv_len": ln}, cad, softcap, 0, scale))
+
+
+def build_server_inputs(cad: CADContext, plan, q, k, v, pos):
+    """Host-side decomposed dispatch: assemble every server's fused
+    CA-task inputs for one plan, without the collective exchange.
+
+    ``q``/``k``/``v`` are the stacked rank-major global layout
+    (``[D*Bl, S, H(kv), dh]``, as fed to ``cad_attention``'s global
+    simulation), ``pos`` is ``[D*Bl, S]`` with -1 marking padding.
+    Returns ``(inputs, plans_r)``: per server *s*, ``inputs[s]`` is the
+    ``(q_tasks, qpos_tasks, k_buf, v_buf, kpos_buf)`` tuple ``_serve``
+    consumes and ``plans_r[s]`` its per-rank plan slice.
+
+    This is the elastic runtime's execution substrate (DESIGN.md §9):
+    because each server's task batch is materialized independently, a
+    single server's serve can fail, be retried, or be speculatively
+    re-executed without touching the others — the per-server
+    decomposition the fused shard_map path cannot express."""
+    cfg = cad.cfg
+    d, blk = cfg.n_servers, cfg.blk
+    plan_np = jax.tree.map(np.asarray, dict(plan.items()))
+
+    def stack_ranks(x):
+        return x.reshape((d, x.shape[0] // d) + x.shape[1:])
+
+    qs, ks, vs, ps = map(stack_ranks, (q, k, v, pos))
+    blocks, sends, plans_r = [], [], []
+    for r in range(d):
+        plan_r = jax.tree.map(lambda a, r=r: jnp.asarray(a[r]), plan_np)
+        qb, kb, vb = (_to_blocks(x, blk) for x in (qs[r], ks[r], vs[r]))
+        posb = _to_blocks(ps[r], blk)
+        blocks.append((qb, kb, vb, posb))
+        sends.append(_make_sends(qb, kb, vb, posb, plan_r))
+        plans_r.append(plan_r)
+    # stacked exchange: [D_src, D_dst, C, ...] -> [D_dst, D_src, C, ...]
+    recv = tuple(jnp.swapaxes(jnp.stack([s[i] for s in sends]), 0, 1)
+                 for i in range(len(sends[0])))
+    inputs = []
+    for s in range(d):
+        qb, kb, vb, posb = blocks[s]
+        recv_s = tuple(f[s] for f in recv)
+        inputs.append(_server_tasks(qb, kb, vb, posb, recv_s, plans_r[s],
+                                    cfg))
+    return inputs, plans_r
+
+
+def serve_task_batch(cad: CADContext, inputs_s, plan_s, *,
+                     softcap: float = 0.0, scale=None):
+    """Run ONE server's fused CA-task batch eagerly (compiled once per
+    pool geometry) — the unit of work the elastic runtime dispatches,
+    retries and speculates on."""
+    q_tasks, qpos, k_buf, v_buf, kpos = inputs_s
+    serve = _probe_serve_fn(cad.cfg, cad.kernel, cad.bwd, cad.jmax,
+                            softcap, scale)
+    return serve(q_tasks, qpos, k_buf, v_buf, kpos,
+                 plan_s["task_kv_start"], plan_s["task_kv_len"])
+
+
+def assemble_step_outputs(cfg: CADConfig, plan, out_tasks, q_shape,
+                          dtype):
+    """Host-side home-rank reassembly: the transposed return exchange +
+    scatter of the distributed path, applied to per-server task outputs.
+
+    ``out_tasks`` maps server -> its ``[T, blk, H, dh]`` fused-batch
+    output; servers absent from the dict (failed / killed mid-step)
+    contribute zeros, so their blocks can be recovered separately and
+    merged with :func:`merge_recovered` — exactly-once by construction.
+    Scatter arithmetic is identical to the fused path's
+    ``_scatter_outputs``, so outputs are bit-identical to a fault-free
+    execution of the same plan."""
+    d, blk = cfg.n_servers, cfg.blk
+    plan_np = jax.tree.map(np.asarray, dict(plan.items()))
+    nb = plan_np["q_home_idx"].shape[1]
+    cq = plan_np["q_send_idx"].shape[2]
+    n_tasks = plan_np["task_kv_len"].shape[1]
+    hq, dh = q_shape[-2], q_shape[-1]
+    zeros = None
+    outs = []
+    for r in range(d):
+        ot_r = out_tasks.get(r)
+        if ot_r is None:
+            if zeros is None:
+                zeros = jnp.zeros((n_tasks, blk, hq, dh), dtype)
+            ot_r = zeros
+        ret_recv = jnp.stack([
+            (out_tasks[s][nb + r * cq: nb + (r + 1) * cq]
+             if s in out_tasks else
+             jnp.zeros((cq, blk, hq, dh), dtype))
+            for s in range(d)])
+        plan_r = jax.tree.map(lambda a, r=r: jnp.asarray(a[r]), plan_np)
+        out_r = _scatter_outputs(ot_r, ret_recv, plan_r, cfg, nb, blk,
+                                 hq, dh, dtype)
+        outs.append(out_r.reshape((q_shape[0] // d,) + q_shape[1:]))
+    return jnp.concatenate(outs, axis=0)
+
+
+def merge_recovered(cfg: CADConfig, base, recovered,
+                    lost_blocks: np.ndarray):
+    """Exactly-once merge of a recovery sub-plan's outputs into a step's
+    base outputs: every q block's output is *selected* from exactly one
+    execution (bitwise — no floating-point accumulation across the two),
+    recovered blocks from ``recovered``, everything else from ``base``.
+    ``lost_blocks`` is the boolean ``[D, NB]`` (or flat ``[D*NB]``) mask
+    of blocks whose primary serve was lost."""
+    d, blk = cfg.n_servers, cfg.blk
+    lost = np.asarray(lost_blocks, bool).reshape(d, -1)
+    tok = np.repeat(lost, blk, axis=1)           # [D, NB*blk] per-token
+    mask = tok.reshape((base.shape[0], base.shape[1]))
+    return jnp.where(jnp.asarray(mask)[..., None, None], recovered, base)
 
 
 def probe_plan_times(cad: CADContext, plan, *, n_heads: int = 1,
@@ -397,23 +507,13 @@ def probe_plan_times(cad: CADContext, plan, *, n_heads: int = 1,
     hkv = n_kv_heads or n_heads
     plan_np = jax.tree.map(np.asarray, dict(plan.items()))
     kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
-    q = jax.random.normal(kq, (d, 1, s_len, n_heads, head_dim), dtype)
-    k = jax.random.normal(kk, (d, 1, s_len, hkv, head_dim), dtype)
-    v = jax.random.normal(kv, (d, 1, s_len, hkv, head_dim), dtype)
+    q = jax.random.normal(kq, (d, s_len, n_heads, head_dim), dtype)
+    k = jax.random.normal(kk, (d, s_len, hkv, head_dim), dtype)
+    v = jax.random.normal(kv, (d, s_len, hkv, head_dim), dtype)
     pos = jnp.broadcast_to(jnp.arange(s_len, dtype=jnp.int32)[None],
-                           (1, s_len))
+                           (d, s_len))
 
-    blocks, sends = [], []
-    for r in range(d):
-        plan_r = jax.tree.map(lambda a, r=r: jnp.asarray(a[r]), plan_np)
-        qb, kb, vb = (_to_blocks(x[r], blk) for x in (q, k, v))
-        posb = _to_blocks(pos, blk)
-        blocks.append((qb, kb, vb, posb, plan_r))
-        sends.append(_make_sends(qb, kb, vb, posb, plan_r))
-    # stacked exchange: [D_src, D_dst, C, ...] -> [D_dst, D_src, C, ...]
-    recv = tuple(jnp.swapaxes(jnp.stack([s[i] for s in sends]), 0, 1)
-                 for i in range(len(sends[0])))
-
+    inputs, plans_r = build_server_inputs(cad, plan_np, q, k, v, pos)
     serve = _probe_serve_fn(cfg, cad.kernel, cad.bwd, cad.jmax)
 
     by_server: Dict[int, List[Tuple[int, int]]] = {s: [] for s in range(d)}
@@ -423,12 +523,9 @@ def probe_plan_times(cad: CADContext, plan, *, n_heads: int = 1,
     results = []
     warm = False
     for s in range(d):
-        qb, kb, vb, posb, plan_s = blocks[s]
-        recv_s = tuple(f[s] for f in recv)
-        q_tasks, qpos, k_buf, v_buf, kpos = _server_tasks(
-            qb, kb, vb, posb, recv_s, plan_s, cfg)
+        q_tasks, qpos, k_buf, v_buf, kpos = inputs[s]
         args = (q_tasks, qpos, k_buf, v_buf, kpos,
-                plan_s["task_kv_start"], plan_s["task_kv_len"])
+                plans_r[s]["task_kv_start"], plans_r[s]["task_kv_len"])
         if not warm:      # one compile for the shared shape
             jax.block_until_ready(serve(*args))
             warm = True

@@ -292,15 +292,19 @@ def identity_assignment(cfg: CADConfig) -> np.ndarray:
     return (np.arange(cfg.n_servers * cfg.nb) // cfg.nb).astype(np.int64)
 
 
-def head_tail_assignment(cfg: CADConfig, docs) -> np.ndarray:
+def head_tail_assignment(cfg: CADConfig, docs,
+                         servers: Optional[Tuple[int, ...]] = None) \
+        -> np.ndarray:
     """Head-tail per-document CP (paper §2.2): each doc's blocks are dealt
-    to servers in the 0,1,...,D-1,D-1,...,1,0 pairing order."""
-    d = cfg.n_servers
+    to servers in the 0,1,...,D-1,D-1,...,1,0 pairing order.  ``servers``
+    restricts the deal to a surviving subset of the pool (elastic
+    membership, DESIGN.md §9); the default is the full pool."""
+    srv = list(range(cfg.n_servers)) if servers is None else list(servers)
     assign = identity_assignment(cfg)
-    ht = list(range(d)) + list(range(d - 1, -1, -1))   # head-tail order
+    ht = srv + srv[::-1]                               # head-tail order
     for doc in docs:
         for j, g in enumerate(doc.blocks()):
-            assign[g] = ht[j % (2 * d)]
+            assign[g] = ht[j % len(ht)]
     return assign
 
 

@@ -28,11 +28,22 @@ arithmetic reduces exactly to the homogeneous relative-FLOPs balance.
 Capacities (per-pair q/kv send slots, per-server kv buffer slots) mirror
 the static shapes of the compiled dispatch; moves that would overflow a
 capacity are rejected (TPU adaptation — see DESIGN.md §3).
+
+Elastic pools (DESIGN.md §9): ``exclude`` names servers that must not
+hold CA tasks this step — drained or dead members of an elastic pool.
+Core attention is stateless, so excluding a server never loses data:
+its *data-rank* half keeps holding (and sending) q/k/v shards; only its
+attention-serving capacity is withdrawn.  Documents homed on an
+excluded server are dealt whole to the least-loaded surviving server
+first (whole docs keep the kv prefix send contiguous and cap-checked),
+then the ordinary greedy loop balances among the survivors.  The
+dispatch geometry — array shapes keyed by ``n_servers`` — never
+changes, so one compiled executable serves every membership epoch.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -76,6 +87,7 @@ class Schedule:
     comm_bytes: float
     n_moves: int
     speeds: Optional[np.ndarray] = None   # [S] speed factors (None = 1)
+    exclude: Tuple[int, ...] = ()         # servers barred from tasks
 
 
 def layout_from_segments(segment_ids: np.ndarray, blk: int,
@@ -139,16 +151,35 @@ def _bi_cost_table(blk: int, max_blocks: int,
     return np.asarray(cost_model.predict(blk, ctx * blk), np.float64)
 
 
+def check_exclude(exclude: Optional[Iterable[int]],
+                  n_servers: int) -> Tuple[int, ...]:
+    """Validate an excluded-server set; returns it sorted.  At least one
+    server must survive — an empty pool cannot serve attention."""
+    ex = tuple(sorted({int(s) for s in (exclude or ())}))
+    for s in ex:
+        if not 0 <= s < n_servers:
+            raise ValueError(f"excluded server {s} outside pool of "
+                             f"{n_servers}")
+    if len(ex) >= n_servers:
+        raise ValueError(
+            f"cannot exclude all {n_servers} servers — the attention "
+            f"pool needs at least one surviving endpoint")
+    return ex
+
+
 def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
              comm: CommModel, caps: Caps, tolerance: float = 0.1,
              max_moves: int = 100000,
              speeds: Optional[np.ndarray] = None,
-             cost_model: Optional[CostModel] = None) -> Schedule:
+             cost_model: Optional[CostModel] = None,
+             exclude: Optional[Iterable[int]] = None) -> Schedule:
     docs, doc_of, bi_of = layout_from_segments(segment_ids, blk, n_servers)
     nb = segment_ids.shape[1] // blk
     G = n_servers * nb
     assign = (np.arange(G) // nb).astype(np.int64)     # home assignment
 
+    exclude = check_exclude(exclude, n_servers)
+    excluded = set(exclude)
     speeds = np.ones(n_servers) if speeds is None \
         else np.asarray(speeds, np.float64)
     if speeds.shape != (n_servers,):
@@ -165,11 +196,14 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
         """Sum of per-block CA cost over block-in-doc range [lo, hi)."""
         return float(bi_csum[hi] - bi_csum[lo])
 
-    # loads are modeled *time*: assigned base cost / server speed
+    # loads are modeled *time*: assigned base cost / server speed.
+    # Excluded servers contribute no capacity: the ideal per-server time
+    # spreads the whole batch over the survivors' speeds only.
+    allowed = [s for s in range(n_servers) if s not in excluded]
     loads_base = np.array([cost_of[s * nb:(s + 1) * nb].sum()
                            for s in range(n_servers)])
     loads = loads_base / speeds
-    fbar = loads_base.sum() / speeds.sum()
+    fbar = loads_base.sum() / speeds[allowed].sum()
 
     # items[s][doc_id] -> sorted list of disjoint (lo, hi) block ranges
     items: List[Dict[int, List[Tuple[int, int]]]] = \
@@ -184,6 +218,49 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
 
     comm_bytes = 0.0
     n_moves = 0
+
+    if excluded:
+        from repro.core.plan import PlanCapacityError  # circular-safe
+
+        def _deal_fit(home: int, dst: int, n_bl: int):
+            """None when the whole doc fits on dst, else the failing
+            (capacity, needed, available) triple."""
+            if q_used[home, dst] + n_bl > caps.cq:
+                return "CQ", int(q_used[home, dst]) + n_bl, caps.cq
+            if kv_used[home, dst] + n_bl > caps.ckv:
+                return "CKV", int(kv_used[home, dst]) + n_bl, caps.ckv
+            if nkv_used[dst] + n_bl > caps.nkv:
+                return "NKV", int(nkv_used[dst]) + n_bl, caps.nkv
+            return None
+
+        # Evacuation: docs homed on excluded servers are dealt whole to
+        # the least-loaded survivor with capacity (whole docs keep each
+        # kv prefix send a single contiguous range); the greedy loop
+        # below then rebalances among survivors as usual.
+        for d in docs:
+            if d.home not in excluded:
+                continue
+            n_bl = d.n_blocks
+            cand = sorted(allowed, key=lambda s: (loads[s], s))
+            dst = next((s for s in cand
+                        if _deal_fit(d.home, s, n_bl) is None), None)
+            if dst is None:
+                cap, needed, avail = _deal_fit(d.home, cand[0], n_bl)
+                raise PlanCapacityError(cap, d.home, cand[0], needed,
+                                        avail)
+            df = range_cost(0, n_bl)
+            del items[d.home][d.doc_id]
+            items[dst][d.doc_id] = [(0, n_bl)]
+            assign[d.g0:d.g0 + n_bl] = dst
+            loads[d.home] -= df / speeds[d.home]
+            loads[dst] += df / speeds[dst]
+            q_used[d.home, dst] += n_bl
+            kv_used[d.home, dst] += n_bl
+            nkv_used[dst] += n_bl
+            sent_kv[dst][d.doc_id] = n_bl
+            comm_bytes += comm.migration_bytes(n_bl * blk, n_bl * blk)
+            n_moves += 1
+        loads[list(excluded)] = 0.0      # evacuated exactly
 
     def suffix_take(lo: int, hi: int, budget: float) -> int:
         """Largest t in [lo, hi) such that cost of [t, hi) <= budget, but
@@ -206,7 +283,9 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
 
     while n_moves < max_moves:
         order = np.argsort(loads)
-        dst = int(order[0])
+        # destination: the least-loaded *surviving* server (an excluded
+        # server sits at load 0 but must never receive tasks)
+        dst = next(int(s) for s in order if int(s) not in excluded)
         deficit = fbar - loads[dst]
         if deficit <= tolerance * fbar:
             break
@@ -287,7 +366,7 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
     return Schedule(assign=assign, docs=docs, doc_of_block=doc_of,
                     bi_of_block=bi_of, n_servers=n_servers, nb=nb, blk=blk,
                     loads=loads, comm_bytes=comm_bytes, n_moves=n_moves,
-                    speeds=speeds)
+                    speeds=speeds, exclude=exclude)
 
 
 def imbalance(loads: np.ndarray) -> float:

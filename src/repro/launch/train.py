@@ -15,7 +15,11 @@ imbalance budget), --prefetch (async plan look-ahead; 0 = synchronous),
 "1,0.5" gives rank 1 half the FLOPs), --calibrate (runtime cost-model
 calibration: per-server kernel timings are probed every
 --calibrate-every steps and fed back so later batches are planned from
-measured costs).
+measured costs), --fault-schedule (elastic pool membership: a
+deterministic FaultSchedule spec like "kill:1@5" or "flap:0@3+2,
+slow:2x4@4-8" — killed/drained servers are excluded from subsequent
+plans and flapped servers rejoin, DESIGN.md §9), --speculate-pct
+(straggler-speculation percentile for the elastic executor paths).
 """
 import argparse
 
@@ -53,6 +57,14 @@ def main():
                          "per-server CA timings and replan from them")
     ap.add_argument("--calibrate-every", type=int, default=5,
                     help="steps between calibration probes")
+    ap.add_argument("--fault-schedule", default="",
+                    help="deterministic fault injection spec, e.g. "
+                         "'kill:1@5' or 'flap:0@3+2,slow:2x4@4-8' "
+                         "(elastic pool membership, DESIGN.md §9)")
+    ap.add_argument("--speculate-pct", type=float, default=0.0,
+                    help="straggler-speculation deadline percentile "
+                         "(0 = off; task-level speculation runs in the "
+                         "elastic executor)")
     ap.add_argument("--kernel", default="xla", choices=["xla", "pallas"])
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="")
@@ -84,9 +96,9 @@ def main():
         if args.cad:
             print(f"note: {cfg.arch_id} is attention-free; CAD is "
                   f"inapplicable (DESIGN.md §5) — training without it")
-        if args.calibrate or speeds:
-            print("note: --calibrate/--server-speeds only apply to the "
-                  "CAD attention service — ignored")
+        if args.calibrate or speeds or args.fault_schedule:
+            print("note: --calibrate/--server-speeds/--fault-schedule "
+                  "only apply to the CAD attention service — ignored")
         ctx = ParallelContext(attn_impl="xla", remat=True)
     tc = TrainConfig(steps=args.steps, peak_lr=args.lr,
                      warmup=max(1, args.steps // 10),
@@ -94,7 +106,10 @@ def main():
                      ckpt_every=args.ckpt_every,
                      ckpt_dir=args.ckpt_dir or "/tmp/repro_ckpt",
                      calibrate_every=args.calibrate_every
-                     if args.calibrate else 0)
+                     if args.calibrate else 0,
+                     fault_schedule=args.fault_schedule
+                     if session is not None else "",
+                     speculate_pct=args.speculate_pct)
     res = train(cfg, pipe, tc, ctx=ctx, session=session)
     h = res["history"]
     print(f"done: loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")

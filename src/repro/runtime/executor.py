@@ -1,0 +1,314 @@
+"""Elastic step executor: fault-tolerant dispatch over a mutable pool.
+
+``ElasticExecutor`` is the runtime layer between :class:`CADSession`
+(planning, calibration) and ``core.dispatch`` (per-server serve +
+scatter).  Each ``run_step``:
+
+  1. applies the step's scheduled membership events (rejoins, drains)
+     to the :class:`~repro.runtime.pool.ServerPool`, then plans the
+     batch against the surviving endpoints (one epoch view per step);
+  2. executes every active server's fused CA-task batch independently
+     (``core.dispatch.build_server_inputs`` / ``serve_task_batch``) —
+     the decomposition that makes task-level fault handling possible;
+  3. on a mid-step failure (injected kill/flap, or a raised exception
+     from a real serve) builds a **recovery sub-plan** re-dispatching
+     exactly the lost tasks onto survivors, and **speculatively
+     re-executes** straggler servers whose time exceeds the
+     ``speculate_pct`` percentile deadline from the calibrated cost
+     model (when the backup is modeled to finish earlier);
+  4. merges outputs exactly-once: every q block's output is *selected*
+     bitwise from exactly one execution, so the step output is
+     bit-identical to a fault-free run of the same batch
+     (DESIGN.md §9);
+  5. feeds measured per-server timings back to the session calibrator
+     and applies end-of-step membership consequences (kill -> remove,
+     flap -> remove + scheduled rejoin).
+
+Timing runs under one of two timers: ``"model"`` — per-server seconds
+are predicted by the (calibrated) cost model, scaled by the fault
+schedule's slow factors; fully deterministic, the replay/benchmark
+default — or ``"wall"`` — real wall-clock serve times (slow factors
+still multiply), for live measurements.  Outputs are bit-identical
+under either timer; only the reported seconds differ.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.dispatch import (CADContext, assemble_step_outputs,
+                                 build_server_inputs, iter_plan_tasks,
+                                 merge_recovered, serve_task_batch)
+from repro.runtime.faults import FaultSchedule
+from repro.runtime.pool import PoolExhaustedError, ServerPool
+from repro.runtime.recovery import build_recovery_plan
+
+TIMERS = ("model", "wall")
+
+
+@dataclasses.dataclass(frozen=True)
+class StepReport:
+    """What happened during one elastic step — everything a replay must
+    reproduce (and a dashboard would chart)."""
+    step: int
+    epoch: int
+    failed: Tuple[int, ...]            # servers that lost tasks mid-step
+    speculated: Tuple[int, ...]        # stragglers re-executed on backups
+    recovered_blocks: int
+    server_seconds: Dict[int, float]   # primary serve time per server
+    recovery_seconds: Dict[int, float]  # added backup time per survivor
+    step_seconds: float                # modeled/measured step completion
+    deadline: float                    # straggler deadline (0 = off)
+    plan_stats: Dict[str, float]
+    events: Tuple[str, ...]            # membership log entries this step
+
+    def summary(self) -> str:
+        bits = [f"step {self.step} epoch {self.epoch} "
+                f"t={self.step_seconds * 1e3:.2f}ms"]
+        if self.failed:
+            bits.append(f"failed={list(self.failed)} "
+                        f"recovered={self.recovered_blocks} blocks")
+        if self.speculated:
+            bits.append(f"speculated={list(self.speculated)}")
+        return " | ".join(bits)
+
+
+class ElasticExecutor:
+    """Drives elastic steps for one :class:`CADSession` with an
+    attached :class:`ServerPool` (``session.with_pool(pool)``).
+
+    ``speculate_pct`` in (0, 1] arms straggler speculation: a server
+    whose serve time exceeds ``quantile(predicted, pct) * slack`` is
+    re-executed on the least-loaded survivors when the backup is
+    modeled to finish earlier.  ``0`` disables speculation (failures
+    are still recovered)."""
+
+    def __init__(self, session, *, faults: Optional[FaultSchedule] = None,
+                 speculate_pct: float = 0.0,
+                 speculate_slack: float = 1.5,
+                 timer: str = "model",
+                 feed_calibrator: bool = True):
+        if session.pool is None:
+            raise ValueError("session has no ServerPool; use "
+                             "session.with_pool(ServerPool(...))")
+        if session.pingpong:
+            raise NotImplementedError(
+                "the elastic executor drives single-phase plans; "
+                "ping-pong interleaving stays on the fused path")
+        if timer not in TIMERS:
+            raise ValueError(f"timer must be one of {TIMERS}, got "
+                             f"{timer!r}")
+        if not 0.0 <= speculate_pct <= 1.0:
+            raise ValueError(f"speculate_pct in [0, 1], got "
+                             f"{speculate_pct}")
+        self.session = session
+        self.pool: ServerPool = session.pool
+        self.faults = faults or FaultSchedule()
+        self.speculate_pct = float(speculate_pct)
+        self.speculate_slack = float(speculate_slack)
+        self.timer = timer
+        self.feed_calibrator = feed_calibrator
+        self._cad = CADContext(cfg=session.cfg, kernel=session.kernel,
+                               bwd=session.bwd, jmax=session.jmax)
+
+    # ------------------------------------------------------------ helpers
+    def _cost_view(self):
+        """(cost model, speeds) the step's predictions come from: the
+        calibrator's current snapshot when attached, else the analytic
+        base for the session's head geometry."""
+        if self.session.calibrator is not None:
+            snap = self.session.calibrator.snapshot()
+            return snap.cost_model, snap.speeds_array()
+        comm = self.session.comm
+        cm = CostModel.analytic(comm.n_heads if comm else 1,
+                                comm.head_dim if comm else 8)
+        return cm, self.session.cfg.speeds()
+
+    def _predict_server(self, cm: CostModel, speeds, tasks,
+                        server: int) -> float:
+        if not tasks:
+            return 0.0
+        t = float(sum(float(cm.predict(qt, kvt)) for qt, kvt in tasks))
+        return t / float(speeds[server])
+
+    # ----------------------------------------------------------- stepping
+    def run_step(self, step: int, q, k, v, pos, segment_ids: np.ndarray):
+        """Execute one elastic step.  ``q``/``k``/``v`` are the stacked
+        rank-major global layout ``[D*Bl, S, H(kv), dh]``, ``pos`` is
+        ``[D*Bl, S]`` with -1 on padding, ``segment_ids`` the packed
+        [D*Bl, S] (or [D, T]) layout.  Returns ``(out, StepReport)``;
+        never raises on an injected fault — lost tasks are recovered
+        (only an exhausted pool aborts)."""
+        cfg = self.session.cfg
+
+        # 1. scheduled membership: rejoins/drains land before planning
+        # (shared semantics with the fused trainer path)
+        events = list(self.faults.apply_pre_step(self.pool, step))
+
+        segs = np.asarray(segment_ids).reshape(cfg.n_servers, -1)
+        plan, stats = self.session.plan(segs)
+        view = self.pool.view()
+
+        # 2. primary execution, one fused task batch per active server;
+        # injected kills lose their tasks up front, a real serve raising
+        # is demoted to a failure the same way (recover, then remove)
+        injected = {e.server for e in self.faults.failures_at(step)} \
+            & set(view.active)
+        failures = set(injected)
+
+        inputs, plans_r = build_server_inputs(self._cad, plan, q, k, v,
+                                              pos)
+        tasks_by = {s: [] for s in range(cfg.n_servers)}
+        for s, _slot, qt, kvt in iter_plan_tasks(cfg, plan):
+            tasks_by[s].append((qt, kvt))
+        cm, speeds = self._cost_view()
+        preds = {s: self._predict_server(cm, speeds, tasks_by[s], s)
+                 for s in view.active}
+
+        outs: Dict[int, Any] = {}
+        seconds: Dict[int, float] = {}
+        for s in view.active:
+            if s in failures:
+                continue                      # tasks lost mid-serve
+            slow = self.faults.slow_factor(step, s)
+            try:
+                if self.timer == "wall":
+                    t0 = time.perf_counter()
+                    outs[s] = jax.block_until_ready(
+                        serve_task_batch(self._cad, inputs[s],
+                                         plans_r[s]))
+                    seconds[s] = (time.perf_counter() - t0) * slow
+                else:
+                    outs[s] = serve_task_batch(self._cad, inputs[s],
+                                               plans_r[s])
+                    seconds[s] = preds[s] * slow
+            except Exception as exc:          # real task failure
+                failures.add(s)
+                outs.pop(s, None)
+                seconds.pop(s, None)
+                events.append(f"serve-error {s}: {type(exc).__name__}")
+
+        failures = tuple(sorted(failures))
+        healthy = [s for s in view.active if s not in failures]
+        if not healthy:
+            raise PoolExhaustedError(
+                f"step {step}: every active server failed {failures}")
+
+        # 3. straggler detection against the cost-model deadline
+        deadline = 0.0
+        speculated: list = []
+        if self.speculate_pct > 0 and len(healthy) > 1:
+            deadline = float(np.quantile(
+                [preds[s] for s in view.active], self.speculate_pct)) \
+                * self.speculate_slack
+            for s in healthy:
+                if seconds[s] <= deadline or not tasks_by[s]:
+                    continue
+                backups = [x for x in healthy
+                           if x != s and seconds[x] <= deadline]
+                if not backups:
+                    continue
+                # speculate only when the backup is modeled to win
+                spread = sum(float(cm.predict(qt, kvt))
+                             for qt, kvt in tasks_by[s]) \
+                    / float(sum(speeds[b] for b in backups))
+                if deadline + spread < seconds[s]:
+                    speculated.append(s)
+
+        # 4. recovery sub-plan for lost + speculated tasks
+        to_recover = tuple(failures) + tuple(speculated)
+        rec = None
+        rec_secs: Dict[int, float] = {}
+        if to_recover:
+            backups = [s for s in healthy if s not in speculated]
+            if not backups:                    # nobody left to back up
+                speculated = []
+                to_recover = tuple(failures)
+                backups = list(healthy)
+            rec = build_recovery_plan(
+                cfg, segs, plan, to_recover, allowed=backups,
+                base_loads={s: seconds[s] for s in backups},
+                cost_model=cm, speeds=speeds) if to_recover else None
+        base = assemble_step_outputs(cfg, plan, outs, q.shape, q.dtype)
+        if rec is not None:
+            rec_inputs, rec_plans = build_server_inputs(
+                self._cad, rec.plan, q, k, v, pos)
+            rec_outs = {}
+            for s, added in rec.added_time.items():
+                slow = self.faults.slow_factor(step, s)
+                if self.timer == "wall":
+                    t0 = time.perf_counter()
+                    rec_outs[s] = jax.block_until_ready(serve_task_batch(
+                        self._cad, rec_inputs[s], rec_plans[s]))
+                    rec_secs[s] = (time.perf_counter() - t0) * slow
+                else:
+                    rec_outs[s] = serve_task_batch(
+                        self._cad, rec_inputs[s], rec_plans[s])
+                    rec_secs[s] = added * slow
+            recovered = assemble_step_outputs(cfg, rec.plan, rec_outs,
+                                              q.shape, q.dtype)
+            out = merge_recovered(cfg, base, recovered, rec.lost)
+        else:
+            out = base
+
+        # 5. completion accounting + calibration feedback
+        detect = deadline if deadline > 0 else \
+            max((seconds[s] for s in seconds), default=0.0)
+        done = []
+        for s in healthy:
+            if s in speculated:
+                continue
+            t = seconds[s]
+            if s in rec_secs:
+                t = max(t, detect) + rec_secs[s]
+            done.append(t)
+        step_seconds = max(done, default=0.0)
+        if self.feed_calibrator:
+            for s in healthy:
+                if tasks_by[s]:
+                    self.session.observe_server(s, tasks_by[s],
+                                                seconds[s])
+
+        # 6. end-of-step membership consequences (shared semantics with
+        # the fused trainer path; also fells draining servers so their
+        # flap rejoins can fire later)
+        events.extend(self.faults.apply_failures(self.pool, step))
+        for s in failures:
+            if s not in injected:             # real serve failure
+                self.pool.remove(s)
+                events.append(f"remove {s} (serve error)")
+
+        report = StepReport(
+            step=step, epoch=view.epoch, failed=failures,
+            speculated=tuple(speculated),
+            recovered_blocks=0 if rec is None else rec.n_blocks,
+            server_seconds=dict(seconds), recovery_seconds=rec_secs,
+            step_seconds=float(step_seconds), deadline=float(deadline),
+            plan_stats=dict(stats), events=tuple(events))
+        return out, report
+
+    # ------------------------------------------------------ conveniences
+    def synth_inputs(self, segment_ids: np.ndarray,
+                     positions: np.ndarray, *, seed: int = 0,
+                     dtype=jnp.float32):
+        """Synthetic q/k/v (+ masked positions) matching the session's
+        head geometry for a packed batch — benchmark/demo food."""
+        comm = self.session.comm
+        nh = comm.n_heads if comm else 1
+        dh = comm.head_dim if comm else 8
+        hkv = comm.n_kv_heads if comm else nh
+        segs = np.asarray(segment_ids)
+        rows, s_len = segs.shape
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(kq, (rows, s_len, nh, dh), dtype)
+        k = jax.random.normal(kk, (rows, s_len, hkv, dh), dtype)
+        v = jax.random.normal(kv, (rows, s_len, hkv, dh), dtype)
+        pos = jnp.asarray(np.where(segs > 0, positions, -1)
+                          .astype(np.int32))
+        return q, k, v, pos

@@ -1,0 +1,168 @@
+"""Recovery sub-plans: re-dispatch a failed server's CA tasks.
+
+Core attention is stateless (the paper's central observation): a CA
+task is a pure function of the q block and its document's kv prefix,
+both of which the *data ranks* still hold when an attention server
+dies.  Recovery is therefore just planning again — a **sub-plan** over
+exactly the lost q blocks, built by the very same
+``plan_from_assignment`` machinery as the primary plan, so every
+capacity check, kv-prefix invariant and dispatch-array layout is
+shared with the normal path.
+
+Exactly-once + bit-identical merging: a sub-plan's tasks are the lost
+blocks and nothing else, so scattering its outputs touches exactly the
+blocks the primary scatter left empty; the merge is a bitwise *select*
+per block (``core.dispatch.merge_recovered``), never a floating-point
+accumulation across executions.  Because every kernel in the path
+computes a task identically regardless of which server runs it, the
+merged step output is bit-identical to a fault-free run of the same
+batch on the reduced pool (DESIGN.md §9; asserted by
+``tests/test_elastic.py`` and ``benchmarks/elastic_recovery.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.plan import CADConfig, StepPlan, plan_from_assignment
+from repro.core.scheduler import block_costs, layout_from_segments
+
+
+def assignment_of_plan(cfg: CADConfig, plan) -> np.ndarray:
+    """Recover the per-block server assignment from a plan's dispatch
+    arrays — what would *actually execute*, not what a scheduler
+    claims.  Blocks not appearing as tasks (padding) keep their home
+    rank."""
+    d, nb = cfg.n_servers, cfg.nb
+    assign = np.arange(d * nb) // nb
+    q_send = np.asarray(plan["q_send_idx"])
+    for src in range(d):
+        for dst in range(d):
+            for c in q_send[src, dst]:
+                if c >= 0:
+                    assign[src * nb + int(c)] = dst
+    return assign
+
+
+def lost_block_mask(cfg: CADConfig, plan, failed: Iterable[int],
+                    doc_of: Optional[np.ndarray] = None) -> np.ndarray:
+    """Boolean [D*NB]: live q blocks whose serving server failed."""
+    assign = assignment_of_plan(cfg, plan)
+    failed = set(int(s) for s in failed)
+    lost = np.isin(assign, sorted(failed))
+    if doc_of is not None:
+        lost &= doc_of >= 0
+    else:
+        # blocks with no task on any server are padding, never lost
+        live = np.zeros(cfg.n_servers * cfg.nb, bool)
+        kv_len = np.asarray(plan["task_kv_len"])
+        q_home = np.asarray(plan["q_home_idx"])
+        for s in range(cfg.n_servers):
+            for slot in range(kv_len.shape[1]):
+                if kv_len[s, slot] > 0:
+                    g = _task_q_block(cfg, q_home, plan, s, slot)
+                    if g is not None:
+                        live[g] = True
+        lost &= live
+    return lost
+
+
+def _task_q_block(cfg, q_home, plan, server, slot):
+    nb, cq = cfg.nb, cfg.cq
+    if slot < nb:
+        idx = int(q_home[server, slot])
+        return server * nb + idx if idx >= 0 else None
+    src, c = divmod(slot - nb, cq)
+    idx = int(np.asarray(plan["q_send_idx"])[src, server, c])
+    return src * nb + idx if idx >= 0 else None
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPlan:
+    """A recovery sub-plan: the typed StepPlan whose only live tasks
+    are the lost blocks, the [D*NB] lost-block mask to merge by, and
+    the per-survivor modeled time the recovery adds."""
+    plan: StepPlan
+    lost: np.ndarray                    # [D*NB] bool
+    assign: np.ndarray                  # [G] full assignment (lost only
+    #                                     meaningful where ``lost``)
+    added_time: Dict[int, float]        # survivor -> modeled seconds
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.lost.sum())
+
+
+def build_recovery_plan(cfg: CADConfig, segment_ids: np.ndarray, plan,
+                        failed: Iterable[int], *,
+                        allowed: Iterable[int],
+                        base_loads: Optional[Dict[int, float]] = None,
+                        cost_model: Optional[CostModel] = None,
+                        speeds: Optional[np.ndarray] = None) \
+        -> Optional[RecoveryPlan]:
+    """Build the sub-plan that recomputes every task lost on ``failed``
+    onto ``allowed`` survivors.
+
+    Each maximal contiguous run of lost blocks within one document is
+    dealt whole to the survivor with the least (base + already-added)
+    modeled time — contiguous runs keep each kv prefix send a single
+    range, the comm-minimal granularity of the primary scheduler.
+    ``base_loads`` carries the survivors' primary-serve times so
+    recovery lands on the least-busy endpoints first.  Returns ``None``
+    when the failure lost no live tasks (nothing to recover)."""
+    failed = sorted({int(s) for s in failed})
+    allowed = sorted({int(s) for s in allowed})
+    if not allowed:
+        raise ValueError("recovery needs at least one surviving server")
+    if set(allowed) & set(failed):
+        raise ValueError(f"survivors {allowed} overlap failures {failed}")
+    docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
+                                               cfg.n_servers)
+    lost = lost_block_mask(cfg, plan, failed, doc_of)
+    if not lost.any():
+        return None
+    speeds = cfg.speeds() if speeds is None \
+        else np.asarray(speeds, np.float64)
+    cost = block_costs(doc_of, bi_of, cfg.blk, cost_model)
+    loads = {s: float((base_loads or {}).get(s, 0.0)) for s in allowed}
+    added = {s: 0.0 for s in allowed}
+
+    assign = np.arange(cfg.n_servers * cfg.nb) // cfg.nb
+    masked_doc_of = np.where(lost, doc_of, -1)
+    # maximal contiguous lost runs, document-pure, dealt to the least
+    # loaded survivor (deterministic tie-break: lowest slot)
+    g = 0
+    G = cfg.n_servers * cfg.nb
+    while g < G:
+        if not lost[g]:
+            g += 1
+            continue
+        dc = int(doc_of[g])
+        h = g
+        while h < G and lost[h] and int(doc_of[h]) == dc:
+            h += 1
+        run_cost = float(cost[g:h].sum())
+        dst = min(allowed,
+                  key=lambda s: (loads[s] + run_cost / speeds[s], s))
+        assign[g:h] = dst
+        loads[dst] += run_cost / speeds[dst]
+        added[dst] += run_cost / speeds[dst]
+        g = h
+    sub = plan_from_assignment(cfg, assign, masked_doc_of, bi_of, docs)
+    return RecoveryPlan(plan=sub, lost=lost, assign=assign,
+                        added_time={s: t for s, t in added.items()
+                                    if t > 0})
+
+
+def recovery_tasks(cfg: CADConfig, rec: RecoveryPlan) \
+        -> Dict[int, Tuple[Tuple[int, int], ...]]:
+    """Per-survivor (q_tokens, kv_tokens) task shapes of a recovery
+    sub-plan — calibrator food and modeled-time input."""
+    from repro.core.dispatch import iter_plan_tasks
+    out: Dict[int, list] = {}
+    for s, _slot, qt, kvt in iter_plan_tasks(cfg, rec.plan):
+        out.setdefault(s, []).append((qt, kvt))
+    return {s: tuple(v) for s, v in out.items()}

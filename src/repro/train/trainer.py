@@ -33,6 +33,17 @@ class TrainConfig:
     seed: int = 0
     calibrate_every: int = 0      # probe + feed CA timings every N steps
                                   # (0 = off; needs a session calibrator)
+    fault_schedule: str = ""      # FaultSchedule spec applied to the
+                                  # session's ServerPool (one is attached
+                                  # if missing): membership events take
+                                  # effect at step granularity here —
+                                  # a killed server is excluded from the
+                                  # next plan; prefetched plans from the
+                                  # dead epoch re-plan at pull
+    speculate_pct: float = 0.0    # straggler-speculation percentile;
+                                  # consumed by the task-level elastic
+                                  # executor (benchmarks/examples) — the
+                                  # fused jit path only records it
 
 
 def train(cfg, pipe_cfg: PipelineConfig, train_cfg: TrainConfig,
@@ -45,7 +56,21 @@ def train(cfg, pipe_cfg: PipelineConfig, train_cfg: TrainConfig,
     attaches prefetched plans to every batch.  The legacy path —
     ``ctx`` from ``make_cad_context`` plus ``pipe_cfg.cad`` — still
     works."""
+    faults = pool = None
     if session is not None:
+        if train_cfg.fault_schedule:
+            from repro.runtime import FaultSchedule, ServerPool
+            faults = FaultSchedule.parse(train_cfg.fault_schedule)
+            if session.pool is None:
+                session = session.with_pool(ServerPool(
+                    session.cfg.n_servers,
+                    calibrator=session.calibrator))
+            if train_cfg.speculate_pct > 0:
+                print("note: --speculate-pct drives task-level "
+                      "speculation in the elastic executor "
+                      "(benchmarks/elastic_recovery.py); the fused "
+                      "train step applies membership events only")
+        pool = session.pool
         ctx = session.context()
         gen = session.attach_plans(raw_batches(pipe_cfg))
     else:
@@ -66,10 +91,32 @@ def train(cfg, pipe_cfg: PipelineConfig, train_cfg: TrainConfig,
     calibrating = (session is not None
                    and session.calibrator is not None
                    and train_cfg.calibrate_every > 0)
+    if session is not None and session.calibrator is not None \
+            and train_cfg.ckpt_every:
+        # calibration survives restarts: pick up the measured grid from
+        # the newest checkpoint (no-op when none carries calibration)
+        last = ckpt.latest_step(train_cfg.ckpt_dir)
+        if last is not None and ckpt.restore_calibration(
+                train_cfg.ckpt_dir, last, session.calibrator):
+            print(f"restored calibration state from step {last}")
     history = []
     t0 = time.time()
     try:
         for step in range(train_cfg.steps):
+            pool_events = []
+            if faults is not None:
+                # membership events land at step granularity on the
+                # fused path: the planner is re-invoked against the
+                # survivors and stale prefetched plans re-plan at pull
+                # (kills apply before the step — the jitted path cannot
+                # lose a server mid-flight; same shared semantics as
+                # the elastic executor)
+                pool_events = faults.apply_pre_step(pool, step) \
+                    + faults.apply_failures(pool, step)
+                if pool_events:
+                    print(f"step {step:5d} pool: "
+                          f"{', '.join(pool_events)} "
+                          f"(epoch {pool.epoch})")
             batch = next(gen)
             stats = batch.pop("schedule_stats", None)
             plan = batch.get("plan") if calibrating else None
@@ -87,12 +134,16 @@ def train(cfg, pipe_cfg: PipelineConfig, train_cfg: TrainConfig,
                 m["wall_s"] = time.time() - t0
                 if stats:
                     m.update({f"sched_{k}": v for k, v in stats.items()})
+                if pool_events:
+                    m["pool_events"] = ";".join(pool_events)
                 history.append(m)
                 print(f"step {step:5d} loss {m['loss']:.4f} "
                       f"gnorm {m['grad_norm']:.3f} ({m['wall_s']:.1f}s)")
             if train_cfg.ckpt_every and step and \
                     step % train_cfg.ckpt_every == 0:
-                ckpt.save(train_cfg.ckpt_dir, step, params, opt_state)
+                ckpt.save(train_cfg.ckpt_dir, step, params, opt_state,
+                          calibrator=None if session is None
+                          else session.calibrator)
     finally:
         gen.close()      # stops the plan-prefetch worker, if any
     return {"params": params, "opt_state": opt_state, "history": history}

@@ -8,7 +8,9 @@ models, and tolerances, every registered policy must yield plans that
   * respect the static send/buffer capacities,
   * account loads consistently (work is conserved under speed scaling),
   * plan deterministically (same inputs -> bit-identical arrays),
-  * never balance *worse* than identity, and
+  * never balance *worse* than identity,
+  * under elastic membership subsets (``exclude``), never place a task
+    on an excluded server while still covering every live block, and
   * fail infeasible builds with ``PlanCapacityError`` — never a bare
     assert or a silent overflow.
 
@@ -332,6 +334,54 @@ def test_infeasible_raises_capacity_error(s):
     assert all(doc_of[g] >= 0 for g in served)
     assert sum(1 for g in range(len(doc_of)) if doc_of[g] >= 0) \
         == len(served)
+
+
+@property_case
+def test_membership_subset_invariant(s):
+    """Elastic membership (DESIGN.md §9): with a random non-empty
+    proper subset of servers excluded (drained/dead pool members),
+    every policy still serves each live block exactly once, never on an
+    excluded server, leaves excluded loads at zero, and replans
+    bit-identically — the invariant the recovery/epoch machinery
+    depends on.  Builds that genuinely cannot fit the survivors' caps
+    must fail with PlanCapacityError, never silently truncate."""
+    cfg, segs, cm, tol = gen_scenario(s)
+    if cfg.n_servers == 1:
+        return                               # no proper subset exists
+    d = cfg.n_servers
+    mask = s.int_(1, 2 ** d - 2)             # >=1 excluded, >=1 survivor
+    exclude = tuple(i for i in range(d) if mask >> i & 1)
+    policy = s.choice(POLICIES)
+    try:
+        res = run_policy_excl(policy, cfg, segs, cm, tol, exclude)
+    except PlanCapacityError as e:
+        assert e.capacity in ("CQ", "CKV", "NKV")
+        return
+    _docs, doc_of, _bi = layout_from_segments(segs, cfg.blk, d)
+    served, dupes = plan_served_blocks(cfg, res.plan)
+    assert not dupes, f"{policy}: blocks served twice: {dupes}"
+    for g in range(d * cfg.nb):
+        if doc_of[g] >= 0:
+            assert g in served, f"{policy}: live block {g} dropped " \
+                f"under exclude={exclude}"
+            assert served[g] not in exclude, \
+                f"{policy}: block {g} served on excluded " \
+                f"{served[g]} (exclude={exclude})"
+        else:
+            assert g not in served
+    for e in exclude:
+        assert res.loads[e] == 0.0, (policy, exclude, res.loads)
+    again = run_policy_excl(policy, cfg, segs, cm, tol, exclude)
+    np.testing.assert_array_equal(res.assign, again.assign)
+    for key in res.plan.keys():
+        np.testing.assert_array_equal(np.asarray(res.plan[key]),
+                                      np.asarray(again.plan[key]),
+                                      err_msg=f"{policy}:{key}")
+
+
+def run_policy_excl(policy, cfg, segs, cost_model, tolerance, exclude):
+    return get_planner(policy)(cfg, segs, comm=None, tolerance=tolerance,
+                               cost_model=cost_model, exclude=exclude)
 
 
 @property_case
