@@ -1,0 +1,226 @@
+"""Multi-tenant fabric: one shared elastic pool vs a static partition.
+
+The acceptance experiment for DESIGN.md §10.  Two systems serve the
+same tenants — packed CAD training steps plus a saturating backlog of
+inference prefill/decode CA tasks — on four attention servers:
+
+  * **partitioned**: servers {0, 1} train (slots {2, 3} drained, so the
+    planner never places primary tasks there) and servers {2, 3} serve
+    (``AdmissionPolicy.allowed``) — a dedicated static split expressed
+    in the same admission machinery;
+  * **shared**: the full pool trains (load per server halves) and serve
+    traffic backfills every server's idle capacity up to the common
+    step cadence.
+
+Both run at the *same* cadence ``interval = 2 * T2`` (T2 = the
+partitioned system's per-server train CA time), so training step time
+is equal by construction; the shared pool converts the partition's
+stranded capacity into serve throughput.  Modeled capacity ratio:
+partitioned offers ``2 * interval`` idle seconds per step, shared
+``4 * interval - W`` with train work ``W = 2 * T2`` — ratio 1.5.
+
+A second phase kills one server mid-decode: both tenants must still
+complete, recovery runs through the elastic runtime's path for train
+and same-round re-admission for serve, the whole run replays
+deterministically, and per-request serve digests are placement-
+independent across all three systems (statelessness, made visible).
+
+Emits ``fabric_mix,<us>,...`` CSV rows and returns the dict wired into
+``benchmarks/run.py --json`` under ``"fabric"``.
+"""
+import hashlib
+
+import numpy as np
+
+from repro.cad import CADConfig, CADSession
+from repro.core.cost_model import CommModel
+from repro.fabric import AdmissionPolicy, FabricExecutor, ServeWorkload
+from repro.runtime import ElasticExecutor, FaultSchedule, ServerPool
+
+BLK = 16
+D, NB = 4, 8
+
+
+def _digest(x) -> str:
+    return hashlib.sha1(np.ascontiguousarray(np.asarray(x))
+                        .tobytes()).hexdigest()
+
+
+def _make_segs(d, nb, seed=0, max_doc_blocks=4):
+    rng = np.random.default_rng(seed)
+    segs = np.zeros((d, nb * BLK), np.int32)
+    sid = 1
+    for r in range(d):
+        t = 0
+        while t < nb:
+            dbl = int(rng.integers(1, min(max_doc_blocks, nb - t) + 1))
+            segs[r, t * BLK:(t + dbl) * BLK] = sid
+            sid += 1
+            t += dbl
+    return segs
+
+
+def _session(drained=()):
+    cfg = CADConfig(n_servers=D, blk=BLK, nb=NB, cq=2 * NB, ckv=4 * NB,
+                    nkv=4 * NB)
+    sess = CADSession(cfg=cfg, comm=CommModel(2, 8, 2), tolerance=0.05,
+                      jmax=NB, prefetch=0)
+    pool = ServerPool(D)
+    for s in drained:
+        pool.drain(s)
+    return sess.with_pool(pool)
+
+
+def _workload(arrivals, seed=7):
+    return ServeWorkload(arrivals, n_heads=2, head_dim=8, blk=BLK,
+                         slots=4, seed=seed)
+
+
+def _train_interval() -> float:
+    """``2 * T2``: twice the partitioned system's max per-server
+    predicted train CA time — the common cadence of both systems (the
+    extra T2 stands in for the step's linear non-CA work)."""
+    ex = FabricExecutor(_session(drained=(2, 3)), _workload([(0, 2, 1)]))
+    segs = _make_segs(D, NB)
+    pos = np.broadcast_to(np.arange(segs.shape[1]), segs.shape).copy()
+    q, k, v, pos = ex.synth_inputs(segs, pos, seed=0)
+    st = ex.begin_step(0, q, k, v, pos, segs)
+    return 2.0 * max(st.preds.values())
+
+
+def _run(arrivals, steps, *, drained=(), allowed=None, faults=None,
+         interval, seed=0, max_steps=None):
+    """One mixed run; train batches repeat ``_make_segs(step)`` per
+    step and continue past ``steps`` (up to ``max_steps``) until the
+    serve workload drains."""
+    wl = _workload(arrivals)
+    ex = FabricExecutor(
+        _session(drained=drained), wl,
+        faults=FaultSchedule.parse(faults) if faults else None,
+        policy=AdmissionPolicy(allowed=allowed))
+    train_digests, reports = [], []
+    step = 0
+    while step < steps or (max_steps and step < max_steps
+                           and not wl.all_done()):
+        segs = _make_segs(D, NB, seed=step)
+        pos = np.broadcast_to(np.arange(segs.shape[1]), segs.shape).copy()
+        q, k, v, pos = ex.synth_inputs(segs, pos, seed=seed + step)
+        out, rep = ex.run_mixed_step(step, q, k, v, pos, segs,
+                                     interval=interval)
+        train_digests.append(_digest(out))
+        reports.append(rep)
+        step += 1
+    return wl, train_digests, reports
+
+
+def _train_only(steps, *, drained=(), seed=0):
+    """The dedicated-pool baseline: same pool, no serve tenant."""
+    ex = ElasticExecutor(_session(drained=drained))
+    digests = []
+    for step in range(steps):
+        segs = _make_segs(D, NB, seed=step)
+        pos = np.broadcast_to(np.arange(segs.shape[1]), segs.shape).copy()
+        q, k, v, pos = ex.synth_inputs(segs, pos, seed=seed + step)
+        out, _rep = ex.run_step(step, q, k, v, pos, segs)
+        digests.append(_digest(out))
+    return digests
+
+
+def _prefixes(a, b) -> bool:
+    """Per rid, one digest list must be a prefix of the other — the
+    task sequence is fixed, only how far each system got differs."""
+    for rid in a:
+        da, db = a[rid], b[rid]
+        n = min(len(da), len(db))
+        if da[:n] != db[:n]:
+            return False
+    return True
+
+
+def run(steps=10, n_reqs=160, prompt_blocks=8, decodes=2, kill_step=2,
+        victim=1):
+    interval = _train_interval()
+    # ---- phase 1: saturating backlog, equal cadence ------------------
+    arrivals = [(0, prompt_blocks * BLK, decodes)] * n_reqs
+    shared, sh_digests, sh_reps = _run(arrivals, steps,
+                                       interval=interval)
+    part, pt_digests, pt_reps = _run(arrivals, steps,
+                                     drained=(2, 3), allowed=(2, 3),
+                                     interval=interval)
+    ratio = shared.tokens_executed / max(part.tokens_executed, 1)
+    # equal training cadence: neither system's train step exceeds it
+    train_sh = max(r.train.step_seconds for r in sh_reps)
+    train_pt = max(r.train.step_seconds for r in pt_reps)
+    dedicated = _train_only(steps)
+    placement_independent = _prefixes(shared.digest_map(),
+                                      part.digest_map())
+
+    # ---- phase 2: kill one server mid-decode -------------------------
+    karr = [(0, 4 * BLK, 3)] * 6
+    ksteps = 6
+    kw = dict(interval=interval, faults=f"kill:{victim}@{kill_step}",
+              max_steps=40)
+    k1, kd1, kr1 = _run(karr, ksteps, **kw)
+    k2, kd2, kr2 = _run(karr, ksteps, **kw)
+    base, bd, _br = _run(karr, ksteps, interval=interval, max_steps=40)
+    kill_complete = k1.all_done() and len(kr1) >= ksteps
+    kill_determ = kd1 == kd2 and k1.digest_map() == k2.digest_map() \
+        and k1.completion() == k2.completion() \
+        and [r.step_seconds for r in kr1] \
+        == [r.step_seconds for r in kr2]
+    kill_placement = _prefixes(k1.digest_map(), base.digest_map())
+
+    return {
+        "interval_us": interval * 1e6,
+        "steps": steps,
+        "serve_tokens_shared": shared.tokens_executed,
+        "serve_tokens_partitioned": part.tokens_executed,
+        "throughput_ratio": float(ratio),
+        "train_step_shared_us": train_sh * 1e6,
+        "train_step_partitioned_us": train_pt * 1e6,
+        "equal_train_cadence": bool(train_sh <= interval * (1 + 1e-9)
+                                    and train_pt <= interval
+                                    * (1 + 1e-9)),
+        "train_bit_identical": sh_digests == dedicated,
+        "serve_placement_independent": bool(placement_independent),
+        "kill_step": kill_step,
+        "victim": victim,
+        "kill_lost_serve": sum(r.lost_serve for r in kr1),
+        "kill_readmitted": sum(r.readmitted for r in kr1),
+        "kill_both_tenants_complete": bool(kill_complete),
+        "kill_deterministic_replay": bool(kill_determ),
+        "kill_placement_independent": bool(kill_placement),
+        "pool_epoch_final": kr1[-1].pool_epoch,
+    }
+
+
+def main(fast=False):
+    kw = dict(steps=6, n_reqs=96) if fast else {}
+    r = run(**kw)
+    ok = r["throughput_ratio"] >= 1.2 and r["equal_train_cadence"] \
+        and r["train_bit_identical"] \
+        and r["serve_placement_independent"] \
+        and r["kill_both_tenants_complete"] \
+        and r["kill_deterministic_replay"] \
+        and r["kill_placement_independent"]
+    print(f"fabric_mix,{r['interval_us']:.2f},phase=throughput;"
+          f"shared_tok={r['serve_tokens_shared']};"
+          f"partitioned_tok={r['serve_tokens_partitioned']};"
+          f"ratio={r['throughput_ratio']:.2f}")
+    print(f"fabric_mix,{r['train_step_shared_us']:.2f},phase=train;"
+          f"partitioned_us={r['train_step_partitioned_us']:.2f};"
+          f"equal_cadence={r['equal_train_cadence']};"
+          f"bit_identical={r['train_bit_identical']}")
+    print(f"fabric_mix,0.0,phase=kill;"
+          f"lost={r['kill_lost_serve']};"
+          f"readmitted={r['kill_readmitted']};"
+          f"complete={r['kill_both_tenants_complete']};"
+          f"deterministic={r['kill_deterministic_replay']}")
+    print(f"fabric_mix,0.0,phase=verdict;ok={ok}")
+    if not ok:
+        raise RuntimeError(f"fabric mix acceptance failed: {r}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -21,16 +21,30 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py format).
                                     to a fault-free (N-1)-pool run,
                                     deterministic seeded replay,
                                     steady-state within 10% of baseline
+  fabric_mix            DESIGN §10 — multi-tenant fabric: shared pool vs
+                                    static partition at equal training
+                                    cadence; serve throughput ratio,
+                                    train bit-identity, kill-mid-decode
+                                    recovery of both tenants
 
 Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--json PATH]
+                                             [--gate BASELINE.json]
 
 ``--json PATH`` additionally writes the machine-readable results the CI
 perf-trajectory artifact is built from (kernel fwd/bwd us, packing plan
 imbalance, prefetch overlap) plus environment metadata.
+
+``--gate BASELINE.json`` compares this run's results against a
+committed baseline snapshot (BENCH_6.json): deterministic modeled
+ratios must stay within 15% of the baseline, boolean acceptance checks
+must not flip false, and (with ``--gate-times``) wall-clock metrics
+must not regress past a generous noise allowance.  A gate failure
+exits non-zero.
 """
 import argparse
 import json
 import platform
+import re
 import sys
 import time
 import traceback
@@ -113,16 +127,96 @@ def prefetch_microbench(fast=False):
             "sync_over_async": overlap}
 
 
+# --------------------------------------------------------------- gate
+# (path regex, direction, relative threshold, needs --gate-times).
+# "lower" = metric must not rise past base*(1+thr); "higher" = must not
+# fall below base*(1-thr).  Deterministic modeled ratios gate at 15%;
+# wall-clock-derived ratios get generous noise allowances; raw *_us
+# timings only gate under --gate-times (CI runners are too noisy).
+GATE_RULES = (
+    (r"^fabric\.throughput_ratio$", "higher", 0.15, False),
+    (r"^elastic\.steady_ratio$", "lower", 0.15, False),
+    (r"^straggler\.(calibrated|declared)_max_over_mean$",
+     "lower", 0.15, False),
+    (r"^plan_imbalance\.\d+\.(attn|mem)_divergence_wlb$",
+     "lower", 0.15, False),
+    (r"^prefetch\.sync_over_async$", "higher", 0.40, False),
+    (r"^serve\.prefill_speedup_vs_loop$", "higher", 0.50, False),
+    (r"_us(_per_step|_per_call)?$", "lower", 0.50, True),
+)
+
+
+def _flatten(obj, prefix=""):
+    """{path: scalar} over nested dicts/lists (numbers and bools)."""
+    out = {}
+    if isinstance(obj, dict):
+        items = obj.items()
+    elif isinstance(obj, (list, tuple)):
+        items = enumerate(obj)
+    else:
+        if isinstance(obj, (bool, int, float)) and not (
+                isinstance(obj, float) and np.isnan(obj)):
+            out[prefix] = obj
+        return out
+    for k, v in items:
+        p = f"{prefix}.{k}" if prefix else str(k)
+        out.update(_flatten(v, p))
+    return out
+
+
+def check_gate(baseline_results, results, *, gate_times=False):
+    """Regression failures of ``results`` vs the committed baseline.
+    Returns a list of human-readable failure strings (empty = pass)."""
+    base = _flatten(baseline_results)
+    cur = _flatten(results)
+    fails = []
+    for path, bval in sorted(base.items()):
+        # benchmarks absent from this run (--only, bench error -> its
+        # own failure) are not gate regressions
+        if path.split(".")[0] not in results:
+            continue
+        if isinstance(bval, bool):
+            if bval and cur.get(path) is False:
+                fails.append(f"{path}: acceptance flipped true -> false")
+            continue
+        for pat, direction, thr, needs_times in GATE_RULES:
+            if not re.search(pat, path):
+                continue
+            if needs_times and not gate_times:
+                break
+            cval = cur.get(path)
+            if cval is None:
+                fails.append(f"{path}: metric disappeared "
+                             f"(baseline {bval:.4g})")
+            elif direction == "lower" and cval > bval * (1 + thr) \
+                    and cval - bval > 1e-12:
+                fails.append(f"{path}: {bval:.4g} -> {cval:.4g} "
+                             f"(+{(cval / bval - 1) * 100:.0f}%, "
+                             f"limit +{thr * 100:.0f}%)")
+            elif direction == "higher" and cval < bval * (1 - thr):
+                fails.append(f"{path}: {bval:.4g} -> {cval:.4g} "
+                             f"(-{(1 - cval / bval) * 100:.0f}%, "
+                             f"limit -{thr * 100:.0f}%)")
+            break                      # first matching rule wins
+    return fails
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable results (BENCH_ci.json)")
+    ap.add_argument("--gate", default=None, metavar="BASELINE",
+                    help="fail if results regress vs this baseline "
+                         "snapshot (BENCH_6.json)")
+    ap.add_argument("--gate-times", action="store_true",
+                    help="also gate wall-clock *_us metrics (noisy; "
+                         "off by default)")
     args = ap.parse_args()
 
     from benchmarks import (cp_overheads, dedicated_pool, e2e_sim,
-                            elastic_recovery, imbalance,
+                            elastic_recovery, fabric_mix, imbalance,
                             kernel_throughput, overlap, pp_bubbles,
                             serve_throughput, straggler_elim,
                             table1_scaling, tolerance_sweep)
@@ -142,12 +236,13 @@ def main() -> None:
         "dedicated": dedicated_pool.main,
         "serve": lambda: serve_throughput.main(fast=args.fast),
         "elastic": lambda: elastic_recovery.main(fast=args.fast),
+        "fabric": lambda: fabric_mix.main(fast=args.fast),
     }
     # the machine-readable subset: kernel fwd/bwd, plan imbalance,
     # prefetch overlap, straggler elimination, serve throughput,
-    # elastic recovery — the CI perf trajectory
+    # elastic recovery, fabric mix — the CI perf trajectory
     json_keys = ("fig5", "kernel_bwd", "fig4", "prefetch", "straggler",
-                 "serve", "elastic")
+                 "serve", "elastic", "fabric")
     results, failed = {}, 0
     for name, fn in benches.items():
         if args.only and name != args.only:
@@ -177,6 +272,16 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, default=float)
         print(f"json_results,{len(results)},path={args.json}")
+    if args.gate:
+        with open(args.gate) as f:
+            baseline = json.load(f)
+        fails = check_gate(baseline.get("results", baseline), results,
+                           gate_times=args.gate_times)
+        for msg in fails:
+            print(f"gate_regression,nan,{msg}")
+        print(f"gate,{len(fails)},baseline={args.gate};"
+              f"checked={'times+ratios' if args.gate_times else 'ratios'}")
+        failed += len(fails)
     sys.exit(1 if failed else 0)
 
 

@@ -15,9 +15,8 @@ This package is the single entry point for CAD:
   GridCalibrator      runtime (q_len, kv_len) latency-grid profiler with
                       per-server speed estimation (DESIGN.md §3)
 
-Legacy entry points (``make_cad_context``, raw dict plans through
-``CADContext``) keep working for one release; new code should construct
-a :class:`CADSession` instead.
+All CAD use goes through :class:`CADSession`; the PR-1 era shims
+(``make_cad_context``, dict-plan ``batches()``) have been removed.
 """
 from repro.cad.planner import (PlanResult, Planner, available_policies,
                                get_planner, register_planner)

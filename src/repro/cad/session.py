@@ -31,8 +31,7 @@ Construction::
       params, opt_state, metrics = step(params, opt_state, batch)
       session.observe_probe(batch["plan"])    # feed measured timings
 
-Unlike the deprecated ``make_cad_context``, ``for_pipeline`` never
-mutates the pipeline config.
+``for_pipeline`` never mutates the pipeline config.
 """
 from __future__ import annotations
 
@@ -155,6 +154,32 @@ class CADSession:
     def _snapshot(self) -> Optional[CalibrationSnapshot]:
         return None if self.calibrator is None \
             else self.calibrator.snapshot()
+
+    def admission_view(self) \
+            -> Tuple[CalibrationSnapshot, Optional[Any]]:
+        """One atomic (calibration snapshot, pool view) pair — the
+        pricing basis for one fabric admission round (DESIGN.md §10:
+        every round consumes exactly one snapshot and one
+        ``pool_epoch``-stamped membership view, the same discipline
+        ``plan()`` follows).  Without a calibrator the snapshot wraps
+        the analytic model and declared speeds at version -1; without
+        a pool the view is None."""
+        snap = self._snapshot()
+        if snap is None:
+            comm = self.comm
+            cm = CostModel.analytic(comm.n_heads if comm else 1,
+                                    comm.head_dim if comm else 8)
+            snap = CalibrationSnapshot(
+                version=-1, cost_model=cm,
+                speeds=tuple(float(s) for s in self.cfg.speeds()))
+        return snap, self._pool_view()
+
+    def snapshot_provider(self):
+        """A ``() -> CalibrationSnapshot`` callable for the serve
+        scheduler's ``SchedulerConfig.snapshot_provider``: admission
+        then prices each round from the same calibrated snapshot the
+        planner plans from."""
+        return lambda: self.admission_view()[0]
 
     def _planner_kwargs(self, snap: Optional[CalibrationSnapshot]) \
             -> Dict[str, Any]:
@@ -348,15 +373,16 @@ class CADSession:
         finally:
             pf.close()
 
-    # ------------------------------------------------------------- legacy
+    # ---------------------------------------------------------- from parts
     @classmethod
     def from_legacy(cls, cad_cfg: CADConfig, *, kernel: str = "xla",
                     pingpong: bool = False, tolerance: float = 0.1,
                     plan_policy: str = "balanced",
                     comm: Optional[CommModel] = None,
                     jmax: int = 0) -> "CADSession":
-        """Wrap pre-session state (a bare CADConfig + loose knobs) — used
-        by the deprecated ``make_cad_context``/dict-plan pipeline path."""
+        """Wrap a bare CADConfig + loose knobs into a session — for
+        callers that size the pool geometry themselves rather than
+        deriving it from a pipeline config."""
         return cls(cfg=cad_cfg, kernel=kernel, pingpong=pingpong,
                    tolerance=tolerance, plan_policy=plan_policy, comm=comm,
                    jmax=jmax or max(1, cad_cfg.nkv), prefetch=0)

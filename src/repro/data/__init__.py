@@ -1,3 +1,3 @@
 from repro.data.packing import BLOCK, PackedChunk, pack_documents
-from repro.data.pipeline import PipelineConfig, batches
+from repro.data.pipeline import PipelineConfig, raw_batches
 from repro.data.distributions import sample_lengths

@@ -4,19 +4,14 @@ in-document next-token shift).
 
 Plan attachment is the :class:`repro.cad.CADSession`'s job
 (``session.attach_plans(raw_batches(cfg))`` — asynchronous, prefetched).
-The legacy ``batches(cfg, ...)`` entry point with ``cfg.cad`` set keeps
-working for one release via a synchronous session shim.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 
-from repro.core.cost_model import CommModel
-from repro.core.plan import CADConfig
 from repro.data.distributions import sample_lengths
 from repro.data.packing import pack_documents
 
@@ -31,11 +26,6 @@ class PipelineConfig:
     vocab_size: int = 32000
     seed: int = 0
     strategy: str = "fixed"            # fixed | variable (WLB baseline)
-    # -- deprecated CAD side channel (use CADSession instead) ----------
-    cad: Optional[CADConfig] = None    # attach plans when set (legacy)
-    tolerance: float = 0.1             # legacy; owned by CADSession
-    pingpong: bool = False             # legacy; owned by CADSession
-    plan_policy: str = "balanced"      # legacy; owned by CADSession
 
 
 def _labels(tokens, seg):
@@ -72,29 +62,3 @@ def raw_batches(cfg: PipelineConfig) -> Iterator[dict]:
             "segment_ids": segs,
             "positions": poss,
         }
-
-
-def batches(cfg: PipelineConfig, n_heads: int, head_dim: int,
-            n_kv_heads: int) -> Iterator[dict]:
-    """Deprecated: ``raw_batches`` + a legacy-field CAD session.
-
-    Kept so ``make_cad_context``-era callers run unchanged; new code
-    should build a :class:`repro.cad.CADSession` and call
-    ``session.attach_plans(raw_batches(cfg))``.
-
-    (A plain function returning an iterator, not a generator, so the
-    deprecation warning fires at the call site rather than at the first
-    ``next()``.)"""
-    if cfg.cad is None:
-        return raw_batches(cfg)
-    warnings.warn(
-        "batches() with PipelineConfig.cad is deprecated; use "
-        "CADSession.attach_plans(raw_batches(cfg))", DeprecationWarning,
-        stacklevel=2)
-    from repro.cad.session import CADSession
-    session = CADSession.from_legacy(
-        cfg.cad, pingpong=cfg.pingpong, tolerance=cfg.tolerance,
-        plan_policy=cfg.plan_policy,
-        comm=CommModel(n_heads=n_heads, head_dim=head_dim,
-                       n_kv_heads=n_kv_heads))
-    return session.attach_plans(raw_batches(cfg), prefetch=0)

@@ -79,6 +79,33 @@ class StepReport:
         return " | ".join(bits)
 
 
+@dataclasses.dataclass
+class StepState:
+    """Everything ``begin_step`` established before execution: the
+    membership events applied, the plan and the cost view it was priced
+    with, and the per-server task composition/predictions.  The fabric
+    executor reads this between planning and execution to admit serve
+    traffic into the predicted idle capacity (and may zero
+    ``speculate_pct`` to reclaim speculation-eligible capacity —
+    mutating the state, never ``self``)."""
+    step: int
+    q: Any
+    k: Any
+    v: Any
+    pos: Any
+    segs: np.ndarray
+    events: list
+    plan: Any
+    stats: Dict[str, float]
+    view: Any                          # PoolView for this step
+    injected: set                      # servers killed mid-step (sched.)
+    tasks_by: Dict[int, list]          # server -> [(q_tok, kv_tok), ...]
+    preds: Dict[int, float]            # predicted primary seconds
+    cm: CostModel
+    speeds: Any
+    speculate_pct: float
+
+
 class ElasticExecutor:
     """Drives elastic steps for one :class:`CADSession` with an
     attached :class:`ServerPool` (``session.with_pool(pool)``).
@@ -87,7 +114,13 @@ class ElasticExecutor:
     whose serve time exceeds ``quantile(predicted, pct) * slack`` is
     re-executed on the least-loaded survivors when the backup is
     modeled to finish earlier.  ``0`` disables speculation (failures
-    are still recovered)."""
+    are still recovered).
+
+    ``run_step`` is ``begin_step`` (membership events, planning, cost
+    predictions) followed by ``finish_step`` (execution, speculation,
+    recovery, merge, calibration feedback) — split so the multi-tenant
+    :class:`repro.fabric.FabricExecutor` can admit serve traffic
+    against the predicted per-server loads before execution starts."""
 
     def __init__(self, session, *, faults: Optional[FaultSchedule] = None,
                  speculate_pct: float = 0.0,
@@ -145,6 +178,13 @@ class ElasticExecutor:
         [D*Bl, S] (or [D, T]) layout.  Returns ``(out, StepReport)``;
         never raises on an injected fault — lost tasks are recovered
         (only an exhausted pool aborts)."""
+        return self.finish_step(self.begin_step(step, q, k, v, pos,
+                                                segment_ids))
+
+    def begin_step(self, step: int, q, k, v, pos,
+                   segment_ids: np.ndarray) -> StepState:
+        """Membership events + planning + cost predictions — everything
+        known *before* any server executes."""
         cfg = self.session.cfg
 
         # 1. scheduled membership: rejoins/drains land before planning
@@ -155,21 +195,37 @@ class ElasticExecutor:
         plan, stats = self.session.plan(segs)
         view = self.pool.view()
 
-        # 2. primary execution, one fused task batch per active server;
-        # injected kills lose their tasks up front, a real serve raising
-        # is demoted to a failure the same way (recover, then remove)
         injected = {e.server for e in self.faults.failures_at(step)} \
             & set(view.active)
-        failures = set(injected)
-
-        inputs, plans_r = build_server_inputs(self._cad, plan, q, k, v,
-                                              pos)
         tasks_by = {s: [] for s in range(cfg.n_servers)}
         for s, _slot, qt, kvt in iter_plan_tasks(cfg, plan):
             tasks_by[s].append((qt, kvt))
         cm, speeds = self._cost_view()
         preds = {s: self._predict_server(cm, speeds, tasks_by[s], s)
                  for s in view.active}
+        return StepState(step=step, q=q, k=k, v=v, pos=pos, segs=segs,
+                         events=events, plan=plan, stats=stats,
+                         view=view, injected=injected, tasks_by=tasks_by,
+                         preds=preds, cm=cm, speeds=speeds,
+                         speculate_pct=self.speculate_pct)
+
+    def finish_step(self, st: StepState):
+        """Execute, speculate, recover and merge the step prepared by
+        ``begin_step``.  Returns ``(out, StepReport)``."""
+        cfg = self.session.cfg
+        step, q, k, v, pos = st.step, st.q, st.k, st.v, st.pos
+        events, plan, stats = st.events, st.plan, st.stats
+        view, injected = st.view, st.injected
+        tasks_by, preds = st.tasks_by, st.preds
+        cm, speeds = st.cm, st.speeds
+        segs = st.segs
+
+        # 2. primary execution, one fused task batch per active server;
+        # injected kills lose their tasks up front, a real serve raising
+        # is demoted to a failure the same way (recover, then remove)
+        failures = set(injected)
+        inputs, plans_r = build_server_inputs(self._cad, plan, q, k, v,
+                                              pos)
 
         outs: Dict[int, Any] = {}
         seconds: Dict[int, float] = {}
@@ -201,11 +257,13 @@ class ElasticExecutor:
                 f"step {step}: every active server failed {failures}")
 
         # 3. straggler detection against the cost-model deadline
+        # (st.speculate_pct, not self: the fabric zeroes it per-step
+        # when serve traffic claims the speculation capacity)
         deadline = 0.0
         speculated: list = []
-        if self.speculate_pct > 0 and len(healthy) > 1:
+        if st.speculate_pct > 0 and len(healthy) > 1:
             deadline = float(np.quantile(
-                [preds[s] for s in view.active], self.speculate_pct)) \
+                [preds[s] for s in view.active], st.speculate_pct)) \
                 * self.speculate_slack
             for s in healthy:
                 if seconds[s] <= deadline or not tasks_by[s]:

@@ -28,15 +28,15 @@ chunks), since their mixers are sequential (ssd/rglru) or batch-global
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
-from repro.serve.scheduler import (ContinuousScheduler, Request,
-                                   SchedulerConfig)
+from repro.serve.scheduler import (DECODE, DONE, ContinuousScheduler,
+                                   Request, SchedulerConfig)
 from repro.train.step import make_serve_chunk_step, make_serve_step
 
 
@@ -51,6 +51,10 @@ class ServeConfig:
     admission: str = "fcfs"          # "fcfs" | "cost"
     step_cost_budget: float = 0.0    # predicted CA seconds per decode step
     eos_id: Optional[int] = None
+    # live admission pricing: a () -> CalibrationSnapshot callable (e.g.
+    # CADSession.snapshot_provider()); when set, cost admission re-prices
+    # every round from the calibrator instead of the static analytic model
+    snapshot_provider: Optional[Callable] = None
 
 
 class Engine:
@@ -250,54 +254,94 @@ class Engine:
         return jnp.stack(out, axis=1)
 
     # --------------------------------------------------- continuous batching
-    def serve(self, prompts: List[np.ndarray],
-              max_new_tokens: Optional[int] = None) -> Dict[int, np.ndarray]:
-        """Continuous batching: stream an arbitrary number of ragged
-        requests through ``batch_size`` cache slots.  Returns
-        {rid: generated tokens} with rid = submission index."""
+    def make_scheduler(self, *, snapshot_provider=None) \
+            -> ContinuousScheduler:
+        """A ContinuousScheduler configured from this engine's
+        ServeConfig — the state machine ``serve_round`` steps.  With a
+        ``snapshot_provider`` (argument or ``ServeConfig`` field), cost
+        admission prices from one live calibration snapshot per round;
+        otherwise it falls back to the static analytic model."""
         if not self.serve_layout:
             raise ValueError("continuous batching needs the serving cache "
                              "layout (no cross-attention/encoder archs)")
         scfg = self.scfg
-        sched = ContinuousScheduler(SchedulerConfig(
+        provider = snapshot_provider or scfg.snapshot_provider
+        need_cost = scfg.admission == "cost" or scfg.step_cost_budget
+        return ContinuousScheduler(SchedulerConfig(
             n_slots=self.batch_size, max_seq=scfg.max_seq,
             chunk_tokens=scfg.chunk_tokens,
             token_budget=scfg.token_budget,
             admission=scfg.admission,
             cost_model=self._cost_model()
-            if (scfg.admission == "cost" or scfg.step_cost_budget) else None,
+            if (need_cost and provider is None) else None,
+            snapshot_provider=provider if need_cost else None,
             step_cost_budget=scfg.step_cost_budget,
             eos_id=scfg.eos_id))
-        mn = scfg.max_new_tokens if max_new_tokens is None \
+
+    def serve_round(self, sched: ContinuousScheduler, *,
+                    on_token=None) -> bool:
+        """One continuous-batching round: admit -> (prefill chunk |
+        evict + decode step).  Returns False when the scheduler had no
+        work.  ``on_token(rid, token, done)`` streams every newly
+        sampled token (the launch/serve.py daemon's hook).  ``serve``
+        is a loop over exactly these rounds, so daemon-driven serving
+        and batch serving share one code path (and one trace order)."""
+        if not sched.has_work():
+            return False
+        newly = sched.admit()
+        if newly:
+            mask = np.zeros(self.batch_size, bool)
+            for r in newly:
+                mask[r.slot] = True
+            self.cache = self._reset(self.cache, jnp.asarray(mask))
+        fused = self.fused_ok and self.scfg.prefill == "fused"
+        if sched.has_prefill():
+            chunk = sched.next_prefill_chunk(fused=fused)
+            lg = self._chunk_call(chunk.tokens, chunk.pos,
+                                  chunk.block_req, chunk.kv_len_next)
+            if chunk.last_rows:
+                reqs = {slot: sched.active[slot]
+                        for slot, _row in chunk.last_rows}
+                nxt = np.asarray(jnp.argmax(lg, axis=-1))
+                sched.commit_prefill(
+                    chunk, {slot: nxt[row]
+                            for slot, row in chunk.last_rows})
+                if on_token is not None:
+                    for slot, req in sorted(reqs.items()):
+                        if req.out_tokens:
+                            on_token(req.rid, req.out_tokens[-1],
+                                     req.state == DONE)
+                        elif req.state == DONE:     # prefill-only
+                            on_token(req.rid, None, True)
+            return True
+        sched.evict_for_budget()
+        batch = sched.decode_batch()
+        if batch is None:
+            return True
+        tokens, pos, block_req, kv_next = batch
+        decoding = {slot: r for slot, r in sched.active.items()
+                    if r.state == DECODE}
+        lg = self._chunk_call(tokens, pos, block_req, kv_next)
+        sched.commit_decode(np.asarray(jnp.argmax(lg, axis=-1)))
+        if on_token is not None:
+            for _slot, req in sorted(decoding.items()):
+                on_token(req.rid, req.out_tokens[-1],
+                         req.state == DONE)
+        return True
+
+    def serve(self, prompts: List[np.ndarray],
+              max_new_tokens: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """Continuous batching: stream an arbitrary number of ragged
+        requests through ``batch_size`` cache slots.  Returns
+        {rid: generated tokens} with rid = submission index."""
+        sched = self.make_scheduler()
+        mn = self.scfg.max_new_tokens if max_new_tokens is None \
             else max_new_tokens
         for i, pr in enumerate(prompts):
             sched.submit(Request(rid=i, prompt=np.asarray(pr, np.int32),
                                  max_new_tokens=mn))
-        fused = self.fused_ok and scfg.prefill == "fused"
-        while sched.has_work():
-            newly = sched.admit()
-            if newly:
-                mask = np.zeros(self.batch_size, bool)
-                for r in newly:
-                    mask[r.slot] = True
-                self.cache = self._reset(self.cache, jnp.asarray(mask))
-            if sched.has_prefill():
-                chunk = sched.next_prefill_chunk(fused=fused)
-                lg = self._chunk_call(chunk.tokens, chunk.pos,
-                                      chunk.block_req, chunk.kv_len_next)
-                if chunk.last_rows:
-                    nxt = np.asarray(jnp.argmax(lg, axis=-1))
-                    sched.commit_prefill(
-                        chunk, {slot: nxt[row]
-                                for slot, row in chunk.last_rows})
-                continue
-            sched.evict_for_budget()
-            batch = sched.decode_batch()
-            if batch is None:
-                continue
-            tokens, pos, block_req, kv_next = batch
-            lg = self._chunk_call(tokens, pos, block_req, kv_next)
-            sched.commit_decode(np.asarray(jnp.argmax(lg, axis=-1)))
+        while self.serve_round(sched):
+            pass
         out = {r.rid: np.asarray(r.out_tokens, np.int32)
                for r in sched.done}
         self.last_trace = sched.trace

@@ -42,11 +42,11 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.cost_model import CostModel
+from repro.core.cost_model import CalibrationSnapshot, CostModel
 from repro.data.packing import BLOCK
 
 WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
@@ -95,6 +95,11 @@ class SchedulerConfig:
     token_budget: Optional[int] = None   # cap on Σ projected kv tokens
     admission: str = "fcfs"              # "fcfs" | "cost"
     cost_model: Optional[CostModel] = None
+    # live pricing: pulled once per admission round, so admission prices
+    # with the same calibrated snapshot the CAD planner plans from
+    # (instead of a static cost_model that ignores a live calibrator)
+    snapshot_provider: \
+        Optional[Callable[[], CalibrationSnapshot]] = None
     step_cost_budget: float = 0.0        # seconds of predicted CA per
                                          # decode step; 0 disables
     eos_id: Optional[int] = None
@@ -109,8 +114,10 @@ class SchedulerConfig:
         if self.admission not in ("fcfs", "cost"):
             raise ValueError(f"unknown admission policy {self.admission!r}")
         if (self.admission == "cost" or self.step_cost_budget) \
-                and self.cost_model is None:
-            raise ValueError("cost-based admission needs a cost_model")
+                and self.cost_model is None \
+                and self.snapshot_provider is None:
+            raise ValueError("cost-based admission needs a cost_model "
+                             "or a snapshot_provider")
 
 
 class ContinuousScheduler:
@@ -123,6 +130,8 @@ class ContinuousScheduler:
         self.done: List[Request] = []
         self.trace: List[Tuple[str, int]] = []
         self._admit_counter = 0
+        self._round_cm = cfg.cost_model
+        self.last_calib_version = -1      # snapshot version priced with
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
@@ -155,8 +164,20 @@ class ContinuousScheduler:
                 total += int(self.kv_len[slot]) + 1
         return total
 
+    def _refresh_cost_model(self) -> Optional[CostModel]:
+        """The cost model this admission round prices with: ONE snapshot
+        per round from ``snapshot_provider`` when attached (admission
+        then agrees with the calibrated planner), else the static
+        ``cost_model``.  All of a round's decisions — ordering, the
+        step-cost budget — use the same pull."""
+        if self.cfg.snapshot_provider is not None:
+            snap = self.cfg.snapshot_provider()
+            self._round_cm = snap.cost_model
+            self.last_calib_version = int(snap.version)
+        return self._round_cm
+
     def _step_cost(self, extra: Optional[Request] = None) -> float:
-        cm = self.cfg.cost_model
+        cm = self._round_cm
         reqs = list(self.active.values()) + ([extra] if extra else [])
         return float(sum(cm.predict(1, r.total_len) for r in reqs))
 
@@ -175,9 +196,9 @@ class ContinuousScheduler:
     def admit(self) -> List[Request]:
         """Move waiting requests into free slots under the budgets."""
         admitted = []
+        cm = self._refresh_cost_model()
         while self.free and self.waiting:
             if self.cfg.admission == "cost":
-                cm = self.cfg.cost_model
                 i = int(np.argmin([float(cm.predict(1, r.total_len))
                                    for r in self.waiting]))
             else:

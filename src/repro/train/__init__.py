@@ -1,4 +1,4 @@
 from repro.train.loss import lm_loss
 from repro.train.step import (make_eval_step, make_serve_chunk_step,
                               make_serve_step, make_train_step)
-from repro.train.trainer import TrainConfig, make_cad_context, train
+from repro.train.trainer import TrainConfig, train

@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Any, Dict, Optional
 
 import jax
@@ -14,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.cad import CADSession
 from repro.checkpoint import ckpt
-from repro.data.pipeline import PipelineConfig, batches, raw_batches
+from repro.data.pipeline import PipelineConfig, raw_batches
 from repro.models import model as M
 from repro.optim.adamw import AdamW, cosine_schedule
 from repro.parallel import ParallelContext
@@ -53,9 +52,9 @@ def train(cfg, pipe_cfg: PipelineConfig, train_cfg: TrainConfig,
 
     Pass ``session`` (a :class:`repro.cad.CADSession`) to train with the
     attention service: the session provides the ParallelContext and
-    attaches prefetched plans to every batch.  The legacy path —
-    ``ctx`` from ``make_cad_context`` plus ``pipe_cfg.cad`` — still
-    works."""
+    attaches prefetched plans to every batch.  Without a session the
+    loop trains on raw packed batches with a plain (or caller-supplied)
+    ``ctx``."""
     faults = pool = None
     if session is not None:
         if train_cfg.fault_schedule:
@@ -75,10 +74,7 @@ def train(cfg, pipe_cfg: PipelineConfig, train_cfg: TrainConfig,
         gen = session.attach_plans(raw_batches(pipe_cfg))
     else:
         ctx = ctx or ParallelContext(attn_impl="xla", remat=True)
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            gen = batches(pipe_cfg, cfg.n_heads or 1, cfg.head_dim or 1,
-                          cfg.n_kv_heads or 1)
+        gen = raw_batches(pipe_cfg)
     key = jax.random.PRNGKey(train_cfg.seed)
     if params is None:
         params = M.init(key, cfg)
@@ -147,24 +143,3 @@ def train(cfg, pipe_cfg: PipelineConfig, train_cfg: TrainConfig,
     finally:
         gen.close()      # stops the plan-prefetch worker, if any
     return {"params": params, "opt_state": opt_state, "history": history}
-
-
-def make_cad_context(cfg, pipe_cfg: PipelineConfig, *, kernel="xla",
-                     pingpong=False, mesh=None, rules=None,
-                     tolerance=0.1) -> ParallelContext:
-    """Deprecated: build a :class:`repro.cad.CADSession` instead.
-
-    Kept for one release.  Reproduces the old side effect of configuring
-    ``pipe_cfg`` so the legacy ``batches()`` path attaches plans."""
-    warnings.warn(
-        "make_cad_context is deprecated; use "
-        "CADSession.for_pipeline(cfg, pipe_cfg, ...) and pass the session "
-        "to train()", DeprecationWarning, stacklevel=2)
-    session = CADSession.for_pipeline(cfg, pipe_cfg, kernel=kernel,
-                                      pingpong=pingpong,
-                                      tolerance=tolerance, mesh=mesh,
-                                      rules=rules)
-    pipe_cfg.cad = session.cfg
-    pipe_cfg.tolerance = tolerance
-    pipe_cfg.pingpong = pingpong
-    return session.context()

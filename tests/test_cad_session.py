@@ -327,19 +327,3 @@ def test_train_runs_through_session():
     # no stray prefetch workers left behind
     names = [t.name for t in threading.enumerate()]
     assert "cad-plan-prefetch" not in names
-
-
-def test_legacy_batches_shim_warns():
-    """pytest runs with warnings-as-errors, so any in-tree use of the
-    deprecated ``batches(cfg-with-cad)`` shim fails the suite; the shim
-    itself stays covered here through pytest.warns."""
-    from repro.configs import get_config
-    from repro.data.pipeline import PipelineConfig, batches
-    cfg = get_config("smollm-360m").reduced()
-    pipe = PipelineConfig(max_doc_len=128, seq_len=128, global_batch=2,
-                          n_ranks=2, vocab_size=cfg.vocab_size, seed=0)
-    pipe.cad = CADConfig.default(2, 128, max_doc_tokens=128)
-    with pytest.warns(DeprecationWarning, match="attach_plans"):
-        gen = batches(pipe, cfg.n_heads, cfg.head_dim, cfg.n_kv_heads)
-    batch = next(gen)
-    assert "plan" in batch and "schedule_stats" in batch

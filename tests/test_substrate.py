@@ -96,16 +96,16 @@ def test_checkpoint_roundtrip():
 def test_train_loss_decreases_with_cad():
     """30 steps on a tiny llama with the full CAD path (scheduler plans,
     global-sim pool of 2 servers): loss must drop."""
+    from repro.cad import CADSession
     from repro.data.pipeline import PipelineConfig
-    from repro.train.trainer import TrainConfig, make_cad_context, train
-    import dataclasses as dc
+    from repro.train.trainer import TrainConfig, train
     cfg = get_config("smollm-360m").reduced()
     pipe = PipelineConfig(distribution="pretrain", max_doc_len=256,
                           seq_len=256, global_batch=4, n_ranks=2,
                           vocab_size=cfg.vocab_size, seed=0)
-    ctx = make_cad_context(cfg, pipe, kernel="xla")
+    session = CADSession.for_pipeline(cfg, pipe, kernel="xla")
     res = train(cfg, pipe, TrainConfig(steps=40, peak_lr=5e-3, warmup=5,
-                                       log_every=39), ctx=ctx)
+                                       log_every=39), session=session)
     first = res["history"][0]["loss"]
     last = res["history"][-1]["loss"]
     # uniform-random tokens: floor is ln(V)≈6.24; require clear descent
