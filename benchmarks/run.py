@@ -26,23 +26,33 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py format).
                                     cadence; serve throughput ratio,
                                     train bit-identity, kill-mid-decode
                                     recovery of both tenants
+  memory_pressure       DESIGN §11 — memory-aware planning + chunked KV
+                                    streaming: a workload whose kv
+                                    prefix overflows any endpoint
+                                    completes within per-server HBM
+                                    budgets, residency max/mean curve,
+                                    streamed == unstreamed bitwise
 
 Run: PYTHONPATH=src python -m benchmarks.run [--fast] [--json PATH]
-                                             [--gate BASELINE.json]
+                                             [--gate BASELINE.json|auto]
 
 ``--json PATH`` additionally writes the machine-readable results the CI
 perf-trajectory artifact is built from (kernel fwd/bwd us, packing plan
 imbalance, prefetch overlap) plus environment metadata.
 
 ``--gate BASELINE.json`` compares this run's results against a
-committed baseline snapshot (BENCH_6.json): deterministic modeled
-ratios must stay within 15% of the baseline, boolean acceptance checks
-must not flip false, and (with ``--gate-times``) wall-clock metrics
-must not regress past a generous noise allowance.  A gate failure
-exits non-zero.
+committed baseline snapshot: deterministic modeled ratios must stay
+within 15% of the baseline, boolean acceptance checks must not flip
+false, and (with ``--gate-times``) wall-clock metrics must not regress
+past a generous noise allowance.  A gate failure exits non-zero.
+``--gate auto`` resolves the baseline to the newest committed
+``BENCH_<n>.json`` in the repo root, so the CI gate follows the
+perf trajectory without a workflow edit per PR.
 """
 import argparse
+import glob
 import json
+import os
 import platform
 import re
 import sys
@@ -142,8 +152,28 @@ GATE_RULES = (
      "lower", 0.15, False),
     (r"^prefetch\.sync_over_async$", "higher", 0.40, False),
     (r"^serve\.prefill_speedup_vs_loop$", "higher", 0.50, False),
+    (r"^memory\.resident_max_over_mean$", "lower", 0.15, False),
+    (r"^memory\.curve\.\d+\.resident_max_over_mean$",
+     "lower", 0.15, False),
     (r"_us(_per_step|_per_call)?$", "lower", 0.50, True),
 )
+
+
+def resolve_gate(arg: str) -> str:
+    """``auto`` -> the newest committed ``BENCH_<n>.json`` baseline in
+    the repo root; any other value passes through as a path."""
+    if arg != "auto":
+        return arg
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    found = []
+    for p in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(p))
+        if m:
+            found.append((int(m.group(1)), p))
+    if not found:
+        raise SystemExit("--gate auto: no committed BENCH_<n>.json "
+                         f"baseline under {root}")
+    return max(found)[1]
 
 
 def _flatten(obj, prefix=""):
@@ -209,7 +239,8 @@ def main() -> None:
                     help="write machine-readable results (BENCH_ci.json)")
     ap.add_argument("--gate", default=None, metavar="BASELINE",
                     help="fail if results regress vs this baseline "
-                         "snapshot (BENCH_6.json)")
+                         "snapshot; 'auto' picks the newest committed "
+                         "BENCH_<n>.json")
     ap.add_argument("--gate-times", action="store_true",
                     help="also gate wall-clock *_us metrics (noisy; "
                          "off by default)")
@@ -217,9 +248,10 @@ def main() -> None:
 
     from benchmarks import (cp_overheads, dedicated_pool, e2e_sim,
                             elastic_recovery, fabric_mix, imbalance,
-                            kernel_throughput, overlap, pp_bubbles,
-                            serve_throughput, straggler_elim,
-                            table1_scaling, tolerance_sweep)
+                            kernel_throughput, memory_pressure, overlap,
+                            pp_bubbles, serve_throughput,
+                            straggler_elim, table1_scaling,
+                            tolerance_sweep)
     benches = {
         "table1": table1_scaling.main,
         "fig3": cp_overheads.main,
@@ -237,12 +269,14 @@ def main() -> None:
         "serve": lambda: serve_throughput.main(fast=args.fast),
         "elastic": lambda: elastic_recovery.main(fast=args.fast),
         "fabric": lambda: fabric_mix.main(fast=args.fast),
+        "memory": lambda: memory_pressure.main(fast=args.fast),
     }
     # the machine-readable subset: kernel fwd/bwd, plan imbalance,
     # prefetch overlap, straggler elimination, serve throughput,
-    # elastic recovery, fabric mix — the CI perf trajectory
+    # elastic recovery, fabric mix, memory pressure — the CI perf
+    # trajectory
     json_keys = ("fig5", "kernel_bwd", "fig4", "prefetch", "straggler",
-                 "serve", "elastic", "fabric")
+                 "serve", "elastic", "fabric", "memory")
     results, failed = {}, 0
     for name, fn in benches.items():
         if args.only and name != args.only:
@@ -273,13 +307,14 @@ def main() -> None:
             json.dump(payload, f, indent=2, default=float)
         print(f"json_results,{len(results)},path={args.json}")
     if args.gate:
-        with open(args.gate) as f:
+        gate_path = resolve_gate(args.gate)
+        with open(gate_path) as f:
             baseline = json.load(f)
         fails = check_gate(baseline.get("results", baseline), results,
                            gate_times=args.gate_times)
         for msg in fails:
             print(f"gate_regression,nan,{msg}")
-        print(f"gate,{len(fails)},baseline={args.gate};"
+        print(f"gate,{len(fails)},baseline={gate_path};"
               f"checked={'times+ratios' if args.gate_times else 'ratios'}")
         failed += len(fails)
     sys.exit(1 if failed else 0)

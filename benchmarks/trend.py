@@ -1,0 +1,103 @@
+"""Perf-trajectory trend table: every committed baseline, one view.
+
+Each PR that moves a benchmark commits a ``BENCH_<n>.json`` snapshot
+(the ``--gate auto`` baseline chain).  This module folds the whole
+chain into one Markdown table — metric per row, one column per
+snapshot oldest -> newest, plus the relative delta newest vs oldest —
+so a reviewer reads the repo's performance *trajectory*, not just the
+latest gate verdict.
+
+CI appends the table to the job summary and uploads it as the
+``BENCH_trend.md`` artifact next to ``BENCH_ci.json``:
+
+  PYTHONPATH=src python -m benchmarks.trend --out BENCH_trend.md
+
+Booleans render as ``yes``/``no`` (a ``yes -> no`` flip is exactly
+what the gate fails on); numeric cells use 4 significant digits.
+"""
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+from benchmarks.run import _flatten
+
+
+def find_baselines(root=None):
+    """[(n, path)] of committed BENCH_<n>.json snapshots, oldest
+    first."""
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    found = []
+    for p in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(p))
+        if m:
+            found.append((int(m.group(1)), p))
+    return sorted(found)
+
+
+def _cell(v) -> str:
+    if isinstance(v, bool):
+        return "yes" if v else "no"
+    if v is None:
+        return "—"
+    return f"{v:.4g}"
+
+
+def trend_table(baselines) -> str:
+    """The Markdown trend table over [(n, path)] snapshots."""
+    cols, flats = [], []
+    for n, path in baselines:
+        with open(path) as f:
+            payload = json.load(f)
+        cols.append(f"PR {n}")
+        flats.append(_flatten(payload.get("results", payload)))
+    metrics = sorted(set().union(*flats)) if flats else []
+    lines = ["# Benchmark trend",
+             "",
+             f"{len(cols)} committed baseline(s): "
+             + ", ".join(f"`BENCH_{n}.json`" for n, _ in baselines),
+             "",
+             "| metric | " + " | ".join(cols) + " | delta |",
+             "|---" * (len(cols) + 2) + "|"]
+    for m in metrics:
+        vals = [fl.get(m) for fl in flats]
+        first = next((v for v in vals if v is not None), None)
+        last = next((v for v in reversed(vals) if v is not None), None)
+        if isinstance(first, bool) or isinstance(last, bool):
+            delta = "ok" if last or not first else "**flipped**"
+        elif first is None or last is None or not first:
+            delta = "—"
+        else:
+            delta = f"{(last / first - 1) * 100:+.1f}%"
+        lines.append("| " + " | ".join([f"`{m}`"]
+                                       + [_cell(v) for v in vals]
+                                       + [delta]) + " |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=None,
+                    help="directory holding BENCH_<n>.json (default: "
+                         "repo root)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also write the table to PATH")
+    args = ap.parse_args(argv)
+    baselines = find_baselines(args.root)
+    if not baselines:
+        print("no committed BENCH_<n>.json baselines found",
+              file=sys.stderr)
+        return 1
+    table = trend_table(baselines)
+    print(table, end="")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(table)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

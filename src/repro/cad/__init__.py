@@ -12,6 +12,7 @@ This package is the single entry point for CAD:
   PlanPrefetcher      async host-side plan prefetch (bounded queue,
                       stale-plan refresh under calibration)
   PlanCapacityError   static-capacity overflow diagnostics
+  PlanMemoryError     no feasible split fits the HBM budgets
   GridCalibrator      runtime (q_len, kv_len) latency-grid profiler with
                       per-server speed estimation (DESIGN.md §3)
 
@@ -24,11 +25,12 @@ from repro.cad.prefetch import PlanPrefetcher
 from repro.cad.session import CADSession
 from repro.core.cost_model import CalibrationSnapshot, GridCalibrator
 from repro.core.plan import (CADConfig, PingPongPlan, PlanCapacityError,
-                             StepPlan)
+                             PlanMemoryError, StepPlan)
 
 __all__ = [
     "CADSession", "StepPlan", "PingPongPlan", "CADConfig",
-    "PlanCapacityError", "Planner", "PlanResult", "register_planner",
+    "PlanCapacityError", "PlanMemoryError", "Planner",
+    "PlanResult", "register_planner",
     "get_planner", "available_policies", "PlanPrefetcher",
     "GridCalibrator", "CalibrationSnapshot",
 ]

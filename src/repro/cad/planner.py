@@ -46,11 +46,11 @@ from typing import Callable, Dict, Iterable, Optional, Tuple
 
 import numpy as np
 
-from repro.core.cost_model import CommModel, CostModel
-from repro.core.plan import CADConfig, StepPlan, head_tail_assignment, \
-    identity_assignment, plan_from_assignment
-from repro.core.scheduler import block_costs, check_exclude, \
-    layout_from_segments, schedule
+from repro.core.cost_model import CommModel, CostModel, MemoryModel
+from repro.core.plan import CADConfig, PlanMemoryError, StepPlan, \
+    head_tail_assignment, identity_assignment, plan_from_assignment
+from repro.core.scheduler import assignment_resident_bytes, block_costs, \
+    check_exclude, layout_from_segments, schedule, streamed_doc_ids
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,11 +60,17 @@ class PlanResult:
     ``plan`` is None when the planner ran with ``build_plan=False``
     (analysis-only callers that never dispatch).  ``loads`` is modeled
     per-server time (cost / speed); with the homogeneous default and no
-    cost model it equals relative FLOPs."""
+    cost model it equals relative FLOPs.  ``resident_bytes`` is the
+    per-server modeled HBM working set (populated whenever a memory
+    model was in play — always when ``cfg.server_hbm`` is set);
+    ``streamed`` names docs whose kv streams in chunks (DESIGN.md
+    §11)."""
     plan: Optional[StepPlan]
     assign: np.ndarray            # [G] server per global q-block
     loads: np.ndarray             # [S] per-server modeled time
     stats: Dict[str, float]       # comm_bytes, n_moves, load_max_over_mean
+    resident_bytes: Optional[np.ndarray] = None   # [S] modeled HBM bytes
+    streamed: Tuple[int, ...] = ()                # doc ids streaming kv
 
 
 # planner signature:
@@ -151,11 +157,60 @@ def _migration_bytes(cfg: CADConfig, assign: np.ndarray, docs,
     return float(comm.migration_bytes(n_q * cfg.blk, n_kv * cfg.blk))
 
 
-def _stats(loads: np.ndarray, comm_bytes: float, n_moves: int) \
-        -> Dict[str, float]:
-    return {"comm_bytes": float(comm_bytes), "n_moves": int(n_moves),
-            "load_max_over_mean": float(loads.max()
-                                        / max(loads.mean(), 1e-9))}
+def _stats(loads: np.ndarray, comm_bytes: float, n_moves: int,
+           resident: Optional[np.ndarray] = None,
+           allowed: Optional[Tuple[int, ...]] = None) -> Dict[str, float]:
+    st = {"comm_bytes": float(comm_bytes), "n_moves": int(n_moves),
+          "load_max_over_mean": float(loads.max()
+                                      / max(loads.mean(), 1e-9))}
+    if resident is not None:
+        r = resident if allowed is None else resident[list(allowed)]
+        st["peak_resident_bytes"] = float(r.max())
+        st["resident_max_over_mean"] = float(r.max()
+                                             / max(r.mean(), 1e-9))
+    return st
+
+
+def _mem_setup(cfg: CADConfig, comm: Optional[CommModel], mem_model,
+               budgets, stream_chunk):
+    """Resolve the memory-planning inputs: explicit kwargs win, else the
+    config's ``server_hbm``/``stream_chunk``.  Returns (mem, budgets,
+    chunk) with ``mem`` None only when memory is wholly unconstrained
+    AND no model was requested (resident stats are then skipped)."""
+    budgets = cfg.budgets() if budgets is None \
+        else np.asarray(budgets, np.float64)
+    chunk = cfg.stream_chunk if stream_chunk is None else int(stream_chunk)
+    if mem_model is None and budgets is None:
+        return None, None, chunk
+    mem = mem_model if mem_model is not None else MemoryModel(
+        comm if comm is not None
+        else CommModel(n_heads=1, head_dim=1, n_kv_heads=1))
+    return mem, budgets, chunk
+
+
+def _check_fixed_layout_memory(policy: str, cfg: CADConfig, assign, docs,
+                               doc_of, bi_of, mem, budgets, chunk,
+                               allowed: Tuple[int, ...]):
+    """Memory accounting for the fixed-layout policies (identity /
+    per_doc_cp).  Their assignments are not re-splittable by
+    construction, so a budget overflow is immediately terminal:
+    :class:`PlanMemoryError` — the caller should pick ``balanced``
+    (which re-splits) or raise the budget."""
+    if mem is None:
+        return None, ()
+    streamed = () if budgets is None else streamed_doc_ids(
+        docs, cfg.blk, mem, budgets, stream_chunk=chunk, allowed=allowed)
+    resident = assignment_resident_bytes(
+        assign, doc_of, bi_of, cfg.blk, cfg.n_servers, mem,
+        streamed=streamed, stream_chunk=chunk)
+    if budgets is not None:
+        for s in allowed:
+            if resident[s] > budgets[s]:
+                raise PlanMemoryError(
+                    s, float(resident[s]), float(budgets[s]),
+                    detail=f"{policy} is a fixed layout and cannot "
+                           f"re-split; use plan_policy='balanced'")
+    return resident, streamed
 
 
 @register_planner("identity")
@@ -165,19 +220,26 @@ def identity_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
                      build_plan: bool = True,
                      cost_model: Optional[CostModel] = None,
                      speeds: Optional[np.ndarray] = None,
-                     exclude: Optional[Iterable[int]] = None) -> PlanResult:
+                     exclude: Optional[Iterable[int]] = None,
+                     mem_model: Optional[MemoryModel] = None,
+                     budgets: Optional[np.ndarray] = None,
+                     stream_chunk: Optional[int] = None) -> PlanResult:
     docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
                                                cfg.n_servers)
     exclude = check_exclude(exclude, cfg.n_servers)
+    allowed = tuple(s for s in range(cfg.n_servers) if s not in exclude)
     assign = identity_assignment(cfg)
     n_moves = 0
     if exclude:
-        allowed = tuple(s for s in range(cfg.n_servers)
-                        if s not in exclude)
         assign = _evacuate_whole_docs(assign, docs, exclude, allowed)
         home = identity_assignment(cfg)
         live = doc_of >= 0
         n_moves = int((assign[live] != home[live]).sum())
+    mem, budgets, chunk = _mem_setup(cfg, comm, mem_model, budgets,
+                                     stream_chunk)
+    resident, streamed = _check_fixed_layout_memory(
+        "identity", cfg, assign, docs, doc_of, bi_of, mem, budgets,
+        chunk, allowed)
     plan = plan_from_assignment(cfg, assign, doc_of, bi_of, docs) \
         if build_plan else None
     loads = _loads_of(assign, doc_of, bi_of, cfg.blk, cfg.n_servers,
@@ -185,7 +247,9 @@ def identity_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
     return PlanResult(plan=plan, assign=assign, loads=loads,
                       stats=_stats(loads, _migration_bytes(
                           cfg, assign, docs, doc_of, bi_of, comm)
-                          if exclude else 0.0, n_moves))
+                          if exclude else 0.0, n_moves,
+                          resident, allowed),
+                      resident_bytes=resident, streamed=streamed)
 
 
 @register_planner("per_doc_cp")
@@ -195,7 +259,10 @@ def per_doc_cp_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
                        build_plan: bool = True,
                        cost_model: Optional[CostModel] = None,
                        speeds: Optional[np.ndarray] = None,
-                       exclude: Optional[Iterable[int]] = None) \
+                       exclude: Optional[Iterable[int]] = None,
+                       mem_model: Optional[MemoryModel] = None,
+                       budgets: Optional[np.ndarray] = None,
+                       stream_chunk: Optional[int] = None) \
         -> PlanResult:
     """Head-tail per-document CP (paper §2.2 as a special-case plan).
     The dealing order is the paper's fixed head-tail pairing — speed-
@@ -205,9 +272,14 @@ def per_doc_cp_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
     docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
                                                cfg.n_servers)
     exclude = check_exclude(exclude, cfg.n_servers)
-    servers = tuple(s for s in range(cfg.n_servers)
-                    if s not in exclude) if exclude else None
+    allowed = tuple(s for s in range(cfg.n_servers) if s not in exclude)
+    servers = allowed if exclude else None
     assign = head_tail_assignment(cfg, docs, servers)
+    mem, budgets, chunk = _mem_setup(cfg, comm, mem_model, budgets,
+                                     stream_chunk)
+    resident, streamed = _check_fixed_layout_memory(
+        "per_doc_cp", cfg, assign, docs, doc_of, bi_of, mem, budgets,
+        chunk, allowed)
     plan = plan_from_assignment(cfg, assign, doc_of, bi_of, docs) \
         if build_plan else None
     loads = _loads_of(assign, doc_of, bi_of, cfg.blk, cfg.n_servers,
@@ -216,7 +288,9 @@ def per_doc_cp_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
     return PlanResult(
         plan=plan, assign=assign, loads=loads,
         stats=_stats(loads, _migration_bytes(cfg, assign, docs, doc_of,
-                                             bi_of, comm), n_moves))
+                                             bi_of, comm), n_moves,
+                     resident, allowed),
+        resident_bytes=resident, streamed=streamed)
 
 
 @register_planner("balanced")
@@ -226,20 +300,35 @@ def balanced_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
                      build_plan: bool = True,
                      cost_model: Optional[CostModel] = None,
                      speeds: Optional[np.ndarray] = None,
-                     exclude: Optional[Iterable[int]] = None) \
+                     exclude: Optional[Iterable[int]] = None,
+                     mem_model: Optional[MemoryModel] = None,
+                     budgets: Optional[np.ndarray] = None,
+                     stream_chunk: Optional[int] = None) \
         -> PlanResult:
     """The paper's communication-aware greedy scheduler (§4.2), balancing
     modeled time across per-server capacities (calibrated cost model +
     speed factors) when provided; ``exclude`` withdraws drained/dead
-    pool members from the balance (DESIGN.md §9)."""
+    pool members from the balance (DESIGN.md §9).  With HBM budgets
+    (``cfg.server_hbm`` or explicit ``budgets``) assignments are
+    re-split until every endpoint's resident bytes fit (DESIGN.md §11),
+    raising :class:`PlanMemoryError` only when no feasible split
+    exists."""
     if comm is None:
         comm = CommModel(n_heads=1, head_dim=1, n_kv_heads=1)
+    mem, budgets, chunk = _mem_setup(cfg, comm, mem_model, budgets,
+                                     stream_chunk)
     sch = schedule(segment_ids, blk=cfg.blk, n_servers=cfg.n_servers,
                    comm=comm, caps=cfg.caps(), tolerance=tolerance,
                    speeds=_resolve_speeds(cfg, speeds),
-                   cost_model=cost_model, exclude=exclude)
+                   cost_model=cost_model, exclude=exclude,
+                   mem_model=mem, budgets=budgets, stream_chunk=chunk)
     plan = plan_from_assignment(cfg, sch.assign, sch.doc_of_block,
                                 sch.bi_of_block, sch.docs) \
         if build_plan else None
+    allowed = tuple(s for s in range(cfg.n_servers)
+                    if s not in set(sch.exclude))
     return PlanResult(plan=plan, assign=sch.assign, loads=sch.loads,
-                      stats=_stats(sch.loads, sch.comm_bytes, sch.n_moves))
+                      stats=_stats(sch.loads, sch.comm_bytes, sch.n_moves,
+                                   sch.resident_bytes, allowed),
+                      resident_bytes=sch.resident_bytes,
+                      streamed=sch.streamed)

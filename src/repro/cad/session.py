@@ -85,6 +85,7 @@ class CADSession:
                      pingpong: bool = False, tolerance: float = 0.1,
                      plan_policy: str = "balanced", mesh=None, rules=None,
                      prefetch: int = 2, server_speeds=None,
+                     server_hbm=None, stream_chunk: int = 0,
                      calibrate: bool = False,
                      calib_ema: float = 0.5) -> "CADSession":
         """Size the attention-server pool for a training pipeline.
@@ -95,7 +96,13 @@ class CADSession:
         server); ``calibrate=True`` additionally attaches a
         :class:`GridCalibrator` (seeded with the analytic model and the
         declared speeds as prior) so measured timings keep refining
-        both the latency grid and the speed estimates."""
+        both the latency grid and the speed estimates.
+
+        ``server_hbm`` declares per-endpoint HBM budgets in bytes
+        (DESIGN.md §11): planning then treats memory as a second
+        constraint next to modeled time, and ``stream_chunk`` (kv
+        blocks) lets dispatch serve tasks whose kv prefix exceeds
+        every budget by streaming the prefix chunkwise."""
         n = pipe_cfg.n_ranks
         rows_per_rank = pipe_cfg.global_batch // n
         tokens_per_rank = rows_per_rank * pipe_cfg.seq_len
@@ -106,7 +113,9 @@ class CADSession:
             tokens_per_rank //= 2          # pool sized per nano-batch
         cadcfg = CADConfig.default(n, tokens_per_rank,
                                    max_doc_tokens=pipe_cfg.max_doc_len,
-                                   server_speeds=server_speeds)
+                                   server_speeds=server_speeds,
+                                   server_hbm=server_hbm,
+                                   stream_chunk=stream_chunk)
         n_heads = getattr(model_cfg, "n_heads", 1) or 1
         head_dim = getattr(model_cfg, "head_dim", 1) or 1
         comm = CommModel(n_heads=n_heads, head_dim=head_dim,

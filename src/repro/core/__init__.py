@@ -9,23 +9,24 @@
 from repro.core.attention import core_attention, ref_attention, \
     xla_flash_attention
 from repro.core.cost_model import CalibrationSnapshot, CommModel, \
-    CostModel, GridCalibrator, ca_flops, causal_doc_flops
+    CostModel, GridCalibrator, MemoryModel, ca_flops, causal_doc_flops
 from repro.core.dispatch import CADContext, assemble_step_outputs, \
     build_server_inputs, cad_attention, iter_plan_tasks, \
     merge_recovered, probe_plan_times, serve_task_batch
 from repro.core.plan import CADConfig, PingPongPlan, PlanCapacityError, \
-    StepPlan, identity_plan, per_document_cp_plan, plan_from_schedule
+    PlanMemoryError, StepPlan, identity_plan, per_document_cp_plan, \
+    plan_from_schedule
 from repro.core.scheduler import Caps, Schedule, imbalance, schedule
 
 __all__ = [
     "core_attention", "ref_attention", "xla_flash_attention",
     "CalibrationSnapshot", "CommModel", "CostModel", "GridCalibrator",
-    "ca_flops", "causal_doc_flops",
+    "MemoryModel", "ca_flops", "causal_doc_flops",
     "CADContext", "cad_attention", "iter_plan_tasks", "probe_plan_times",
     "build_server_inputs", "serve_task_batch", "assemble_step_outputs",
     "merge_recovered",
     "CADConfig", "identity_plan",
     "per_document_cp_plan", "plan_from_schedule", "Caps", "Schedule",
     "imbalance", "schedule", "StepPlan", "PingPongPlan",
-    "PlanCapacityError",
+    "PlanCapacityError", "PlanMemoryError",
 ]

@@ -88,6 +88,39 @@ class CommModel:
         return n_q_tokens * self.size_q + n_kv_tokens * self.size_kv
 
 
+@dataclasses.dataclass(frozen=True)
+class MemoryModel:
+    """HBM bytes a CA task pins on its attention server while resident
+    (DESIGN.md §11).
+
+    A task is one q block against a causal kv prefix; its working set
+    is the q shard plus the returned o (``CommModel.size_q``), the k/v
+    context (``CommModel.size_kv``) and the f32 per-(q token, head)
+    lse residual the flash backward saves.  Reusing the CommModel byte
+    accessors keeps the planner's resident-bytes and comm-bytes ledgers
+    on one byte accounting that cannot drift apart.
+    """
+    comm: CommModel
+    lse_bytes: int = 4                # f32 per (q token, head)
+
+    def q_bytes(self, q_tokens) -> float:
+        """q shard + returned o resident for the task's q side."""
+        return float(q_tokens) * self.comm.size_q
+
+    def kv_bytes(self, kv_tokens) -> float:
+        """k and v context bytes for a ``kv_tokens``-token prefix."""
+        return float(kv_tokens) * self.comm.size_kv
+
+    def residual_bytes(self, q_tokens) -> float:
+        """Backward-saved softmax statistics (lse) for the q shard."""
+        return float(q_tokens) * self.comm.n_heads * self.lse_bytes
+
+    def task_bytes(self, q_len, kv_len) -> float:
+        """Full resident footprint of one (q_len, kv_len) CA task."""
+        return self.q_bytes(q_len) + self.residual_bytes(q_len) \
+            + self.kv_bytes(kv_len)
+
+
 class CostModel:
     """Predicts CA-task execution time.  Bilinear interpolation over a
     (q_len, kv_len) grid — the paper's profiler — with an analytic default

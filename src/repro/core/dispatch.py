@@ -142,19 +142,24 @@ def _xla_server(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
     return out
 
 
-def _xla_server_fwd_impl(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
-                         kv_pos, jmax, softcap, window, scale):
-    """Blockwise jnp attention-server (the compile/dry-run path): scan over
-    relative kv-block index j, gathering each task's j-th context block."""
-    T, blk, hq, dh = q_tasks.shape
-    n = k_buf.shape[0]
-    rep = hq // k_buf.shape[2]
-    scale = scale if scale is not None else dh ** -0.5
-    qf = q_tasks.astype(jnp.float32)
-    m0 = jnp.full((T, hq, blk), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((T, hq, blk), jnp.float32)
-    a0 = jnp.zeros((T, hq, blk, dh), jnp.float32)
+def _accum_init(T, hq, blk, dh):
+    """Fresh running (m, l, acc) flash-accumulation carry."""
+    return (jnp.full((T, hq, blk), NEG_INF, jnp.float32),
+            jnp.zeros((T, hq, blk), jnp.float32),
+            jnp.zeros((T, hq, blk, dh), jnp.float32))
 
+
+def _accum_body(qf, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, *,
+                softcap, window, scale, rep, n):
+    """One flash-accumulation scan step over relative kv-block index j.
+    Shared — same closure, same op sequence — by the full serve scan and
+    the chunked KV-streaming scans, which is what makes streamed output
+    bit-identical to the unstreamed path (DESIGN.md §11): splitting a
+    scan into chunked sub-scans with the carry threaded across chunks
+    performs the identical FP operations in the identical order.
+    Iterations past a task's kv_len are exact no-ops (masked logits are
+    NEG_INF, so m/l/acc are multiplied by exp(0) == 1 and incremented
+    by 0), which also covers a ragged final chunk."""
     def body(carry, j):
         m_acc, l_acc, acc = carry
         logits, msk, kj, vj, _ = _server_pair(
@@ -167,15 +172,34 @@ def _xla_server_fwd_impl(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
         acc = acc * corr[..., None] + jnp.einsum(
             "thqk,tkhd->thqd", p, vj.astype(jnp.float32))
         return (m_new, l_new, acc), None
+    return body
 
-    (m_acc, l_acc, acc), _ = jax.lax.scan(body, (m0, l0, a0),
-                                          jnp.arange(jmax))
+
+def _accum_finalize(m_acc, l_acc, acc, dtype):
+    """Normalize a finished flash carry into (out, lse)."""
     out = acc / jnp.maximum(l_acc, 1e-30)[..., None]
     live = m_acc > NEG_INF / 2
     out = jnp.where(live[..., None], out, 0.0)
     lse = jnp.where(live, m_acc + jnp.log(jnp.maximum(l_acc, 1e-30)),
                     jnp.float32(2.0 ** 30))
-    return out.transpose(0, 2, 1, 3).astype(q_tasks.dtype), lse
+    return out.transpose(0, 2, 1, 3).astype(dtype), lse
+
+
+def _xla_server_fwd_impl(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
+                         kv_pos, jmax, softcap, window, scale):
+    """Blockwise jnp attention-server (the compile/dry-run path): scan over
+    relative kv-block index j, gathering each task's j-th context block."""
+    T, blk, hq, dh = q_tasks.shape
+    n = k_buf.shape[0]
+    rep = hq // k_buf.shape[2]
+    scale = scale if scale is not None else dh ** -0.5
+    qf = q_tasks.astype(jnp.float32)
+    body = _accum_body(qf, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
+                       softcap=softcap, window=window, scale=scale,
+                       rep=rep, n=n)
+    carry, _ = jax.lax.scan(body, _accum_init(T, hq, blk, dh),
+                            jnp.arange(jmax))
+    return _accum_finalize(*carry, q_tasks.dtype)
 
 
 def _xla_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
@@ -388,7 +412,13 @@ def build_server_inputs(cad: CADContext, plan, q, k, v, pos):
     because each server's task batch is materialized independently, a
     single server's serve can fail, be retried, or be speculatively
     re-executed without touching the others — the per-server
-    decomposition the fused shard_map path cannot express."""
+    decomposition the fused shard_map path cannot express.
+
+    The per-server ``k_buf``/``v_buf`` returned here is also the unit
+    chunked KV streaming consumes (DESIGN.md §11): when the config sets
+    ``stream_chunk``, ``serve_task_batch`` reads the buffer one chunk
+    of kv blocks at a time instead of scanning it whole, so a server
+    whose budget cannot hold a task's full prefix still serves it."""
     cfg = cad.cfg
     d, blk = cfg.n_servers, cfg.blk
     plan_np = jax.tree.map(np.asarray, dict(plan.items()))
@@ -417,11 +447,100 @@ def build_server_inputs(cad: CADContext, plan, q, k, v, pos):
     return inputs, plans_r
 
 
+@functools.lru_cache(maxsize=16)
+def _stream_serve_fns(n_chunk: int, softcap: float, window: int, scale):
+    """Jitted (chunk_step, finalize) pair for chunked KV streaming —
+    cached per chunk geometry like :func:`_probe_serve_fn` (jit then
+    caches per input shape underneath)."""
+
+    @jax.jit
+    def chunk_step(carry, q_tasks, k_buf, v_buf, kv_start, kv_len,
+                   q_pos, kv_pos, j0):
+        dh = q_tasks.shape[3]
+        n = k_buf.shape[0]
+        body = _accum_body(
+            q_tasks.astype(jnp.float32), k_buf, v_buf, kv_start, kv_len,
+            q_pos, kv_pos, softcap=softcap, window=window,
+            scale=scale if scale is not None else dh ** -0.5,
+            rep=q_tasks.shape[2] // k_buf.shape[2], n=n)
+        # scan length is padded to >= 2 with a masked no-op iteration
+        # (j = n sits past every task's kv_len, so the carry passes
+        # through bitwise unchanged): XLA unrolls a trip-count-1 loop
+        # and re-fuses the body with its surroundings, which would cost
+        # bit-identity with the unstreamed scan's loop body
+        length = max(n_chunk, 2)
+        idx = jnp.arange(length)
+        js = jnp.where(idx < n_chunk, j0 + idx, jnp.int32(n))
+        carry, _ = jax.lax.scan(body, carry, js)
+        return carry
+
+    @jax.jit
+    def finalize(carry, q_tasks):
+        return _accum_finalize(*carry, q_tasks.dtype)[0]
+
+    return chunk_step, finalize
+
+
+def stream_task_batch(cad: CADContext, inputs_s, plan_s, *,
+                      chunk_blocks: Optional[int] = None,
+                      softcap: float = 0.0, scale=None):
+    """Chunked KV streaming serve for ONE server (DESIGN.md §11): the
+    fused task batch consumes its kv range in fixed-size chunks of
+    ``chunk_blocks`` kv blocks, carrying the running (m, l, acc) flash
+    accumulation across chunks, then normalizes once.  The per-chunk
+    scan reuses the unstreamed server's scan body verbatim, so the
+    streamed output is bit-identical to ``serve_task_batch`` with
+    streaming off — the same merge-math discipline as
+    :func:`merge_recovered`'s bitwise select, applied to accumulation
+    instead of selection.  On hardware each chunk's k/v blocks are
+    fetched and discarded per chunk, bounding kv residency by one chunk
+    (the planner's model for streamed docs); the host-side simulation
+    materializes the full buffer but only ever *reads* one chunk per
+    step.  The streamed path always runs the blockwise server — with
+    ``kernel='pallas'`` the unstreamed fused kernel remains in charge
+    whenever the task batch fits within one chunk."""
+    cfg = cad.cfg
+    chunk = int(chunk_blocks if chunk_blocks is not None
+                else cfg.stream_chunk)
+    if chunk <= 0:
+        raise ValueError(
+            f"stream_task_batch needs chunk_blocks > 0 kv blocks "
+            f"(or CADConfig.stream_chunk set), got {chunk}")
+    jmax = cad.jmax or cfg.nkv
+    q_tasks, qpos, k_buf, v_buf, kpos = inputs_s
+    T, blk, hq, dh = q_tasks.shape
+    step, finalize = _stream_serve_fns(chunk, float(softcap), 0, scale)
+    carry = _accum_init(T, hq, blk, dh)
+    kv_start = plan_s["task_kv_start"]
+    kv_len = plan_s["task_kv_len"]
+    for j0 in range(0, jmax, chunk):
+        # the ragged tail runs a full chunk; iterations past jmax are
+        # exact no-ops (see _accum_body), preserving bit-identity
+        carry = step(carry, q_tasks, k_buf, v_buf, kv_start, kv_len,
+                     qpos, kpos, jnp.int32(j0))
+    return finalize(carry, q_tasks)
+
+
 def serve_task_batch(cad: CADContext, inputs_s, plan_s, *,
-                     softcap: float = 0.0, scale=None):
+                     softcap: float = 0.0, scale=None,
+                     stream_chunk: Optional[int] = None):
     """Run ONE server's fused CA-task batch eagerly (compiled once per
     pool geometry) — the unit of work the elastic runtime dispatches,
-    retries and speculates on."""
+    retries and speculates on.
+
+    When chunked KV streaming is enabled (``cfg.stream_chunk`` > 0, or
+    an explicit ``stream_chunk`` override) and the kv range spans more
+    than one chunk, the batch is served through
+    :func:`stream_task_batch` — so every caller (elastic executor
+    primary serves, fabric serve backfill, recovery re-serves) inherits
+    memory-bounded serving from the config with no code of its own."""
+    chunk = cad.cfg.stream_chunk if stream_chunk is None \
+        else int(stream_chunk)
+    jmax = cad.jmax or cad.cfg.nkv
+    if 0 < chunk < jmax:
+        return stream_task_batch(cad, inputs_s, plan_s,
+                                 chunk_blocks=chunk, softcap=softcap,
+                                 scale=scale)
     q_tasks, qpos, k_buf, v_buf, kpos = inputs_s
     serve = _probe_serve_fn(cad.cfg, cad.kernel, cad.bwd, cad.jmax,
                             softcap, scale)

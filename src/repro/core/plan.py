@@ -42,6 +42,28 @@ PLAN_FIELDS = ("q_home_idx", "q_send_idx", "kv_send_idx", "kv_gather",
                "task_kv_start", "task_kv_len")
 
 
+class PlanMemoryError(RuntimeError):
+    """No feasible split fits every endpoint's HBM budget.
+
+    Sibling of :class:`PlanCapacityError`, but for the *memory*
+    constraint (DESIGN.md §11): raised only after the planner has
+    exhausted re-splitting (and, when enabled, chunked KV streaming) —
+    some server's resident bytes necessarily exceed its budget.
+    """
+
+    def __init__(self, server: int, resident_bytes: float,
+                 budget_bytes: float, detail: str = ""):
+        self.server = server
+        self.resident_bytes = float(resident_bytes)
+        self.budget_bytes = float(budget_bytes)
+        extra = f" ({detail})" if detail else ""
+        super().__init__(
+            f"no feasible split: endpoint {server} needs "
+            f"{self.resident_bytes:.4g} resident bytes, HBM budget is "
+            f"{self.budget_bytes:.4g}{extra} — raise CADConfig."
+            f"server_hbm, enable/shrink stream_chunk, or add servers")
+
+
 class PlanCapacityError(RuntimeError):
     """A plan build exceeded a static dispatch capacity.
 
@@ -133,6 +155,23 @@ StepPlan = _register_plan_dataclass(StepPlan)
 PingPongPlan = _register_plan_dataclass(PingPongPlan)
 
 
+def _validated_per_server(name: str, values, n_servers: int) \
+        -> Tuple[float, ...]:
+    """Validate a per-server float list (speeds, HBM budgets): right
+    length, every entry > 0.  Errors name the endpoint index AND the
+    offending value — with dozens of pool members, "must be > 0, got
+    <whole tuple>" is not actionable."""
+    vals = tuple(float(v) for v in values)
+    if len(vals) != n_servers:
+        raise ValueError(
+            f"{name} needs {n_servers} entries, got {len(vals)}")
+    for i, v in enumerate(vals):
+        if not v > 0:             # also catches NaN
+            raise ValueError(
+                f"{name}[{i}] must be > 0, got {v} for endpoint {i}")
+    return vals
+
+
 @dataclasses.dataclass(frozen=True)
 class CADConfig:
     """Attention-server pool description: geometry (static dispatch
@@ -141,7 +180,16 @@ class CADConfig:
     that should receive half the FLOPs; ``None`` means a homogeneous
     pool.  Speeds only steer host-side planning (load targets are
     proportional to speed); the dispatch arrays and compiled shapes are
-    speed-independent."""
+    speed-independent.
+
+    ``server_hbm`` gives each endpoint an HBM budget in bytes
+    (DESIGN.md §11); ``None`` means unconstrained.  Budgets, like
+    speeds, steer planning only — the planners reject or re-split
+    assignments whose modeled resident bytes exceed a budget.
+    ``stream_chunk`` (kv blocks, 0 = off) enables chunked KV streaming
+    for tasks whose context cannot fit any single endpoint's budget:
+    the server consumes the kv range chunk by chunk with a running
+    (out, lse) accumulation, bounding kv residency by one chunk."""
     n_servers: int
     blk: int
     nb: int               # q/kv blocks per rank
@@ -149,17 +197,20 @@ class CADConfig:
     ckv: int
     nkv: int
     server_speeds: Optional[Tuple[float, ...]] = None
+    server_hbm: Optional[Tuple[float, ...]] = None   # bytes per endpoint
+    stream_chunk: int = 0                            # kv blocks (0 = off)
 
     def __post_init__(self):
         if self.server_speeds is not None:
-            sp = tuple(float(s) for s in self.server_speeds)
-            if len(sp) != self.n_servers:
-                raise ValueError(
-                    f"server_speeds needs {self.n_servers} entries, got "
-                    f"{len(sp)}")
-            if any(s <= 0 for s in sp):
-                raise ValueError(f"server speeds must be > 0, got {sp}")
-            object.__setattr__(self, "server_speeds", sp)
+            object.__setattr__(self, "server_speeds", _validated_per_server(
+                "server_speeds", self.server_speeds, self.n_servers))
+        if self.server_hbm is not None:
+            object.__setattr__(self, "server_hbm", _validated_per_server(
+                "server_hbm", self.server_hbm, self.n_servers))
+        if self.stream_chunk < 0:
+            raise ValueError(
+                f"stream_chunk is a kv-block count, must be >= 0, got "
+                f"{self.stream_chunk}")
 
     @property
     def n_tasks(self) -> int:
@@ -174,9 +225,16 @@ class CADConfig:
             return np.ones(self.n_servers)
         return np.asarray(self.server_speeds, np.float64)
 
+    def budgets(self) -> Optional[np.ndarray]:
+        """Per-endpoint HBM budgets in bytes; None = unconstrained."""
+        if self.server_hbm is None:
+            return None
+        return np.asarray(self.server_hbm, np.float64)
+
     @classmethod
     def default(cls, n_servers: int, tokens_per_rank: int, blk: int = 128,
-                max_doc_tokens: int = 0, server_speeds=None):
+                max_doc_tokens: int = 0, server_speeds=None,
+                server_hbm=None, stream_chunk: int = 0):
         """Per-pair capacities must cover a full document's kv prefix
         (its blocks live on one home rank): ckv >= max_doc_blocks, else
         the scheduler cannot offload long-document tails — the exact case
@@ -190,7 +248,10 @@ class CADConfig:
         return cls(n_servers=n_servers, blk=blk, nb=nb, cq=cq, ckv=ckv,
                    nkv=nkv,
                    server_speeds=None if server_speeds is None
-                   else tuple(server_speeds))
+                   else tuple(server_speeds),
+                   server_hbm=None if server_hbm is None
+                   else tuple(server_hbm),
+                   stream_chunk=int(stream_chunk))
 
 
 def empty_plan(cfg: CADConfig) -> Dict[str, np.ndarray]:

@@ -29,6 +29,18 @@ Capacities (per-pair q/kv send slots, per-server kv buffer slots) mirror
 the static shapes of the compiled dispatch; moves that would overflow a
 capacity are rejected (TPU adaptation — see DESIGN.md §3).
 
+Memory budgets (DESIGN.md §11): ``budgets`` gives each endpoint an HBM
+budget in bytes and makes memory a second constraint next to time — a
+destination is only eligible while its modeled resident working set
+(q/o + residuals per held block, plus each needed doc kv prefix once)
+stays within budget, and a post-balance repair phase moves doc-range
+suffixes off servers born over budget by their own home layout.
+Documents whose final task fits no endpoint (the kv prefix alone
+overflows every budget) are marked ``streamed``: the dispatch layer
+consumes their kv in ``stream_chunk``-block chunks, so their planned
+kv residency is one chunk.  ``PlanMemoryError`` is raised only when no
+feasible split exists.
+
 Elastic pools (DESIGN.md §9): ``exclude`` names servers that must not
 hold CA tasks this step — drained or dead members of an elastic pool.
 Core attention is stateless, so excluding a server never loses data:
@@ -47,7 +59,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.cost_model import CommModel, CostModel
+from repro.core.cost_model import CommModel, CostModel, MemoryModel
 
 
 @dataclasses.dataclass
@@ -75,7 +87,11 @@ class Schedule:
     ``loads`` is per-server modeled *time*: assigned cost (relative
     FLOPs, or seconds under a calibrated cost model) divided by the
     server's speed factor — identical to relative FLOPs for the
-    homogeneous default."""
+    homogeneous default.  ``resident_bytes`` is per-server modeled HBM
+    working set (DESIGN.md §11), populated whenever a memory model was
+    in play; ``streamed`` names documents whose kv must be consumed in
+    ``stream_chunk``-block chunks because their final task fits no
+    single endpoint's budget."""
     assign: np.ndarray           # [G] server per global q-block
     docs: List[Doc]
     doc_of_block: np.ndarray     # [G] doc index (-1 = padding block)
@@ -88,6 +104,9 @@ class Schedule:
     n_moves: int
     speeds: Optional[np.ndarray] = None   # [S] speed factors (None = 1)
     exclude: Tuple[int, ...] = ()         # servers barred from tasks
+    resident_bytes: Optional[np.ndarray] = None  # [S] modeled HBM bytes
+    budgets: Optional[np.ndarray] = None         # [S] HBM budgets, bytes
+    streamed: Tuple[int, ...] = ()               # doc ids streaming kv
 
 
 def layout_from_segments(segment_ids: np.ndarray, blk: int,
@@ -167,12 +186,72 @@ def check_exclude(exclude: Optional[Iterable[int]],
     return ex
 
 
+def streamed_doc_ids(docs: List[Doc], blk: int, mem: MemoryModel,
+                     budgets: np.ndarray, *, stream_chunk: int,
+                     allowed: Optional[Iterable[int]] = None) \
+        -> Tuple[int, ...]:
+    """Documents that must stream their kv: the doc's *final* task (one
+    q block against the full causal prefix) overflows EVERY allowed
+    endpoint's HBM budget, so no re-split can help — causal attention
+    needs the whole prefix resident for that task unless it is consumed
+    in chunks (DESIGN.md §11).  With streaming disabled such a doc is
+    unplannable: :class:`~repro.core.plan.PlanMemoryError` at planning
+    time, not an OOM at step time."""
+    idx = list(range(len(budgets))) if allowed is None else list(allowed)
+    cap = float(budgets[idx].max())
+    cap_srv = int(idx[int(np.argmax(budgets[idx]))])
+    out = []
+    for d in docs:
+        need = mem.task_bytes(blk, d.n_blocks * blk)
+        if need > cap:
+            if stream_chunk <= 0:
+                from repro.core.plan import PlanMemoryError  # circular-safe
+                raise PlanMemoryError(
+                    cap_srv, need, cap,
+                    detail=f"doc {d.doc_id} final task needs its full "
+                           f"{d.n_blocks}-block kv prefix resident and "
+                           f"streaming is off")
+            out.append(d.doc_id)
+    return tuple(out)
+
+
+def assignment_resident_bytes(assign: np.ndarray, doc_of: np.ndarray,
+                              bi_of: np.ndarray, blk: int, n_servers: int,
+                              mem: MemoryModel, *,
+                              streamed: Iterable[int] = (),
+                              stream_chunk: int = 0) -> np.ndarray:
+    """Per-server modeled HBM working set of an assignment: every live
+    q block contributes its q/o shard plus backward residuals, and each
+    (server, doc) pair contributes the doc's needed kv prefix exactly
+    once — the same deduplicated counting ``plan_from_assignment``'s
+    kv-gather buffer realizes.  Streamed docs' kv residency is bounded
+    by one ``stream_chunk`` of blocks."""
+    streamed = set(streamed)
+    res = np.zeros(n_servers)
+    q_unit = mem.q_bytes(blk) + mem.residual_bytes(blk)
+    needs: List[Dict[int, int]] = [dict() for _ in range(n_servers)]
+    for g in np.nonzero(doc_of >= 0)[0]:
+        s = int(assign[g])
+        dc = int(doc_of[g])
+        res[s] += q_unit
+        needs[s][dc] = max(needs[s].get(dc, 0), int(bi_of[g]) + 1)
+    for s in range(n_servers):
+        for dc, pref in needs[s].items():
+            if dc in streamed and stream_chunk > 0:
+                pref = min(pref, stream_chunk)
+            res[s] += mem.kv_bytes(pref * blk)
+    return res
+
+
 def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
              comm: CommModel, caps: Caps, tolerance: float = 0.1,
              max_moves: int = 100000,
              speeds: Optional[np.ndarray] = None,
              cost_model: Optional[CostModel] = None,
-             exclude: Optional[Iterable[int]] = None) -> Schedule:
+             exclude: Optional[Iterable[int]] = None,
+             mem_model: Optional[MemoryModel] = None,
+             budgets: Optional[np.ndarray] = None,
+             stream_chunk: int = 0) -> Schedule:
     docs, doc_of, bi_of = layout_from_segments(segment_ids, blk, n_servers)
     nb = segment_ids.shape[1] // blk
     G = n_servers * nb
@@ -219,6 +298,69 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
     comm_bytes = 0.0
     n_moves = 0
 
+    # ---- memory constraint state (DESIGN.md §11).  ``resident`` and
+    # ``kv_need`` mirror the assignment incrementally: per-server q/o +
+    # residual bytes for every held block, plus each needed doc kv
+    # prefix once (deduplicated — the same counting the kv-gather
+    # buffer realizes).  Streamed docs' kv is clamped to one chunk.
+    mem_on = budgets is not None
+    mem = mem_model if mem_model is not None \
+        else (MemoryModel(comm) if mem_on else None)
+    if mem_on:
+        budgets = np.asarray(budgets, np.float64)
+        if budgets.shape != (n_servers,):
+            raise ValueError(f"budgets needs {n_servers} entries, got "
+                             f"{budgets.shape}")
+        if not (budgets > 0).all():
+            bad = int(np.argmin(budgets > 0))
+            raise ValueError(f"budgets[{bad}] must be > 0, got "
+                             f"{budgets[bad]} for endpoint {bad}")
+    streamed: set = set(streamed_doc_ids(
+        docs, blk, mem, budgets, stream_chunk=stream_chunk,
+        allowed=allowed)) if mem_on else set()
+    q_unit = (mem.q_bytes(blk) + mem.residual_bytes(blk)) if mem else 0.0
+    kv_unit = mem.kv_bytes(blk) if mem else 0.0
+
+    def kv_clamp(dc: int, pref: int) -> int:
+        if dc in streamed and stream_chunk > 0:
+            return min(pref, stream_chunk)
+        return pref
+
+    resident = np.zeros(n_servers)
+    kv_need: List[Dict[int, int]] = [dict() for _ in range(n_servers)]
+    if mem is not None:
+        for d in docs:
+            resident[d.home] += d.n_blocks * q_unit \
+                + kv_clamp(d.doc_id, d.n_blocks) * kv_unit
+            kv_need[d.home][d.doc_id] = d.n_blocks
+
+    def mem_delta_dst(dst: int, dc: int, hi: int, n_q: int) -> float:
+        """Resident bytes dst gains when n_q blocks of doc dc (prefix
+        end hi) land on it."""
+        old = kv_need[dst].get(dc, 0)
+        return n_q * q_unit \
+            + (kv_clamp(dc, max(old, hi)) - kv_clamp(dc, old)) * kv_unit
+
+    def mem_fits(dst: int, dc: int, hi: int, n_q: int) -> bool:
+        return not mem_on or resident[dst] \
+            + mem_delta_dst(dst, dc, hi, n_q) <= budgets[dst]
+
+    def mem_move(src: int, dst: int, dc: int, hi: int, n_q: int) -> None:
+        """Memory bookkeeping for a src->dst move; call AFTER
+        ``items[src]`` was updated (the remaining ranges determine the
+        source's surviving kv need)."""
+        if mem is None:
+            return
+        resident[dst] += mem_delta_dst(dst, dc, hi, n_q)
+        kv_need[dst][dc] = max(kv_need[dst].get(dc, 0), hi)
+        old_s = kv_need[src].pop(dc, 0)
+        rng = items[src].get(dc)
+        new_s = rng[-1][1] if rng else 0
+        if rng:
+            kv_need[src][dc] = new_s
+        resident[src] -= n_q * q_unit \
+            + (kv_clamp(dc, old_s) - kv_clamp(dc, new_s)) * kv_unit
+
     if excluded:
         from repro.core.plan import PlanCapacityError  # circular-safe
 
@@ -242,12 +384,23 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
                 continue
             n_bl = d.n_blocks
             cand = sorted(allowed, key=lambda s: (loads[s], s))
-            dst = next((s for s in cand
-                        if _deal_fit(d.home, s, n_bl) is None), None)
-            if dst is None:
+            cap_ok = [s for s in cand
+                      if _deal_fit(d.home, s, n_bl) is None]
+            if not cap_ok:
                 cap, needed, avail = _deal_fit(d.home, cand[0], n_bl)
                 raise PlanCapacityError(cap, d.home, cand[0], needed,
                                         avail)
+            dst = next((s for s in cap_ok
+                        if mem_fits(s, d.doc_id, n_bl, n_bl)), None)
+            if dst is None:
+                from repro.core.plan import PlanMemoryError
+                s0 = cap_ok[0]
+                raise PlanMemoryError(
+                    s0, resident[s0] + mem_delta_dst(s0, d.doc_id, n_bl,
+                                                     n_bl),
+                    float(budgets[s0]),
+                    detail=f"evacuating doc {d.doc_id} whole from "
+                           f"excluded server {d.home}")
             df = range_cost(0, n_bl)
             del items[d.home][d.doc_id]
             items[dst][d.doc_id] = [(0, n_bl)]
@@ -258,6 +411,7 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
             kv_used[d.home, dst] += n_bl
             nkv_used[dst] += n_bl
             sent_kv[dst][d.doc_id] = n_bl
+            mem_move(d.home, dst, d.doc_id, n_bl, n_bl)
             comm_bytes += comm.migration_bytes(n_bl * blk, n_bl * blk)
             n_moves += 1
         loads[list(excluded)] = 0.0      # evacuated exactly
@@ -319,6 +473,8 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
                             continue
                         if nkv_used[dst] + need_kv > caps.nkv:
                             continue
+                    if not mem_fits(dst, doc_id, hi, n_q):
+                        continue
                     df = range_cost(t, hi)
                     vbytes = comm.migration_bytes(n_q * blk, need_kv * blk)
                     # time gained by the deficit server per byte moved
@@ -360,13 +516,117 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
             kv_used[d.home, dst] += need_kv
             nkv_used[dst] += need_kv
             sent_kv[dst][doc_id] = max(sent_kv[dst].get(doc_id, 0), hi)
+        mem_move(src, dst, doc_id, hi, hi - t)
         comm_bytes += vbytes
         n_moves += 1
 
+    # ---- memory repair (DESIGN.md §11).  Time balancing never ADDS
+    # bytes past a destination's budget (mem_fits above), but servers
+    # can be born over budget by their own home layout.  Repair moves
+    # doc-range suffixes off over-budget servers to the least-loaded
+    # destination with room — the deepest-prefix doc first, since its
+    # kv dominates the working set.  Every move is capacity-checked
+    # like any other; when no move exists, no feasible split does.
+    if mem_on:
+        from repro.core.plan import PlanMemoryError  # circular-safe
+
+        while n_moves < max_moves:
+            over = [s for s in allowed if resident[s] > budgets[s]]
+            if not over:
+                break
+            s = max(over, key=lambda x: (resident[x] - budgets[x], -x))
+            move = None   # (dst, doc_id, ridx, t, hi, need_kv)
+            by_depth = sorted(items[s].items(),
+                              key=lambda kv: (-kv_need[s][kv[0]], kv[0]))
+            for doc_id, ranges in by_depth:
+                d = docs[doc_id]
+                ridx = len(ranges) - 1
+                lo, hi = ranges[ridx]
+                for dst in sorted(allowed, key=lambda x: (loads[x], x)):
+                    if dst == s:
+                        continue
+                    # capacity ceiling on the suffix length
+                    take = min(hi - lo, caps.cq - int(q_used[d.home,
+                                                             dst]))
+                    if take <= 0:
+                        continue
+                    if dst == d.home:
+                        need_kv = 0
+                    else:
+                        need_kv = max(0, hi - sent_kv[dst].get(doc_id, 0))
+                        if kv_used[d.home, dst] + need_kv > caps.ckv:
+                            continue
+                        if nkv_used[dst] + need_kv > caps.nkv:
+                            continue
+                    # budget ceiling: dst pays the full hi-prefix kv
+                    # (causal duplication) plus q/o bytes per block
+                    head = budgets[dst] - resident[dst] \
+                        - mem_delta_dst(dst, doc_id, hi, 0)
+                    if q_unit > 0:
+                        take = min(take, int(head // q_unit))
+                    elif head < 0:
+                        continue
+                    if take <= 0:
+                        continue
+                    move = (dst, doc_id, ridx, max(lo, hi - take), hi,
+                            need_kv)
+                    break
+                if move is not None:
+                    break
+            if move is None:
+                raise PlanMemoryError(
+                    s, float(resident[s]), float(budgets[s]),
+                    detail=f"{len(items[s])} docs resident after "
+                           f"{n_moves} moves; no destination has room")
+            dst, doc_id, ridx, t, hi, need_kv = move
+            d = docs[doc_id]
+            ranges = items[s][doc_id]
+            lo, _hi = ranges[ridx]
+            if t == lo:
+                ranges.pop(ridx)
+                if not ranges:
+                    del items[s][doc_id]
+            else:
+                ranges[ridx] = (lo, t)
+            dst_ranges = items[dst].setdefault(doc_id, [])
+            dst_ranges.append((t, hi))
+            dst_ranges.sort()
+            merged = [dst_ranges[0]]
+            for a, b in dst_ranges[1:]:
+                if a == merged[-1][1]:
+                    merged[-1] = (merged[-1][0], b)
+                else:
+                    merged.append((a, b))
+            items[dst][doc_id] = merged
+            assign[d.g0 + t: d.g0 + hi] = dst
+            df = range_cost(t, hi)
+            loads[s] -= df / speeds[s]
+            loads[dst] += df / speeds[dst]
+            q_used[d.home, dst] += hi - t
+            if d.home != dst:
+                kv_used[d.home, dst] += need_kv
+                nkv_used[dst] += need_kv
+                sent_kv[dst][doc_id] = max(sent_kv[dst].get(doc_id, 0),
+                                           hi)
+            mem_move(s, dst, doc_id, hi, hi - t)
+            comm_bytes += comm.migration_bytes((hi - t) * blk,
+                                               need_kv * blk)
+            n_moves += 1
+
+    final_resident = None
+    if mem is not None:
+        # authoritative recompute from the final assignment — the same
+        # helper tests and planners use, so the reported working set can
+        # never drift from the incremental bookkeeping above
+        final_resident = assignment_resident_bytes(
+            assign, doc_of, bi_of, blk, n_servers, mem,
+            streamed=streamed, stream_chunk=stream_chunk)
     return Schedule(assign=assign, docs=docs, doc_of_block=doc_of,
                     bi_of_block=bi_of, n_servers=n_servers, nb=nb, blk=blk,
                     loads=loads, comm_bytes=comm_bytes, n_moves=n_moves,
-                    speeds=speeds, exclude=exclude)
+                    speeds=speeds, exclude=exclude,
+                    resident_bytes=final_resident, budgets=budgets,
+                    streamed=tuple(sorted(streamed)))
 
 
 def imbalance(loads: np.ndarray) -> float:

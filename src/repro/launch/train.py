@@ -52,6 +52,14 @@ def main():
     ap.add_argument("--server-speeds", default="",
                     help="comma-separated per-rank speed factors "
                          "(heterogeneous pool), e.g. '1,0.5'")
+    ap.add_argument("--server-hbm", default="",
+                    help="comma-separated per-rank HBM budgets in "
+                         "bytes; planning then treats endpoint memory "
+                         "as a constraint next to modeled time")
+    ap.add_argument("--stream-chunk", type=int, default=0,
+                    help="kv blocks resident per streamed chunk; "
+                         "lets dispatch serve tasks whose kv prefix "
+                         "exceeds every --server-hbm budget (0 = off)")
     ap.add_argument("--calibrate", action="store_true",
                     help="runtime cost-model calibration: probe "
                          "per-server CA timings and replan from them")
@@ -84,12 +92,19 @@ def main():
         if len(speeds) != args.ranks:
             raise SystemExit(f"--server-speeds needs {args.ranks} "
                              f"entries, got {len(speeds)}")
+    hbm = None
+    if args.server_hbm:
+        hbm = tuple(float(s) for s in args.server_hbm.split(","))
+        if len(hbm) != args.ranks:
+            raise SystemExit(f"--server-hbm needs {args.ranks} "
+                             f"entries, got {len(hbm)}")
     session = None
     if args.cad and cfg.has_attention():
         session = CADSession.for_pipeline(
             cfg, pipe, kernel=args.kernel, pingpong=args.pingpong,
             tolerance=args.tolerance, plan_policy=args.plan_policy,
             prefetch=args.prefetch, server_speeds=speeds,
+            server_hbm=hbm, stream_chunk=args.stream_chunk,
             calibrate=args.calibrate)
         ctx = None
     else:

@@ -41,13 +41,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost_model import CostModel
+from repro.core.cost_model import CommModel, CostModel, MemoryModel
 from repro.core.dispatch import (CADContext, assemble_step_outputs,
                                  build_server_inputs, iter_plan_tasks,
                                  merge_recovered, serve_task_batch)
+from repro.core.scheduler import (assignment_resident_bytes,
+                                  layout_from_segments, streamed_doc_ids)
 from repro.runtime.faults import FaultSchedule
 from repro.runtime.pool import PoolExhaustedError, ServerPool
-from repro.runtime.recovery import build_recovery_plan
+from repro.runtime.recovery import assignment_of_plan, build_recovery_plan
 
 TIMERS = ("model", "wall")
 
@@ -170,6 +172,29 @@ class ElasticExecutor:
         t = float(sum(float(cm.predict(qt, kvt)) for qt, kvt in tasks))
         return t / float(speeds[server])
 
+    def _recovery_memory(self, cfg, segs, plan, backups):
+        """(MemoryModel, survivor resident bytes) for budget-aware
+        recovery destination choice, or (None, None) when the session
+        declares no HBM budgets.  The survivors' *primary* resident
+        bytes are recovered from the executed plan's dispatch arrays so
+        recovery lands on the survivors with genuine headroom
+        (DESIGN.md §11)."""
+        budgets = cfg.budgets()
+        if budgets is None:
+            return None, None
+        comm = self.session.comm or CommModel(1, 1, 1)
+        mem = MemoryModel(comm)
+        docs, doc_of, bi_of = layout_from_segments(segs, cfg.blk,
+                                                   cfg.n_servers)
+        streamed = streamed_doc_ids(docs, cfg.blk, mem, budgets,
+                                    stream_chunk=cfg.stream_chunk,
+                                    allowed=backups)
+        res = assignment_resident_bytes(
+            assignment_of_plan(cfg, plan), doc_of, bi_of, cfg.blk,
+            cfg.n_servers, mem, streamed=streamed,
+            stream_chunk=cfg.stream_chunk)
+        return mem, {s: float(res[s]) for s in backups}
+
     # ----------------------------------------------------------- stepping
     def run_step(self, step: int, q, k, v, pos, segment_ids: np.ndarray):
         """Execute one elastic step.  ``q``/``k``/``v`` are the stacked
@@ -289,10 +314,13 @@ class ElasticExecutor:
                 speculated = []
                 to_recover = tuple(failures)
                 backups = list(healthy)
+            mem, base_res = self._recovery_memory(cfg, segs, plan,
+                                                  backups)
             rec = build_recovery_plan(
                 cfg, segs, plan, to_recover, allowed=backups,
                 base_loads={s: seconds[s] for s in backups},
-                cost_model=cm, speeds=speeds) if to_recover else None
+                cost_model=cm, speeds=speeds, mem_model=mem,
+                base_resident=base_res) if to_recover else None
         base = assemble_step_outputs(cfg, plan, outs, q.shape, q.dtype)
         if rec is not None:
             rec_inputs, rec_plans = build_server_inputs(

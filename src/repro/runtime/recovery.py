@@ -26,9 +26,10 @@ from typing import Dict, Iterable, Optional, Tuple
 
 import numpy as np
 
-from repro.core.cost_model import CostModel
+from repro.core.cost_model import CommModel, CostModel, MemoryModel
 from repro.core.plan import CADConfig, StepPlan, plan_from_assignment
-from repro.core.scheduler import block_costs, layout_from_segments
+from repro.core.scheduler import (block_costs, layout_from_segments,
+                                  streamed_doc_ids)
 
 
 def assignment_of_plan(cfg: CADConfig, plan) -> np.ndarray:
@@ -101,7 +102,11 @@ def build_recovery_plan(cfg: CADConfig, segment_ids: np.ndarray, plan,
                         allowed: Iterable[int],
                         base_loads: Optional[Dict[int, float]] = None,
                         cost_model: Optional[CostModel] = None,
-                        speeds: Optional[np.ndarray] = None) \
+                        speeds: Optional[np.ndarray] = None,
+                        mem_model: Optional[MemoryModel] = None,
+                        budgets: Optional[np.ndarray] = None,
+                        base_resident: Optional[Dict[int, float]] = None,
+                        stream_chunk: Optional[int] = None) \
         -> Optional[RecoveryPlan]:
     """Build the sub-plan that recomputes every task lost on ``failed``
     onto ``allowed`` survivors.
@@ -112,7 +117,17 @@ def build_recovery_plan(cfg: CADConfig, segment_ids: np.ndarray, plan,
     range, the comm-minimal granularity of the primary scheduler.
     ``base_loads`` carries the survivors' primary-serve times so
     recovery lands on the least-busy endpoints first.  Returns ``None``
-    when the failure lost no live tasks (nothing to recover)."""
+    when the failure lost no live tasks (nothing to recover).
+
+    With ``budgets`` (per-endpoint HBM bytes, defaulting to
+    ``cfg.budgets()``; ``base_resident`` carries the survivors'
+    primary resident bytes) destination choice is memory-aware:
+    survivors whose resident bytes would overflow are skipped while
+    any in-budget survivor remains.  When *no* survivor fits — a
+    recovery has nowhere cheaper to go — the least-loaded survivor
+    takes the run anyway: with ``stream_chunk`` set, dispatch streams
+    the kv prefix chunkwise so hardware residency stays bounded; a
+    lost task is never dropped for memory (DESIGN.md §11)."""
     failed = sorted({int(s) for s in failed})
     allowed = sorted({int(s) for s in allowed})
     if not allowed:
@@ -130,6 +145,28 @@ def build_recovery_plan(cfg: CADConfig, segment_ids: np.ndarray, plan,
     loads = {s: float((base_loads or {}).get(s, 0.0)) for s in allowed}
     added = {s: 0.0 for s in allowed}
 
+    if budgets is None:
+        budgets = cfg.budgets()
+    chunk = cfg.stream_chunk if stream_chunk is None else int(stream_chunk)
+    mem = streamed = resident = kv_need = None
+    if budgets is not None:
+        budgets = np.asarray(budgets, np.float64)
+        mem = mem_model or MemoryModel(CommModel(1, 1, 1))
+        streamed = set(streamed_doc_ids(docs, cfg.blk, mem, budgets,
+                                        stream_chunk=chunk,
+                                        allowed=allowed))
+        q_unit = mem.q_bytes(cfg.blk) + mem.residual_bytes(cfg.blk)
+        resident = {s: float((base_resident or {}).get(s, 0.0))
+                    for s in allowed}
+        kv_need = {s: {} for s in allowed}
+
+    def mem_add(s: int, dc: int, pref: int, n_q: int) -> float:
+        """Incremental resident bytes if survivor ``s`` takes a run of
+        ``n_q`` blocks of doc ``dc`` needing kv prefix ``pref``."""
+        p = min(pref, chunk) if dc in streamed else pref
+        have = kv_need[s].get(dc, 0)
+        return q_unit * n_q + mem.kv_bytes(max(0, p - have) * cfg.blk)
+
     assign = np.arange(cfg.n_servers * cfg.nb) // cfg.nb
     masked_doc_of = np.where(lost, doc_of, -1)
     # maximal contiguous lost runs, document-pure, dealt to the least
@@ -145,11 +182,22 @@ def build_recovery_plan(cfg: CADConfig, segment_ids: np.ndarray, plan,
         while h < G and lost[h] and int(doc_of[h]) == dc:
             h += 1
         run_cost = float(cost[g:h].sum())
-        dst = min(allowed,
+        pool = allowed
+        if mem is not None:
+            pref = int(bi_of[h - 1]) + 1
+            fits = [s for s in allowed
+                    if resident[s] + mem_add(s, dc, pref, h - g)
+                    <= budgets[s]]
+            pool = fits or allowed     # never drop a lost task
+        dst = min(pool,
                   key=lambda s: (loads[s] + run_cost / speeds[s], s))
         assign[g:h] = dst
         loads[dst] += run_cost / speeds[dst]
         added[dst] += run_cost / speeds[dst]
+        if mem is not None:
+            resident[dst] += mem_add(dst, dc, pref, h - g)
+            p = min(pref, chunk) if dc in streamed else pref
+            kv_need[dst][dc] = max(kv_need[dst].get(dc, 0), p)
         g = h
     sub = plan_from_assignment(cfg, assign, masked_doc_of, bi_of, docs)
     return RecoveryPlan(plan=sub, lost=lost, assign=assign,

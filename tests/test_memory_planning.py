@@ -1,0 +1,300 @@
+"""Memory-aware planning + chunked KV streaming (DESIGN.md §11).
+
+Targeted scenarios complementing the property sweep in
+``test_planner_properties.py::test_memory_budget_invariant``:
+
+  * exact-budget fit: budgets equal to the layout's resident bytes
+    plan successfully with zero slack;
+  * a document whose final task overflows *every* budget streams its
+    kv prefix instead of failing — and raises :class:`PlanMemoryError`
+    when streaming is off;
+  * heterogeneous budgets + speeds: the scheduler balances modeled
+    time while never crossing any endpoint's individual budget;
+  * chunked streaming is bit-identical to the unstreamed dispatch
+    path, for every chunk size including ragged final chunks;
+  * budget-aware recovery lands lost tasks on survivors with memory
+    headroom;
+  * CADConfig per-server list validation reports the index AND the
+    offending value (regression: the old message omitted both).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cad import CADConfig, PlanMemoryError, get_planner
+from repro.cad.session import CADSession
+from repro.core.cost_model import CommModel, MemoryModel
+from repro.core.dispatch import (CADContext, assemble_step_outputs,
+                                 build_server_inputs, serve_task_batch,
+                                 stream_task_batch)
+from repro.core.scheduler import (assignment_resident_bytes,
+                                  layout_from_segments,
+                                  streamed_doc_ids)
+from repro.runtime.recovery import build_recovery_plan
+
+BLK = 16
+COMM = CommModel(n_heads=2, head_dim=16, n_kv_heads=2)
+MEM = MemoryModel(COMM)
+
+
+def _segs_one_long_doc(n_ranks=4, nb=8):
+    """Rank 0: one doc spanning all blocks; ranks 1+: one 1-block doc."""
+    segs = np.zeros((n_ranks, nb * BLK), np.int64)
+    segs[0, :] = 1
+    for r in range(1, n_ranks):
+        segs[r, :BLK] = 10 * r + 1
+    return segs
+
+
+def _cfg(n_ranks=4, nb=8, **kw):
+    return CADConfig.default(n_ranks, nb * BLK, blk=BLK, **kw)
+
+
+def _resident_of(cfg, res, segs, *, stream_chunk=0):
+    docs, doc_of, bi_of = layout_from_segments(segs, cfg.blk,
+                                               cfg.n_servers)
+    return assignment_resident_bytes(res.assign, doc_of, bi_of, cfg.blk,
+                                     cfg.n_servers, MEM,
+                                     streamed=res.streamed,
+                                     stream_chunk=stream_chunk)
+
+
+# ---------------------------------------------------------------- budgets
+def test_exact_budget_fit():
+    """Budgets equal to the identity layout's resident bytes (zero
+    slack) must plan, not raise — the boundary is inclusive."""
+    segs = _segs_one_long_doc()
+    cfg0 = _cfg()
+    ident = get_planner("identity")(cfg0, segs, comm=COMM,
+                                    mem_model=MEM)
+    exact = tuple(float(b) for b in ident.resident_bytes)
+    cfg = _cfg(server_hbm=exact)
+    res = get_planner("identity")(cfg, segs, comm=COMM)
+    np.testing.assert_allclose(np.asarray(res.resident_bytes), exact)
+    assert res.stats["peak_resident_bytes"] == max(exact)
+    assert res.stats["resident_max_over_mean"] >= 1.0
+
+
+def test_oversized_task_streams_instead_of_failing():
+    """A doc whose final task (one q block + full kv prefix) exceeds
+    every endpoint's budget streams; the plan completes within budget
+    with the doc's kv clamped to the chunk."""
+    segs = _segs_one_long_doc()
+    nb = 8
+    final_task = MEM.task_bytes(BLK, nb * BLK)
+    budget = 0.7 * final_task                # no endpoint can hold it
+    cfg = _cfg(server_hbm=(budget,) * 4, stream_chunk=2)
+    res = get_planner("balanced")(cfg, segs, comm=COMM, tolerance=0.05)
+    assert res.streamed == (0,)              # the long doc, id order 0
+    resident = np.asarray(res.resident_bytes)
+    assert (resident <= budget + 1e-9).all()
+    np.testing.assert_allclose(
+        resident, _resident_of(cfg, res, segs, stream_chunk=2))
+
+
+def test_oversized_task_without_streaming_raises():
+    segs = _segs_one_long_doc()
+    budget = 0.7 * MEM.task_bytes(BLK, 8 * BLK)
+    cfg = _cfg(server_hbm=(budget,) * 4)     # stream_chunk = 0
+    with pytest.raises(PlanMemoryError) as ei:
+        get_planner("balanced")(cfg, segs, comm=COMM, tolerance=0.05)
+    assert ei.value.resident_bytes > ei.value.budget_bytes
+    assert "stream" in str(ei.value)
+
+
+def test_heterogeneous_budgets_and_speeds():
+    """A fast server attracts work for time balance but its small
+    budget caps what it may hold; slower servers with room absorb the
+    spill.  Both constraints hold simultaneously."""
+    segs = _segs_one_long_doc()
+    speeds = (1.0, 1.0, 1.0, 4.0)
+    cfg0 = _cfg(server_speeds=speeds)
+    free = get_planner("balanced")(cfg0, segs, comm=COMM,
+                                   tolerance=0.05, mem_model=MEM)
+    resident0 = np.asarray(free.resident_bytes)
+    # the fast server's unconstrained residency becomes its ceiling cut
+    hbm = tuple(1e9 if s != 3 else 0.7 * resident0[3]
+                for s in range(4))
+    cfg = _cfg(server_speeds=speeds, server_hbm=hbm, stream_chunk=2)
+    res = get_planner("balanced")(cfg, segs, comm=COMM, tolerance=0.05)
+    resident = np.asarray(res.resident_bytes)
+    assert (resident <= np.asarray(hbm) + 1e-9).all()
+    assert resident0[3] > hbm[3]             # the cut actually binds
+    assert res.loads.max() > 0
+    np.testing.assert_allclose(
+        resident, _resident_of(cfg, res, segs,
+                               stream_chunk=cfg.stream_chunk))
+
+
+def test_fixed_layout_over_budget_raises_with_hint():
+    segs = _segs_one_long_doc()
+    cfg0 = _cfg()
+    ident = get_planner("identity")(cfg0, segs, comm=COMM,
+                                    mem_model=MEM)
+    # above the oversized doc's final-task bytes (so nothing needs to
+    # stream) yet below the identity layout's residency on rank 0
+    tight = tuple(0.6 * float(b) if b > 0 else 1.0
+                  for b in ident.resident_bytes)
+    assert max(tight) > MEM.task_bytes(BLK, 8 * BLK)
+    cfg = _cfg(server_hbm=tight)
+    with pytest.raises(PlanMemoryError, match="fixed layout"):
+        get_planner("identity")(cfg, segs, comm=COMM)
+
+
+def test_streamed_doc_ids_scope():
+    segs = _segs_one_long_doc()
+    docs, _doc_of, _bi = layout_from_segments(segs, BLK, 4)
+    budgets = np.full(4, 0.7 * MEM.task_bytes(BLK, 8 * BLK))
+    assert streamed_doc_ids(docs, BLK, MEM, budgets,
+                            stream_chunk=2) == (0,)
+    # one roomy endpoint in the pool -> nothing needs to stream
+    budgets[2] = 1e9
+    assert streamed_doc_ids(docs, BLK, MEM, budgets,
+                            stream_chunk=2) == ()
+    # ... unless that endpoint is not in the allowed set
+    assert streamed_doc_ids(docs, BLK, MEM, budgets, stream_chunk=2,
+                            allowed=(0, 1, 3)) == (0,)
+
+
+# -------------------------------------------------------------- streaming
+@pytest.mark.parametrize("chunk", [1, 2, 3, 5, 8])
+def test_stream_serve_bit_identical(chunk):
+    """Chunked kv streaming partitions the flash scan; outputs must be
+    bit-identical to the unstreamed path for every chunk size,
+    including ragged final chunks."""
+    segs = _segs_one_long_doc(n_ranks=2, nb=4)
+    cfg = _cfg(n_ranks=2, nb=4)
+    res = get_planner("balanced")(cfg, segs, comm=COMM, tolerance=0.05)
+    D, s_len = segs.shape
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(kq, (D, s_len, 2, 16), jnp.float32)
+    k = jax.random.normal(kk, (D, s_len, 2, 16), jnp.float32)
+    v = jax.random.normal(kv, (D, s_len, 2, 16), jnp.float32)
+    pos = jnp.asarray(np.where(segs > 0, np.arange(s_len)[None, :],
+                               -1).astype(np.int32))
+    cad = CADContext(cfg=cfg, kernel="xla")
+    inputs, plans_r = build_server_inputs(cad, res.plan, q, k, v, pos)
+    for s in range(D):
+        plain = np.asarray(serve_task_batch(cad, inputs[s], plans_r[s]))
+        streamed = np.asarray(serve_task_batch(
+            cad, inputs[s], plans_r[s], stream_chunk=chunk))
+        assert plain.tobytes() == streamed.tobytes(), \
+            f"server {s} chunk {chunk} not bit-identical"
+
+
+def test_stream_via_config_and_explicit_call():
+    """``cfg.stream_chunk`` turns on streaming for the whole dispatch
+    path; ``stream_task_batch`` is the explicit entry and rejects a
+    zero chunk."""
+    segs = _segs_one_long_doc(n_ranks=2, nb=4)
+    cfg = _cfg(n_ranks=2, nb=4)
+    res = get_planner("balanced")(cfg, segs, comm=COMM, tolerance=0.05)
+    cfg_s = dataclasses.replace(cfg, stream_chunk=3)
+    D, s_len = segs.shape
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(kq, (D, s_len, 2, 16), jnp.float32)
+    k = jax.random.normal(kk, (D, s_len, 2, 16), jnp.float32)
+    v = jax.random.normal(kv, (D, s_len, 2, 16), jnp.float32)
+    pos = jnp.asarray(np.where(segs > 0, np.arange(s_len)[None, :],
+                               -1).astype(np.int32))
+    cad0 = CADContext(cfg=cfg, kernel="xla")
+    cad1 = CADContext(cfg=cfg_s, kernel="xla")
+    inputs, plans_r = build_server_inputs(cad0, res.plan, q, k, v, pos)
+    outs0 = {s: serve_task_batch(cad0, inputs[s], plans_r[s])
+             for s in range(D)}
+    outs1 = {s: serve_task_batch(cad1, inputs[s], plans_r[s])
+             for s in range(D)}
+    outs2 = {s: stream_task_batch(cad0, inputs[s], plans_r[s],
+                                  chunk_blocks=3) for s in range(D)}
+    a = np.asarray(assemble_step_outputs(cfg, res.plan, outs0, q.shape,
+                                         q.dtype))
+    b = np.asarray(assemble_step_outputs(cfg_s, res.plan, outs1,
+                                         q.shape, q.dtype))
+    c = np.asarray(assemble_step_outputs(cfg, res.plan, outs2, q.shape,
+                                         q.dtype))
+    assert a.tobytes() == b.tobytes() == c.tobytes()
+    with pytest.raises(ValueError, match="chunk"):
+        stream_task_batch(cad0, inputs[0], plans_r[0], chunk_blocks=0)
+
+
+# --------------------------------------------------------------- recovery
+def test_recovery_prefers_survivor_with_headroom():
+    """Budget-aware recovery: a survivor already at its HBM ceiling is
+    skipped; the lost run lands on the survivor with room even when it
+    is the more loaded one."""
+    segs = _segs_one_long_doc(n_ranks=3, nb=4)
+    cfg = _cfg(n_ranks=3, nb=4)
+    res = get_planner("balanced")(cfg, segs, comm=COMM, tolerance=0.05)
+    budgets = np.full(3, 1e9)
+    # survivor 1 is declared full; survivor 2 idle-but-roomy
+    rec = build_recovery_plan(
+        cfg, segs, res.plan, [0], allowed=[1, 2],
+        base_loads={1: 0.0, 2: 1e6}, mem_model=MEM, budgets=budgets,
+        base_resident={1: 1e9, 2: 0.0})
+    assert rec is not None
+    moved_to = set(int(s) for s in rec.assign[rec.lost])
+    assert moved_to == {2}
+    # without budgets the same loads send everything to survivor 1
+    rec0 = build_recovery_plan(cfg, segs, res.plan, [0],
+                               allowed=[1, 2],
+                               base_loads={1: 0.0, 2: 1e6})
+    assert set(int(s) for s in rec0.assign[rec0.lost]) == {1}
+
+
+def test_recovery_never_drops_when_nothing_fits():
+    """When no survivor has budget headroom the least-loaded one takes
+    the run anyway (streaming bounds the hardware residency) — a lost
+    task is never dropped for memory."""
+    segs = _segs_one_long_doc(n_ranks=3, nb=4)
+    cfg = _cfg(n_ranks=3, nb=4, stream_chunk=1)
+    res = get_planner("balanced")(cfg, segs, comm=COMM, tolerance=0.05)
+    rec = build_recovery_plan(
+        cfg, segs, res.plan, [0], allowed=[1, 2],
+        base_loads={1: 0.0, 2: 5.0}, mem_model=MEM,
+        budgets=np.full(3, 1.0), base_resident={1: 0.0, 2: 0.0},
+        stream_chunk=1)
+    assert rec is not None and rec.n_blocks > 0
+
+
+# ------------------------------------------------------------ validation
+@pytest.mark.parametrize("field", ["server_speeds", "server_hbm"])
+def test_per_server_list_reports_index_and_value(field):
+    bad = (1.0, -2.5, 1.0)
+    with pytest.raises(ValueError) as ei:
+        CADConfig(n_servers=3, blk=BLK, nb=4, cq=4, ckv=8, nkv=16,
+                  **{field: bad})
+    msg = str(ei.value)
+    assert f"{field}[1]" in msg              # the index
+    assert "-2.5" in msg                     # the offending value
+    with pytest.raises(ValueError, match="needs 3 entries, got 2"):
+        CADConfig(n_servers=3, blk=BLK, nb=4, cq=4, ckv=8, nkv=16,
+                  **{field: (1.0, 1.0)})
+
+
+def test_nan_budget_rejected():
+    with pytest.raises(ValueError, match=r"server_hbm\[0\]"):
+        CADConfig(n_servers=2, blk=BLK, nb=4, cq=4, ckv=8, nkv=16,
+                  server_hbm=(float("nan"), 1.0))
+
+
+def test_config_accessors_and_session_threading():
+    cfg = _cfg(n_ranks=2, nb=4, server_hbm=(100.0, 200.0),
+               stream_chunk=3)
+    np.testing.assert_allclose(cfg.budgets(), [100.0, 200.0])
+    assert _cfg(n_ranks=2, nb=4).budgets() is None
+    assert cfg.stream_chunk == 3
+    with pytest.raises(ValueError, match="stream_chunk"):
+        _cfg(n_ranks=2, nb=4, stream_chunk=-1)
+
+    import types
+    heads = types.SimpleNamespace(n_heads=2, head_dim=16, n_kv_heads=2)
+    pipe = types.SimpleNamespace(n_ranks=2, global_batch=2, seq_len=64,
+                                 max_doc_len=64)
+    session = CADSession.for_pipeline(heads, pipe,
+                                      server_hbm=(1e6, 2e6),
+                                      stream_chunk=4)
+    np.testing.assert_allclose(session.cfg.budgets(), [1e6, 2e6])
+    assert session.cfg.stream_chunk == 4

@@ -24,11 +24,12 @@ one scenario generator through the tiny ``Sampler`` interface below.
 import numpy as np
 import pytest
 
-from repro.cad import (CADConfig, PlanCapacityError, available_policies,
-                       get_planner)
-from repro.core.cost_model import CostModel
+from repro.cad import (CADConfig, PlanCapacityError, PlanMemoryError,
+                       available_policies, get_planner)
+from repro.core.cost_model import CommModel, CostModel, MemoryModel
 from repro.core.plan import identity_assignment, plan_from_assignment
-from repro.core.scheduler import block_costs, layout_from_segments
+from repro.core.scheduler import (assignment_resident_bytes, block_costs,
+                                  layout_from_segments)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -382,6 +383,47 @@ def test_membership_subset_invariant(s):
 def run_policy_excl(policy, cfg, segs, cost_model, tolerance, exclude):
     return get_planner(policy)(cfg, segs, comm=None, tolerance=tolerance,
                                cost_model=cost_model, exclude=exclude)
+
+
+@property_case
+def test_memory_budget_invariant(s):
+    """HBM budgets (DESIGN.md §11): every successful plan's resident
+    bytes fit the budget on every server (streamed docs clamped to the
+    chunk), the reported residency matches an independent recompute,
+    coverage still holds, and infeasible builds raise PlanMemoryError
+    with over-budget diagnostics — never a silent overflow."""
+    cfg, segs, cm, tol = gen_scenario(s)
+    policy = s.choice(POLICIES)
+    mem = MemoryModel(CommModel(2, 8, 2))
+    base = get_planner(policy)(cfg, segs, comm=None, tolerance=tol,
+                               cost_model=cm, mem_model=mem)
+    resident0 = np.asarray(base.resident_bytes, np.float64)
+    if resident0.max() <= 0:
+        return                               # all-padding batch
+    factor = s.choice([1.0, 0.8, 0.6])
+    budgets = np.full(cfg.n_servers, factor * resident0.max())
+    chunk = s.choice([0, 1, 2])
+    try:
+        res = get_planner(policy)(cfg, segs, comm=None, tolerance=tol,
+                                  cost_model=cm, mem_model=mem,
+                                  budgets=budgets, stream_chunk=chunk)
+    except PlanMemoryError as e:
+        assert e.resident_bytes > e.budget_bytes >= 0
+        assert "resident bytes" in str(e)
+        return
+    docs, doc_of, bi_of = layout_from_segments(segs, cfg.blk,
+                                               cfg.n_servers)
+    rec = assignment_resident_bytes(res.assign, doc_of, bi_of, cfg.blk,
+                                    cfg.n_servers, mem,
+                                    streamed=res.streamed,
+                                    stream_chunk=chunk)
+    np.testing.assert_allclose(np.asarray(res.resident_bytes), rec,
+                               rtol=1e-9)
+    assert (np.asarray(res.resident_bytes) <= budgets + 1e-9).all(), \
+        (policy, res.resident_bytes, budgets)
+    served, dupes = plan_served_blocks(cfg, res.plan)
+    assert not dupes
+    assert len(served) == int((doc_of >= 0).sum())
 
 
 @property_case
