@@ -26,6 +26,11 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py format).
                                     cadence; serve throughput ratio,
                                     train bit-identity, kill-mid-decode
                                     recovery of both tenants
+  sparse_balance        DESIGN §12 — mask-structured task shapes: on a
+                                    doc-masked (sliding+sink) workload,
+                                    live-block-priced planning reaches
+                                    <=1.1 compute max/mean where
+                                    area-priced planning exceeds 1.4
   memory_pressure       DESIGN §11 — memory-aware planning + chunked KV
                                     streaming: a workload whose kv
                                     prefix overflows any endpoint
@@ -152,6 +157,8 @@ GATE_RULES = (
      "lower", 0.15, False),
     (r"^prefetch\.sync_over_async$", "higher", 0.40, False),
     (r"^serve\.prefill_speedup_vs_loop$", "higher", 0.50, False),
+    (r"^sparse\.live_max_over_mean$", "lower", 0.15, False),
+    (r"^sparse\.area_max_over_mean$", "higher", 0.15, False),
     (r"^memory\.resident_max_over_mean$", "lower", 0.15, False),
     (r"^memory\.curve\.\d+\.resident_max_over_mean$",
      "lower", 0.15, False),
@@ -250,8 +257,8 @@ def main() -> None:
                             elastic_recovery, fabric_mix, imbalance,
                             kernel_throughput, memory_pressure, overlap,
                             pp_bubbles, serve_throughput,
-                            straggler_elim, table1_scaling,
-                            tolerance_sweep)
+                            sparse_balance, straggler_elim,
+                            table1_scaling, tolerance_sweep)
     benches = {
         "table1": table1_scaling.main,
         "fig3": cp_overheads.main,
@@ -270,13 +277,14 @@ def main() -> None:
         "elastic": lambda: elastic_recovery.main(fast=args.fast),
         "fabric": lambda: fabric_mix.main(fast=args.fast),
         "memory": lambda: memory_pressure.main(fast=args.fast),
+        "sparse": lambda: sparse_balance.main(fast=args.fast),
     }
     # the machine-readable subset: kernel fwd/bwd, plan imbalance,
     # prefetch overlap, straggler elimination, serve throughput,
     # elastic recovery, fabric mix, memory pressure — the CI perf
     # trajectory
     json_keys = ("fig5", "kernel_bwd", "fig4", "prefetch", "straggler",
-                 "serve", "elastic", "fabric", "memory")
+                 "serve", "elastic", "fabric", "memory", "sparse")
     results, failed = {}, 0
     for name, fn in benches.items():
         if args.only and name != args.only:

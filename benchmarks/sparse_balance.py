@@ -1,0 +1,130 @@
+"""Sparse balance: live-block pricing on mask-structured workloads.
+
+The acceptance experiment for mask-aware planning (DESIGN.md §12).  The
+workload is doc-masked long-context training in miniature: rank 0 packs
+one document spanning its whole token span under a sliding-window +
+sink mask, the other ranks are nearly idle.  Under the mask, the deep
+q-blocks of the long document are *cheap* — each sees only a
+window-bounded band of kv — but their dense-causal rectangle area still
+grows linearly with depth.
+
+  * **identity is imbalanced**: with no balancing, rank 0 holds all
+    the live-block compute — max/mean is ~n_ranks;
+  * **area pricing balances the wrong number**: the balanced planner
+    run *without* the mask equalizes rectangle area, so it exports a
+    few deep (area-heavy, mask-cheap) blocks and keeps the many
+    shallow ones — measured in live blocks, the split exceeds 1.4
+    max/mean;
+  * **live-block pricing balances the real compute**: the same planner
+    with the mask prices every block by its live kv band and splits
+    along the mask structure — measured live-block max/mean <= 1.1.
+
+All three plans are re-priced by one independent live-block recompute
+(``block_costs`` with the mask), so the comparison measures what the
+kernels will actually execute, not what each planner believed.
+
+Emits ``sparse_balance,<us>,...`` CSV rows and returns the
+machine-readable dict wired into ``benchmarks/run.py --json`` under
+``"sparse"``.
+"""
+import time
+
+import numpy as np
+
+from repro.cad.planner import get_planner
+from repro.core.mask import MaskSpec
+from repro.core.plan import CADConfig
+from repro.core.scheduler import block_costs, layout_from_segments
+
+
+def _segs(n_ranks: int, nb: int, blk: int) -> np.ndarray:
+    """Rank 0: one document spanning all ``nb`` blocks.  Every other
+    rank: a single one-block document, rest padding."""
+    segs = np.zeros((n_ranks, nb * blk), np.int64)
+    segs[0, :] = 1
+    for r in range(1, n_ranks):
+        segs[r, :blk] = 10 * r + 1
+    return segs
+
+
+def _live_loads(res, segs, blk, n_ranks, spec) -> np.ndarray:
+    """Per-server compute under the TRUE live-block pricing, whatever
+    pricing the planner itself used."""
+    _docs, doc_of, bi_of = layout_from_segments(segs, blk, n_ranks)
+    cost = block_costs(doc_of, bi_of, blk, None, spec)
+    live = doc_of >= 0
+    loads = np.zeros(n_ranks)
+    np.add.at(loads, np.asarray(res.assign)[live].astype(np.int64),
+              cost[live])
+    return loads
+
+
+def _ratio(loads) -> float:
+    loads = np.asarray(loads, np.float64)
+    return float(loads.max() / max(loads.mean(), 1e-30))
+
+
+def run(n_ranks=4, nb=96, blk=16, window_blocks=2, sink_blocks=1,
+        tolerance=0.05):
+    spec = MaskSpec(kind="sliding", window=window_blocks * blk,
+                    sink=sink_blocks * blk)
+    segs = _segs(n_ranks, nb, blk)
+    cfg = CADConfig(n_servers=n_ranks, blk=blk, nb=nb, cq=nb,
+                    ckv=2 * nb, nkv=4 * nb)
+    planner = get_planner("balanced")
+
+    plans, times = {}, {}
+    t0 = time.perf_counter()
+    plans["identity"] = get_planner("identity")(
+        cfg, segs, comm=None, tolerance=tolerance, mask=spec)
+    times["identity"] = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    # area pricing: the balanced planner with the mask withheld — it
+    # equalizes dense-causal rectangle area on a masked workload
+    plans["area"] = planner(cfg, segs, comm=None, tolerance=tolerance)
+    times["area"] = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    plans["live"] = planner(cfg, segs, comm=None, tolerance=tolerance,
+                            mask=spec)
+    times["live"] = (time.perf_counter() - t0) * 1e6
+
+    ratios = {name: _ratio(_live_loads(res, segs, cfg.blk, n_ranks,
+                                       spec))
+              for name, res in plans.items()}
+    return {
+        "n_ranks": n_ranks,
+        "blocks_per_rank": nb,
+        "mask": spec.describe(),
+        "identity_max_over_mean": ratios["identity"],
+        "area_max_over_mean": ratios["area"],
+        "live_max_over_mean": ratios["live"],
+        "area_exceeds_1_4": bool(ratios["area"] > 1.4),
+        "live_within_1_1": bool(ratios["live"] <= 1.1),
+        "moves_live": int(plans["live"].stats["n_moves"]),
+        "plan_us": times,
+    }
+
+
+def main(fast=False):
+    # planning-only (no kernels): nb=96 runs in ~1 ms, so fast mode
+    # keeps the full acceptance geometry
+    r = run()
+    ok = r["area_exceeds_1_4"] and r["live_within_1_1"] \
+        and r["identity_max_over_mean"] >= r["area_max_over_mean"]
+    for name in ("identity", "area", "live"):
+        print(f"sparse_balance,{r['plan_us'][name]:.1f},"
+              f"policy={name};mask={r['mask']};"
+              f"live_max_over_mean={r[name + '_max_over_mean']:.3f};"
+              f"ranks={r['n_ranks']};blocks={r['blocks_per_rank']}")
+    print(f"sparse_balance,0.0,phase=verdict;"
+          f"area={r['area_max_over_mean']:.3f}(>1.4:"
+          f"{r['area_exceeds_1_4']});"
+          f"live={r['live_max_over_mean']:.3f}(<=1.1:"
+          f"{r['live_within_1_1']});ok={ok}")
+    if not ok:
+        raise RuntimeError(f"sparse balance acceptance failed: {r}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

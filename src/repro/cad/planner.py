@@ -33,6 +33,13 @@ across policies on a heterogeneous pool; ``balanced`` additionally
 balances against per-server capacity, giving a 0.5x server half the
 FLOPs.
 
+Mask-structured tasks (DESIGN.md §12): every policy accepts ``mask`` —
+a :class:`~repro.core.mask.MaskSpec` that reprices q-blocks by their
+*live* kv blocks.  ``balanced`` then splits documents along the mask
+structure (per-server live-block time balances instead of rectangle
+area); the fixed layouts report honestly-masked loads so policy
+comparisons under sparse masks stay meaningful.
+
 Elastic membership (DESIGN.md §9): every policy accepts ``exclude`` — a
 set of servers (drained or dead pool members) that must not hold CA
 tasks.  Documents homed on an excluded server are evacuated to the
@@ -47,6 +54,7 @@ from typing import Callable, Dict, Iterable, Optional, Tuple
 import numpy as np
 
 from repro.core.cost_model import CommModel, CostModel, MemoryModel
+from repro.core.mask import MaskSpec
 from repro.core.plan import CADConfig, PlanMemoryError, StepPlan, \
     head_tail_assignment, identity_assignment, plan_from_assignment
 from repro.core.scheduler import assignment_resident_bytes, block_costs, \
@@ -75,7 +83,8 @@ class PlanResult:
 
 # planner signature:
 #   (cfg, segment_ids, *, comm, tolerance, build_plan, cost_model,
-#    speeds) -> PlanResult
+#    speeds, exclude, mem_model, budgets, stream_chunk, mask)
+#   -> PlanResult
 Planner = Callable[..., PlanResult]
 
 _PLANNERS: Dict[str, Planner] = {}
@@ -123,8 +132,9 @@ def _evacuate_whole_docs(assign: np.ndarray, docs,
 def _loads_of(assign: np.ndarray, doc_of: np.ndarray, bi_of: np.ndarray,
               blk: int, n_servers: int,
               cost_model: Optional[CostModel] = None,
-              speeds: Optional[np.ndarray] = None) -> np.ndarray:
-    cost = block_costs(doc_of, bi_of, blk, cost_model)
+              speeds: Optional[np.ndarray] = None,
+              mask: Optional[MaskSpec] = None) -> np.ndarray:
+    cost = block_costs(doc_of, bi_of, blk, cost_model, mask)
     loads = np.zeros(n_servers)
     live = doc_of >= 0
     np.add.at(loads, assign[live].astype(np.int64), cost[live])
@@ -223,7 +233,8 @@ def identity_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
                      exclude: Optional[Iterable[int]] = None,
                      mem_model: Optional[MemoryModel] = None,
                      budgets: Optional[np.ndarray] = None,
-                     stream_chunk: Optional[int] = None) -> PlanResult:
+                     stream_chunk: Optional[int] = None,
+                     mask: Optional[MaskSpec] = None) -> PlanResult:
     docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
                                                cfg.n_servers)
     exclude = check_exclude(exclude, cfg.n_servers)
@@ -243,7 +254,7 @@ def identity_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
     plan = plan_from_assignment(cfg, assign, doc_of, bi_of, docs) \
         if build_plan else None
     loads = _loads_of(assign, doc_of, bi_of, cfg.blk, cfg.n_servers,
-                      cost_model, _resolve_speeds(cfg, speeds))
+                      cost_model, _resolve_speeds(cfg, speeds), mask)
     return PlanResult(plan=plan, assign=assign, loads=loads,
                       stats=_stats(loads, _migration_bytes(
                           cfg, assign, docs, doc_of, bi_of, comm)
@@ -262,7 +273,8 @@ def per_doc_cp_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
                        exclude: Optional[Iterable[int]] = None,
                        mem_model: Optional[MemoryModel] = None,
                        budgets: Optional[np.ndarray] = None,
-                       stream_chunk: Optional[int] = None) \
+                       stream_chunk: Optional[int] = None,
+                       mask: Optional[MaskSpec] = None) \
         -> PlanResult:
     """Head-tail per-document CP (paper §2.2 as a special-case plan).
     The dealing order is the paper's fixed head-tail pairing — speed-
@@ -283,7 +295,7 @@ def per_doc_cp_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
     plan = plan_from_assignment(cfg, assign, doc_of, bi_of, docs) \
         if build_plan else None
     loads = _loads_of(assign, doc_of, bi_of, cfg.blk, cfg.n_servers,
-                      cost_model, _resolve_speeds(cfg, speeds))
+                      cost_model, _resolve_speeds(cfg, speeds), mask)
     n_moves = int((assign != identity_assignment(cfg)).sum())
     return PlanResult(
         plan=plan, assign=assign, loads=loads,
@@ -303,7 +315,8 @@ def balanced_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
                      exclude: Optional[Iterable[int]] = None,
                      mem_model: Optional[MemoryModel] = None,
                      budgets: Optional[np.ndarray] = None,
-                     stream_chunk: Optional[int] = None) \
+                     stream_chunk: Optional[int] = None,
+                     mask: Optional[MaskSpec] = None) \
         -> PlanResult:
     """The paper's communication-aware greedy scheduler (§4.2), balancing
     modeled time across per-server capacities (calibrated cost model +
@@ -321,7 +334,8 @@ def balanced_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
                    comm=comm, caps=cfg.caps(), tolerance=tolerance,
                    speeds=_resolve_speeds(cfg, speeds),
                    cost_model=cost_model, exclude=exclude,
-                   mem_model=mem, budgets=budgets, stream_chunk=chunk)
+                   mem_model=mem, budgets=budgets, stream_chunk=chunk,
+                   mask=mask)
     plan = plan_from_assignment(cfg, sch.assign, sch.doc_of_block,
                                 sch.bi_of_block, sch.docs) \
         if build_plan else None

@@ -46,6 +46,7 @@ from repro.core.cost_model import (CalibrationSnapshot, CommModel,
                                    CostModel, GridCalibrator)
 from repro.core.dispatch import CADContext, iter_plan_tasks, \
     probe_plan_times
+from repro.core.mask import MaskSpec, parse_mask, validate_mask_layout
 from repro.core.plan import CADConfig, PingPongPlan, StepPlan
 from repro.parallel import ParallelContext, ShardingRules
 
@@ -78,6 +79,8 @@ class CADSession:
                                       # prefetched (stale) plan at pull
     pool: Any = None               # ServerPool: elastic membership; like
                                    # the calibrator, mutable shared state
+    mask: Optional[MaskSpec] = None   # task shape beyond dense causal
+                                      # (DESIGN.md §12); None = causal
 
     # ------------------------------------------------------- constructors
     @classmethod
@@ -87,7 +90,9 @@ class CADSession:
                      prefetch: int = 2, server_speeds=None,
                      server_hbm=None, stream_chunk: int = 0,
                      calibrate: bool = False,
-                     calib_ema: float = 0.5) -> "CADSession":
+                     calib_ema: float = 0.5,
+                     mask: Union[MaskSpec, str, None] = None) \
+            -> "CADSession":
         """Size the attention-server pool for a training pipeline.
 
         ``pipe_cfg`` needs ``n_ranks``, ``global_batch``, ``seq_len`` and
@@ -102,7 +107,13 @@ class CADSession:
         (DESIGN.md §11): planning then treats memory as a second
         constraint next to modeled time, and ``stream_chunk`` (kv
         blocks) lets dispatch serve tasks whose kv prefix exceeds
-        every budget by streaming the prefix chunkwise."""
+        every budget by streaming the prefix chunkwise.
+
+        ``mask`` names the step's task shape beyond dense causal
+        (DESIGN.md §12) — a :class:`~repro.core.mask.MaskSpec` or a
+        ``--mask`` flag string (``sliding:window=256,sink=16``,
+        ``dilated:rate=4``); planning prices tasks by live blocks and
+        the dispatch kernels apply the matching in-block mask."""
         n = pipe_cfg.n_ranks
         rows_per_rank = pipe_cfg.global_batch // n
         tokens_per_rank = rows_per_rank * pipe_cfg.seq_len
@@ -127,17 +138,22 @@ class CADSession:
                 CostModel.analytic(n_heads, head_dim), n,
                 ema=calib_ema, prior_speeds=cadcfg.speeds())
         jmax = max(1, pipe_cfg.max_doc_len // cadcfg.blk)
+        if isinstance(mask, str):
+            mask = parse_mask(mask)
+        if mask is not None and mask.trivial:
+            mask = None
         return cls(cfg=cadcfg, kernel=kernel, pingpong=pingpong,
                    tolerance=tolerance, plan_policy=plan_policy,
                    jmax=jmax, comm=comm, mesh=mesh, rules=rules,
-                   prefetch=prefetch, calibrator=calibrator)
+                   prefetch=prefetch, calibrator=calibrator, mask=mask)
 
     # ------------------------------------------------------------ context
     def context(self, *, remat: bool = True) -> ParallelContext:
         """The ParallelContext consumers jit against.  Plans are bound per
         step by the train step (``CADContext.bind_plan``)."""
         cad = CADContext(cfg=self.cfg, kernel=self.kernel, bwd=self.bwd,
-                         jmax=self.jmax, pingpong=self.pingpong)
+                         jmax=self.jmax, pingpong=self.pingpong,
+                         mask=self.mask)
         return ParallelContext(mesh=self.mesh,
                                rules=self.rules or ShardingRules(),
                                attn_impl="cad", cad=cad, remat=remat,
@@ -254,7 +270,10 @@ class CADSession:
             else [plan]
         by_server: Dict[int, list] = {}
         for p in halves:
-            for s, _slot, qt, kvt in iter_plan_tasks(self.cfg, p):
+            # masked tasks key the calibrator by *live* kv tokens, the
+            # same unit the planners price them in (DESIGN.md §12)
+            for s, _slot, qt, kvt in iter_plan_tasks(self.cfg, p,
+                                                     mask=self.mask):
                 by_server.setdefault(s, []).append((qt, kvt))
         if not isinstance(per_server_seconds, dict):
             per_server_seconds = dict(enumerate(per_server_seconds))
@@ -281,7 +300,7 @@ class CADSession:
             cfg = self.cfg if nb == self.cfg.nb \
                 else dataclasses.replace(self.cfg, nb=nb)
             cad = CADContext(cfg=cfg, kernel=self.kernel, bwd=self.bwd,
-                             jmax=self.jmax)
+                             jmax=self.jmax, mask=self.mask)
             for s, tasks, seconds in probe_plan_times(
                     cad, p, n_heads=comm.n_heads, head_dim=comm.head_dim,
                     n_kv_heads=comm.n_kv_heads, seed=seed,
@@ -298,9 +317,15 @@ class CADSession:
         stats as ``calib_version`` (+ the per-server speeds used)."""
         segs = np.asarray(segment_ids)
         planner = get_planner(self.plan_policy)
+        if self.mask is not None:
+            # fail at planning time with the offending segment/task
+            # named (MaskSpecError), not as a shape error in a kernel
+            validate_mask_layout(self.mask, segs, self.cfg.blk)
         snap = self._snapshot()
         view = self._pool_view()
         kw = self._planner_kwargs(snap)
+        if self.mask is not None:
+            kw["mask"] = self.mask
         if view is not None:
             # ONE membership view per step: both ping-pong halves plan
             # against the same surviving-endpoint set, and the epoch is
@@ -388,10 +413,17 @@ class CADSession:
                     pingpong: bool = False, tolerance: float = 0.1,
                     plan_policy: str = "balanced",
                     comm: Optional[CommModel] = None,
-                    jmax: int = 0) -> "CADSession":
+                    jmax: int = 0,
+                    mask: Union[MaskSpec, str, None] = None) \
+            -> "CADSession":
         """Wrap a bare CADConfig + loose knobs into a session — for
         callers that size the pool geometry themselves rather than
         deriving it from a pipeline config."""
+        if isinstance(mask, str):
+            mask = parse_mask(mask)
+        if mask is not None and mask.trivial:
+            mask = None
         return cls(cfg=cad_cfg, kernel=kernel, pingpong=pingpong,
                    tolerance=tolerance, plan_policy=plan_policy, comm=comm,
-                   jmax=jmax or max(1, cad_cfg.nkv), prefetch=0)
+                   jmax=jmax or max(1, cad_cfg.nkv), prefetch=0,
+                   mask=mask)

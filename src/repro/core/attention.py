@@ -39,15 +39,29 @@ def _softcap(x, cap: float):
     return x
 
 
-def mask_fn(seg_q, pos_q, seg_kv, pos_kv, *, causal: bool, window: int):
-    """Boolean mask [.., Sq, Skv]: True = may attend."""
+def mask_fn(seg_q, pos_q, seg_kv, pos_kv, *, causal: bool, window: int,
+            sink: int = 0, rate: int = 1, blk: int = 128):
+    """Boolean mask [.., Sq, Skv]: True = may attend.
+
+    ``sink``/``rate``/``blk`` are the unpacked static params of a
+    non-causal :class:`~repro.core.mask.MaskSpec` (DESIGN.md §12):
+    ``sink`` always-visible leading tokens widen the sliding window and
+    ``rate`` strides kv blocks of ``blk`` tokens for the dilated family.
+    Positions are in-document (packing restarts them per doc), which is
+    what makes both terms well-defined inside a packed chunk."""
     same = (seg_q[..., :, None] == seg_kv[..., None, :])
     valid = (seg_q[..., :, None] > 0) & (seg_kv[..., None, :] > 0)
     m = same & valid
     if causal:
         m &= pos_q[..., :, None] >= pos_kv[..., None, :]
     if window and window > 0:
-        m &= (pos_q[..., :, None] - pos_kv[..., None, :]) < window
+        w = (pos_q[..., :, None] - pos_kv[..., None, :]) < window
+        if sink and sink > 0:
+            w = w | (pos_kv[..., None, :] < sink)
+        m &= w
+    if rate and rate > 1:
+        m &= ((pos_q[..., :, None] // blk)
+              - (pos_kv[..., None, :] // blk)) % rate == 0
     return m
 
 
@@ -61,7 +75,8 @@ def _repeat_kv(k, n_rep: int):
 
 # --------------------------------------------------------------------- ref
 def ref_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
-                  window=0, softcap=0.0, scale: Optional[float] = None):
+                  window=0, sink=0, rate=1, blk=128, softcap=0.0,
+                  scale: Optional[float] = None):
     """O(Sq·Skv) materialized oracle."""
     hq, hkv = q.shape[2], k.shape[2]
     k = _repeat_kv(k, hq // hkv)
@@ -70,7 +85,8 @@ def ref_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
     logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
     logits = _softcap(logits, softcap)
-    m = mask_fn(seg_q, pos_q, seg_kv, pos_kv, causal=causal, window=window)
+    m = mask_fn(seg_q, pos_q, seg_kv, pos_kv, causal=causal, window=window,
+                sink=sink, rate=rate, blk=blk)
     logits = jnp.where(m[:, None, :, :], logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     # fully-masked rows (padding) -> zero output instead of uniform garbage
@@ -82,8 +98,8 @@ def ref_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
 
 # --------------------------------------------------------------------- xla
 def xla_flash_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *,
-                        causal=True, window=0, softcap=0.0,
-                        scale: Optional[float] = None,
+                        causal=True, window=0, sink=0, rate=1, blk=128,
+                        softcap=0.0, scale: Optional[float] = None,
                         q_block: int = 512, kv_block: int = 512,
                         skip_masked_blocks: bool = True, shard_hint=None):
     """Blockwise online-softmax attention in pure jnp/lax with a
@@ -101,7 +117,7 @@ def xla_flash_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *,
     """
     return _xla_flash(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal,
                       window, softcap, scale, q_block, kv_block,
-                      skip_masked_blocks, shard_hint)
+                      skip_masked_blocks, shard_hint, sink, rate, blk)
 
 
 def _hint_cons(x, shard_hint, dims):
@@ -129,13 +145,14 @@ def _hint_cons(x, shard_hint, dims):
         x, NamedSharding(mesh, PartitionSpec(*spec)))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=tuple(range(7, 15)))
+@functools.partial(jax.custom_vjp, nondiff_argnums=tuple(range(7, 18)))
 def _xla_flash(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal, window,
                softcap, scale, q_block, kv_block, skip_masked_blocks,
-               shard_hint):
+               shard_hint, sink=0, rate=1, blk=128):
     out, _ = _xla_flash_fwd_impl(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
                                  causal, window, softcap, scale, q_block,
-                                 kv_block, skip_masked_blocks, shard_hint)
+                                 kv_block, skip_masked_blocks, shard_hint,
+                                 sink, rate, blk)
     return out
 
 
@@ -179,18 +196,20 @@ def _prep_blocks(q, k, v, seg_q, pos_q, seg_kv, pos_kv, q_block, kv_block,
 
 
 def _pair_logits(qi, kj, sqi, pqi, skj, pkj, scale, softcap, causal,
-                 window):
+                 window, sink=0, rate=1, blk=128):
     """logits + mask for one (q-block, kv-block) pair."""
     logits = jnp.einsum("bqhd,bkhd->bhqk", qi.astype(jnp.float32),
                         kj.astype(jnp.float32)) * scale
     logits = _softcap(logits, softcap)
-    msk = mask_fn(sqi, pqi, skj, pkj, causal=causal, window=window)
+    msk = mask_fn(sqi, pqi, skj, pkj, causal=causal, window=window,
+                  sink=sink, rate=rate, blk=blk)
     return jnp.where(msk[:, None], logits, NEG_INF), msk
 
 
 def _xla_flash_fwd_impl(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal,
                         window, softcap, scale, q_block, kv_block,
-                        skip_masked_blocks, shard_hint=None):
+                        skip_masked_blocks, shard_hint=None, sink=0,
+                        rate=1, blk=128):
     hq, hkv = q.shape[2], k.shape[2]
     n_rep = hq // hkv
     dh = q.shape[-1]
@@ -224,7 +243,7 @@ def _xla_flash_fwd_impl(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal,
             jax.lax.dynamic_index_in_dim(pqb, i, 1, False),
             jax.lax.dynamic_index_in_dim(skb, j, 1, False),
             jax.lax.dynamic_index_in_dim(pkb, j, 1, False),
-            scale, softcap, causal, window)
+            scale, softcap, causal, window, sink, rate, blk)
         mi = jax.lax.dynamic_index_in_dim(m_acc, i, 1, False)
         li = jax.lax.dynamic_index_in_dim(l_acc, i, 1, False)
         oi = jax.lax.dynamic_index_in_dim(o_acc, i, 1, False)
@@ -252,15 +271,17 @@ def _xla_flash_fwd_impl(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal,
 
 def _xla_flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal, window,
                    softcap, scale, q_block, kv_block, skip_masked_blocks,
-                   shard_hint):
+                   shard_hint, sink=0, rate=1, blk=128):
     out, lse = _xla_flash_fwd_impl(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
                                    causal, window, softcap, scale, q_block,
-                                   kv_block, skip_masked_blocks, shard_hint)
+                                   kv_block, skip_masked_blocks, shard_hint,
+                                   sink, rate, blk)
     return out, (q, k, v, seg_q, pos_q, seg_kv, pos_kv, out, lse)
 
 
 def _xla_flash_bwd(causal, window, softcap, scale, q_block, kv_block,
-                   skip_masked_blocks, shard_hint, res, g):
+                   skip_masked_blocks, shard_hint, sink, rate, blk,
+                   res, g):
     """Flash-style recompute backward: per (i, j) pair recompute p from the
     saved logsumexp, accumulate dq/dk/dv.  Memory O(S·blk)."""
     q, k, v, seg_q, pos_q, seg_kv, pos_kv, out, lse = res
@@ -307,7 +328,7 @@ def _xla_flash_bwd(causal, window, softcap, scale, q_block, kv_block,
             jax.lax.dynamic_index_in_dim(pqb, i, 1, False),
             jax.lax.dynamic_index_in_dim(skb, j, 1, False),
             jax.lax.dynamic_index_in_dim(pkb, j, 1, False),
-            scale_v, softcap, causal, window)
+            scale_v, softcap, causal, window, sink, rate, blk)
         lse_i = jax.lax.dynamic_index_in_dim(lse, i, 1, False)
         p = jnp.where(msk[:, None], jnp.exp(logits - lse_i[..., None]), 0.0)
         gi = jax.lax.dynamic_index_in_dim(gb, i, 1, False)   # [b,qbk,hq,dh]
@@ -380,12 +401,23 @@ def decode_attention(q, k_cache, v_cache, cache_len_mask, pos_q, pos_kv, *,
 
 # ------------------------------------------------------------------ router
 def core_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
-                   window=0, softcap=0.0, ctx=None, scale=None):
-    """Dispatch by ``ctx.attn_impl`` (default ref)."""
+                   window=0, softcap=0.0, ctx=None, scale=None, mask=None):
+    """Dispatch by ``ctx.attn_impl`` (default ref).
+
+    ``mask`` is an optional :class:`~repro.core.mask.MaskSpec`
+    (DESIGN.md §12) applied on top of segment+causal masking; a
+    non-trivial spec overrides the layer-local ``window``.  The dilated
+    family strides at the packed kernel tile (128 tokens) on this
+    router; finer granularities are reachable through the kernel/oracle
+    entry points directly."""
+    from repro.core.mask import mask_params
     impl = getattr(ctx, "attn_impl", "ref") if ctx is not None else "ref"
+    window, sink, rate = mask_params(mask, window)
     kw = dict(causal=causal, window=window, softcap=softcap, scale=scale)
+    mkw = dict(sink=sink, rate=rate)
     if impl == "ref":
-        return ref_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, **kw)
+        return ref_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
+                             **kw, **mkw)
     if impl == "xla":
         hint = None
         mesh = getattr(ctx, "mesh", None)
@@ -394,14 +426,16 @@ def core_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
             heads_ax = "model" if q.shape[2] % msize == 0 else None
             hint = (mesh, ctx.rules.batch, heads_ax)
         return xla_flash_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
-                                   shard_hint=hint, **kw)
+                                   shard_hint=hint, **kw, **mkw)
     if impl == "pallas":
         from repro.kernels.packed_flash import ops as pf_ops
         return pf_ops.packed_flash_attention(
             q, k, v, seg_q, pos_q, seg_kv, pos_kv,
-            bwd_impl=getattr(ctx, "attn_bwd", None), **kw)
+            bwd_impl=getattr(ctx, "attn_bwd", None), **kw, **mkw)
     if impl == "cad":
         from repro.core import dispatch as cad_dispatch
         return cad_dispatch.cad_attention(
-            q, k, v, seg_q, pos_q, seg_kv, pos_kv, ctx=ctx, **kw)
+            q, k, v, seg_q, pos_q, seg_kv, pos_kv, ctx=ctx, causal=causal,
+            window=window if mask is None else 0, softcap=softcap,
+            scale=scale, mask=mask)
     raise ValueError(f"unknown attn impl {impl!r}")

@@ -115,10 +115,26 @@ class MemoryModel:
         """Backward-saved softmax statistics (lse) for the q shard."""
         return float(q_tokens) * self.comm.n_heads * self.lse_bytes
 
-    def task_bytes(self, q_len, kv_len) -> float:
-        """Full resident footprint of one (q_len, kv_len) CA task."""
+    def live_kv_bytes(self, kv_tokens, mask=None, blk: int = 128) -> float:
+        """kv bytes a task actually *touches* under ``mask`` — the
+        live-block pricing of DESIGN.md §12.  The dense prefix
+        (:meth:`kv_bytes`) remains the residency ledger's unit because
+        the kv gather buffer realizes the contiguous range; live pricing
+        is the compute/bandwidth view planners and benchmarks weigh
+        masked tasks by."""
+        if mask is None or getattr(mask, "trivial", True):
+            return self.kv_bytes(kv_tokens)
+        from repro.core.mask import live_kv_len  # local: avoid cycle
+        nb = -(-int(kv_tokens) // blk)
+        return self.kv_bytes(min(int(kv_tokens),
+                                 live_kv_len(mask, nb, blk)))
+
+    def task_bytes(self, q_len, kv_len, mask=None, blk: int = 128) -> float:
+        """Full resident footprint of one (q_len, kv_len) CA task.  With
+        a non-trivial ``mask`` the kv term is priced at the task's live
+        kv tokens (:meth:`live_kv_bytes`) — rectangle area otherwise."""
         return self.q_bytes(q_len) + self.residual_bytes(q_len) \
-            + self.kv_bytes(kv_len)
+            + self.live_kv_bytes(kv_len, mask, blk)
 
 
 class CostModel:
@@ -253,7 +269,13 @@ class GridCalibrator:
     speed estimation.
 
     ``observe(q_len, kv_len, seconds, server=...)`` feeds one measured
-    CA-task timing.  Each sample updates
+    CA-task timing.  Under a non-trivial mask the caller keys the
+    observation by the task's *live* kv tokens —
+    ``repro.core.dispatch.iter_plan_tasks`` emits exactly that — so a
+    sliding-window or dilated task calibrates the grid cell of the
+    context it actually iterated, and predictions stay consistent with
+    the live-block pricing the planners use (DESIGN.md §12).  Each
+    sample updates
 
     * the EMA of its (log-nearest) grid cell, normalized to the current
       fastest-server reference, and

@@ -36,6 +36,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.attention import NEG_INF, xla_flash_attention
+from repro.core.mask import live_kv_len, mask_params
 from repro.core.plan import CADConfig, PingPongPlan
 
 from repro.compat import shard_map as _shard_map
@@ -54,6 +55,8 @@ class CADContext:
     bwd: Any = None           # None (backend default) | "pallas" | "xla"
     jmax: int = 0             # max kv blocks any task touches (0 -> nkv)
     pingpong: bool = False
+    mask: Any = None          # Optional[MaskSpec] — the step's task shape
+                              # (DESIGN.md §12); None = dense causal
 
     def bind_plan(self, ctx, plan):
         new_cad = dataclasses.replace(self, plan=plan)
@@ -111,8 +114,13 @@ def _server_tasks(qb, kb, vb, posb, recv, plan, cfg: CADConfig):
 
 
 def _server_pair(qf, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, j, *,
-                 softcap, window, scale, rep, n):
-    """logits/mask/value block for relative kv index j of every task."""
+                 softcap, window, scale, rep, n, sink=0, rate=1):
+    """logits/mask/value block for relative kv index j of every task.
+
+    ``sink``/``rate`` are the unpacked MaskSpec params (DESIGN.md §12);
+    both default to the pre-mask no-op so dense-causal traces stay
+    byte-identical.  Positions are in-document, so the dilated stride
+    operates on in-doc block indices at the task blk granularity."""
     idx = jnp.clip(kv_start + j, 0, n - 1)                  # [T]
     kj = k_buf[idx]                                         # [T, blk, Hkv, dh]
     vj = v_buf[idx]
@@ -129,16 +137,23 @@ def _server_pair(qf, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, j, *,
         & (q_pos[:, None, :, None] >= 0) \
         & (pkj[:, None, None, :] >= 0) & live
     if window and window > 0:
-        msk &= (q_pos[:, None, :, None] - pkj[:, None, None, :]) < window
+        w = (q_pos[:, None, :, None] - pkj[:, None, None, :]) < window
+        if sink and sink > 0:
+            w = w | (pkj[:, None, None, :] < sink)
+        msk &= w
+    if rate and rate > 1:
+        blk = qf.shape[1]
+        msk &= ((q_pos[:, None, :, None] // blk)
+                - (pkj[:, None, None, :] // blk)) % rate == 0
     return jnp.where(msk, logits, NEG_INF), msk, kj, vj, idx
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12))
 def _xla_server(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
-                jmax, softcap, window, scale):
+                jmax, softcap, window, scale, sink=0, rate=1):
     out, _ = _xla_server_fwd_impl(q_tasks, k_buf, v_buf, kv_start, kv_len,
                                   q_pos, kv_pos, jmax, softcap, window,
-                                  scale)
+                                  scale, sink, rate)
     return out
 
 
@@ -150,7 +165,7 @@ def _accum_init(T, hq, blk, dh):
 
 
 def _accum_body(qf, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, *,
-                softcap, window, scale, rep, n):
+                softcap, window, scale, rep, n, sink=0, rate=1):
     """One flash-accumulation scan step over relative kv-block index j.
     Shared — same closure, same op sequence — by the full serve scan and
     the chunked KV-streaming scans, which is what makes streamed output
@@ -164,7 +179,8 @@ def _accum_body(qf, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, *,
         m_acc, l_acc, acc = carry
         logits, msk, kj, vj, _ = _server_pair(
             qf, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, j,
-            softcap=softcap, window=window, scale=scale, rep=rep, n=n)
+            softcap=softcap, window=window, scale=scale, rep=rep, n=n,
+            sink=sink, rate=rate)
         m_new = jnp.maximum(m_acc, logits.max(-1))
         p = jnp.where(msk, jnp.exp(logits - m_new[..., None]), 0.0)
         corr = jnp.exp(m_acc - m_new)
@@ -186,7 +202,8 @@ def _accum_finalize(m_acc, l_acc, acc, dtype):
 
 
 def _xla_server_fwd_impl(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
-                         kv_pos, jmax, softcap, window, scale):
+                         kv_pos, jmax, softcap, window, scale, sink=0,
+                         rate=1):
     """Blockwise jnp attention-server (the compile/dry-run path): scan over
     relative kv-block index j, gathering each task's j-th context block."""
     T, blk, hq, dh = q_tasks.shape
@@ -196,22 +213,22 @@ def _xla_server_fwd_impl(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
     qf = q_tasks.astype(jnp.float32)
     body = _accum_body(qf, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
                        softcap=softcap, window=window, scale=scale,
-                       rep=rep, n=n)
+                       rep=rep, n=n, sink=sink, rate=rate)
     carry, _ = jax.lax.scan(body, _accum_init(T, hq, blk, dh),
                             jnp.arange(jmax))
     return _accum_finalize(*carry, q_tasks.dtype)
 
 
 def _xla_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
-                    jmax, softcap, window, scale):
+                    jmax, softcap, window, scale, sink=0, rate=1):
     out, lse = _xla_server_fwd_impl(q_tasks, k_buf, v_buf, kv_start,
                                     kv_len, q_pos, kv_pos, jmax, softcap,
-                                    window, scale)
+                                    window, scale, sink, rate)
     return out, (q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
                  out, lse)
 
 
-def _xla_server_bwd(jmax, softcap, window, scale, res, g):
+def _xla_server_bwd(jmax, softcap, window, scale, sink, rate, res, g):
     """Flash-style recompute backward: nothing quadratic is saved."""
     q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, out, lse = res
     T, blk, hq, dh = q_tasks.shape
@@ -232,7 +249,8 @@ def _xla_server_bwd(jmax, softcap, window, scale, res, g):
         dq_acc, dk_acc, dv_acc = carry
         logits, msk, kj, vj, idx = _server_pair(
             qf, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, j,
-            softcap=softcap, window=window, scale=scale_v, rep=rep, n=n)
+            softcap=softcap, window=window, scale=scale_v, rep=rep, n=n,
+            sink=sink, rate=rate)
         p = jnp.where(msk, jnp.exp(logits - lse[..., None]), 0.0)
         dvj = jnp.einsum("thqk,tqhd->tkhd", p, gf)          # [T,blk,hq,dh]
         dp = jnp.einsum("tqhd,tkhd->thqk", gf, vj.astype(jnp.float32))
@@ -264,15 +282,16 @@ _xla_server.defvjp(_xla_server_fwd, _xla_server_bwd)
 def _serve(q_tasks, qpos_tasks, k_buf, v_buf, kpos_buf, plan, cad,
            softcap, window, scale):
     jmax = cad.jmax or cad.cfg.nkv
+    window, sink, rate = mask_params(cad.mask, window)
     if cad.kernel == "pallas":
         from repro.kernels.packed_flash.ops import ca_server_attention
         return ca_server_attention(
             q_tasks, k_buf, v_buf, plan["task_kv_start"],
             plan["task_kv_len"], qpos_tasks, kpos_buf,
-            True, window, softcap, scale, jmax, cad.bwd)
+            True, window, softcap, scale, jmax, cad.bwd, sink, rate)
     return _xla_server(q_tasks, k_buf, v_buf, plan["task_kv_start"],
                        plan["task_kv_len"], qpos_tasks, kpos_buf,
-                       jmax, softcap, window, scale)
+                       jmax, softcap, window, scale, sink, rate)
 
 
 def _scatter_outputs(out_tasks, ret_recv, plan, cfg: CADConfig, nb, blk,
@@ -366,14 +385,19 @@ def _global_sim(q, k, v, pos, plan, cad, softcap, scale):
 
 
 # ----------------------------------------------------- calibration probes
-def iter_plan_tasks(cfg: CADConfig, plan) \
+def iter_plan_tasks(cfg: CADConfig, plan, mask=None) \
         -> "list[Tuple[int, int, int, int]]":
     """Host-side: the (server, task_slot, q_tokens, kv_tokens) list of
     every live CA task in a :class:`StepPlan` (or legacy dict plan).
     Every task is one q block against a (kv_len · blk)-token context —
     the shapes the runtime calibrator's grid cells are keyed by.  Task
     count comes from the plan arrays themselves, so nano-batch plans
-    built from a re-sized ping-pong config iterate correctly."""
+    built from a re-sized ping-pong config iterate correctly.
+
+    With a non-trivial ``mask`` (:class:`~repro.core.mask.MaskSpec`),
+    ``kv_tokens`` is the task's *live* kv length — the blocks the masked
+    kernel actually iterates (DESIGN.md §12) — so calibration grid cells
+    key on work done rather than rectangle area."""
     kv_len = np.asarray(plan["task_kv_len"])
     d, n_tasks = kv_len.shape
     out = []
@@ -381,17 +405,18 @@ def iter_plan_tasks(cfg: CADConfig, plan) \
         for slot in range(n_tasks):
             kvl = int(kv_len[s, slot])
             if kvl > 0:
-                out.append((s, slot, cfg.blk, kvl * cfg.blk))
+                out.append((s, slot, cfg.blk,
+                            live_kv_len(mask, kvl, cfg.blk)))
     return out
 
 
 @functools.lru_cache(maxsize=16)
 def _probe_serve_fn(cfg: CADConfig, kernel: str, bwd, jmax: int,
-                    softcap: float = 0.0, scale=None):
+                    softcap: float = 0.0, scale=None, mask=None):
     """One jitted serve per pool geometry — probes recur every
     ``calibrate_every`` steps and must not pay a re-trace each time
     (jit caches per argument shape under the returned callable)."""
-    cad = CADContext(cfg=cfg, kernel=kernel, bwd=bwd, jmax=jmax)
+    cad = CADContext(cfg=cfg, kernel=kernel, bwd=bwd, jmax=jmax, mask=mask)
     return jax.jit(lambda qt, qp, kb_, vb_, kp, st, ln: _serve(
         qt, qp, kb_, vb_, kp,
         {"task_kv_start": st, "task_kv_len": ln}, cad, softcap, 0, scale))
@@ -448,10 +473,12 @@ def build_server_inputs(cad: CADContext, plan, q, k, v, pos):
 
 
 @functools.lru_cache(maxsize=16)
-def _stream_serve_fns(n_chunk: int, softcap: float, window: int, scale):
+def _stream_serve_fns(n_chunk: int, softcap: float, window: int, scale,
+                      sink: int = 0, rate: int = 1):
     """Jitted (chunk_step, finalize) pair for chunked KV streaming —
     cached per chunk geometry like :func:`_probe_serve_fn` (jit then
-    caches per input shape underneath)."""
+    caches per input shape underneath).  ``sink``/``rate`` join the
+    cache key: a masked chunk body is a different trace."""
 
     @jax.jit
     def chunk_step(carry, q_tasks, k_buf, v_buf, kv_start, kv_len,
@@ -462,7 +489,8 @@ def _stream_serve_fns(n_chunk: int, softcap: float, window: int, scale):
             q_tasks.astype(jnp.float32), k_buf, v_buf, kv_start, kv_len,
             q_pos, kv_pos, softcap=softcap, window=window,
             scale=scale if scale is not None else dh ** -0.5,
-            rep=q_tasks.shape[2] // k_buf.shape[2], n=n)
+            rep=q_tasks.shape[2] // k_buf.shape[2], n=n,
+            sink=sink, rate=rate)
         # scan length is padded to >= 2 with a masked no-op iteration
         # (j = n sits past every task's kv_len, so the carry passes
         # through bitwise unchanged): XLA unrolls a trip-count-1 loop
@@ -509,7 +537,9 @@ def stream_task_batch(cad: CADContext, inputs_s, plan_s, *,
     jmax = cad.jmax or cfg.nkv
     q_tasks, qpos, k_buf, v_buf, kpos = inputs_s
     T, blk, hq, dh = q_tasks.shape
-    step, finalize = _stream_serve_fns(chunk, float(softcap), 0, scale)
+    window, sink, rate = mask_params(cad.mask, 0)
+    step, finalize = _stream_serve_fns(chunk, float(softcap), window,
+                                       scale, sink, rate)
     carry = _accum_init(T, hq, blk, dh)
     kv_start = plan_s["task_kv_start"]
     kv_len = plan_s["task_kv_len"]
@@ -543,7 +573,7 @@ def serve_task_batch(cad: CADContext, inputs_s, plan_s, *,
                                  scale=scale)
     q_tasks, qpos, k_buf, v_buf, kpos = inputs_s
     serve = _probe_serve_fn(cad.cfg, cad.kernel, cad.bwd, cad.jmax,
-                            softcap, scale)
+                            softcap, scale, cad.mask)
     return serve(q_tasks, qpos, k_buf, v_buf, kpos,
                  plan_s["task_kv_start"], plan_s["task_kv_len"])
 
@@ -633,10 +663,11 @@ def probe_plan_times(cad: CADContext, plan, *, n_heads: int = 1,
                            (d, s_len))
 
     inputs, plans_r = build_server_inputs(cad, plan_np, q, k, v, pos)
-    serve = _probe_serve_fn(cfg, cad.kernel, cad.bwd, cad.jmax)
+    serve = _probe_serve_fn(cfg, cad.kernel, cad.bwd, cad.jmax,
+                            mask=cad.mask)
 
     by_server: Dict[int, List[Tuple[int, int]]] = {s: [] for s in range(d)}
-    for s, _slot, qt, kvt in iter_plan_tasks(cfg, plan_np):
+    for s, _slot, qt, kvt in iter_plan_tasks(cfg, plan_np, mask=cad.mask):
         by_server[s].append((qt, kvt))
 
     results = []
@@ -659,17 +690,29 @@ def probe_plan_times(cad: CADContext, plan, *, n_heads: int = 1,
 
 # --------------------------------------------------------------- frontend
 def cad_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, ctx,
-                  causal=True, window=0, softcap=0.0, scale=None):
+                  causal=True, window=0, softcap=0.0, scale=None,
+                  mask=None):
     """Core-attention disaggregation entry point.
 
     Applies to causal full-attention layers (the quadratic-imbalance
     source).  Windowed/cross/non-causal layers fall back to the xla flash
     path: their compute is linear in tokens, so they do not create the
-    imbalance CAD exists to fix (DESIGN.md §5)."""
+    imbalance CAD exists to fix (DESIGN.md §5).  A non-trivial ``mask``
+    (:class:`~repro.core.mask.MaskSpec`) — sliding+sink or dilated —
+    IS served through the plan path: the servers' kernels take the mask
+    as static params and the plan is priced by live blocks (§12).  The
+    spec must match the one the plan was built with; ``cad.mask`` (set
+    by the session) is used when the call site passes none."""
     cad: Optional[CADContext] = getattr(ctx, "cad", None)
+    if cad is not None and mask is not None and cad.mask != mask:
+        cad = dataclasses.replace(cad, mask=mask)
+    spec = cad.mask if cad is not None else mask
     if cad is None or cad.plan is None or not causal or window:
+        w, sink, rate = mask_params(spec, window)
         return xla_flash_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
-                                   causal=causal, window=window,
+                                   causal=causal, window=w, sink=sink,
+                                   rate=rate, blk=(cad.cfg.blk if cad
+                                                   else 128),
                                    softcap=softcap, scale=scale)
     # padding tokens -> position -1 so the server kernels mask them
     pos = jnp.where(seg_q > 0, pos_q, -1)

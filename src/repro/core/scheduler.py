@@ -25,6 +25,14 @@ target is equal time, i.e. FLOPs proportional to speed (a 0.5x server
 receives half the work).  With both left at their defaults the
 arithmetic reduces exactly to the homogeneous relative-FLOPs balance.
 
+Mask-structured tasks (DESIGN.md §12): an optional ``mask``
+(:class:`~repro.core.mask.MaskSpec`) reprices every q-block by its
+*live* kv blocks (``live_block_table``) instead of its dense causal
+prefix; the same greedy suffix loop then splits documents along the
+mask structure — under a sliding window the deep-suffix blocks stop
+dominating, under dilation only every ``rate``-th kv block is paid for
+— so per-server *live-block time* balances rather than rectangle area.
+
 Capacities (per-pair q/kv send slots, per-server kv buffer slots) mirror
 the static shapes of the compiled dispatch; moves that would overflow a
 capacity are rejected (TPU adaptation — see DESIGN.md §3).
@@ -60,6 +68,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 import numpy as np
 
 from repro.core.cost_model import CommModel, CostModel, MemoryModel
+from repro.core.mask import MaskSpec, live_block_table
 
 
 @dataclasses.dataclass
@@ -147,24 +156,35 @@ def layout_from_segments(segment_ids: np.ndarray, blk: int,
 
 
 def block_costs(doc_of: np.ndarray, bi_of: np.ndarray, blk: int,
-                cost_model: Optional[CostModel] = None) -> np.ndarray:
+                cost_model: Optional[CostModel] = None,
+                mask: Optional[MaskSpec] = None) -> np.ndarray:
     """Per-q-block CA cost for live blocks, 0 for padding.  Default:
-    relative FLOPs (bi+1)·blk².  With a (runtime-calibrated)
-    ``cost_model``: predicted seconds for a blk-token shard against its
-    (bi+1)·blk context.  The single cost formula shared by the scheduler
-    and the plan-policy load accounting (repro.cad.planner)."""
-    if cost_model is None:
-        return np.where(doc_of >= 0, (bi_of + 1) * float(blk * blk), 0.0)
-    out = np.zeros(len(doc_of))
+    relative FLOPs ``live_blocks(bi)·blk²`` — for the dense-causal mask
+    ``live_blocks(bi) == bi + 1`` and this reduces to the historic
+    (bi+1)·blk².  A non-trivial ``mask`` prices the block by its *live*
+    kv blocks only (DESIGN.md §12): a sliding-window or dilated task
+    costs what its kernel actually iterates, not its rectangle area.
+    With a (runtime-calibrated) ``cost_model``: predicted seconds for a
+    blk-token shard against its live context.  The single cost formula
+    shared by the scheduler and the plan-policy load accounting
+    (repro.cad.planner)."""
     live = doc_of >= 0
-    out[live] = cost_model.predict(blk, (bi_of[live] + 1) * blk)
+    max_blocks = int(bi_of[live].max()) + 1 if live.any() else 1
+    tbl = live_block_table(mask, max_blocks, blk)   # live kv blocks per bi
+    if cost_model is None:
+        out = np.zeros(len(doc_of))
+        out[live] = tbl[bi_of[live]] * float(blk * blk)
+        return out
+    out = np.zeros(len(doc_of))
+    out[live] = cost_model.predict(blk, tbl[bi_of[live]] * blk)
     return out
 
 
 def _bi_cost_table(blk: int, max_blocks: int,
-                   cost_model: Optional[CostModel]) -> np.ndarray:
+                   cost_model: Optional[CostModel],
+                   mask: Optional[MaskSpec] = None) -> np.ndarray:
     """cost of block-in-doc index bi, for bi in [0, max_blocks)."""
-    ctx = (np.arange(max_blocks, dtype=np.int64) + 1)
+    ctx = live_block_table(mask, max_blocks, blk)   # live kv blocks per bi
     if cost_model is None:
         return (ctx * (blk * blk)).astype(np.float64)
     return np.asarray(cost_model.predict(blk, ctx * blk), np.float64)
@@ -251,7 +271,8 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
              exclude: Optional[Iterable[int]] = None,
              mem_model: Optional[MemoryModel] = None,
              budgets: Optional[np.ndarray] = None,
-             stream_chunk: int = 0) -> Schedule:
+             stream_chunk: int = 0,
+             mask: Optional[MaskSpec] = None) -> Schedule:
     docs, doc_of, bi_of = layout_from_segments(segment_ids, blk, n_servers)
     nb = segment_ids.shape[1] // blk
     G = n_servers * nb
@@ -266,9 +287,9 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
                          f"{speeds.shape}")
     if (speeds <= 0).any():
         raise ValueError(f"server speeds must be > 0, got {speeds}")
-    cost_of = block_costs(doc_of, bi_of, blk, cost_model)
+    cost_of = block_costs(doc_of, bi_of, blk, cost_model, mask)
     max_blocks = int(bi_of.max()) + 1 if len(bi_of) else 1
-    bi_cost = _bi_cost_table(blk, max_blocks, cost_model)
+    bi_cost = _bi_cost_table(blk, max_blocks, cost_model, mask)
     bi_csum = np.concatenate([[0.0], np.cumsum(bi_cost)])
 
     def range_cost(lo: int, hi: int) -> float:

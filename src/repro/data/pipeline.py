@@ -12,8 +12,9 @@ from typing import Iterator
 
 import numpy as np
 
+from repro.core.mask import validate_mask_layout
 from repro.data.distributions import sample_lengths
-from repro.data.packing import pack_documents
+from repro.data.packing import BLOCK, pack_documents
 
 
 @dataclasses.dataclass
@@ -56,6 +57,11 @@ def raw_batches(cfg: PipelineConfig) -> Iterator[dict]:
         toks = np.stack([c.tokens for c in chunks])
         segs = np.stack([c.segment_ids for c in chunks])
         poss = np.stack([c.positions for c in chunks])
+        # packed doc boundaries feed the segment mask downstream; a
+        # layout violating the doc-pure-block invariant (overlapping or
+        # misaligned segments) must fail here, named, not as silent
+        # cross-document attention in a fused batch (DESIGN.md §12)
+        validate_mask_layout(None, segs, BLOCK)
         yield {
             "tokens": toks,
             "labels": _labels(toks, segs),

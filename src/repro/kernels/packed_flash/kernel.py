@@ -86,8 +86,8 @@ def _ds_from_p(p, dp, delta, logits, m, scale, softcap):
 # ----------------------------------------------------------- packed flash
 def _flash_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
                   q_ref, k_ref, v_ref, *rest,
-                  scale, softcap, causal, window, blk_q, blk_k, nk,
-                  save_lse=False):
+                  scale, softcap, causal, window, sink, rate,
+                  blk_q, blk_k, nk, save_lse=False):
     if save_lse:
         o_ref, lse_ref, m_scr, l_scr, acc_scr = rest
     else:
@@ -101,12 +101,9 @@ def _flash_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    # block-level pruning (chunk-order positions; sound for packed docs)
-    run = jnp.asarray(True)
-    if causal:
-        run = run & (j * blk_k < (i + 1) * blk_q)
-    if window and window > 0:
-        run = run & ((j + 1) * blk_k - 1 >= i * blk_q - window)
+    # mask-driven live-block pruning (chunk-order block indices; sound
+    # for packed docs — see _flash_block_live)
+    run = _flash_block_live(i, j, causal, window, sink, rate, blk_q, blk_k)
 
     @pl.when(run)
     def _compute():
@@ -114,7 +111,8 @@ def _flash_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
         k = k_ref[0, :, 0, :].astype(jnp.float32)      # [blk_k, dh]
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         m = _flash_mask(seg_q_ref[0, :], pos_q_ref[0, :],
-                        seg_k_ref[0, :], pos_k_ref[0, :], causal, window)
+                        seg_k_ref[0, :], pos_k_ref[0, :], causal, window,
+                        sink, rate, blk_q)
         logits = _capped_masked_logits(q, k, m, scale, softcap)
 
         m_prev = m_scr[...]
@@ -140,7 +138,7 @@ def _flash_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
 
 
 def flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
-              window=0, softcap=0.0, scale=None,
+              window=0, sink=0, rate=1, softcap=0.0, scale=None,
               blk_q=DEFAULT_BLOCK, blk_k=DEFAULT_BLOCK, interpret=True,
               return_lse=False):
     b, sq, hq, dh = q.shape
@@ -150,13 +148,15 @@ def flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
     blk_q = min(blk_q, sq)
     blk_k = min(blk_k, skv)
     assert sq % blk_q == 0 and skv % blk_k == 0, "pad seq to block size"
+    if rate > 1:
+        assert blk_q == blk_k, "dilated masks need square block tiles"
     nq, nk = sq // blk_q, skv // blk_k
 
     grid = (b, hq, nq, nk)
     kernel = functools.partial(
         _flash_kernel, scale=scale, softcap=softcap, causal=causal,
-        window=window, blk_q=blk_q, blk_k=blk_k, nk=nk,
-        save_lse=return_lse)
+        window=window, sink=sink, rate=rate, blk_q=blk_q, blk_k=blk_k,
+        nk=nk, save_lse=return_lse)
     out_shape = jax.ShapeDtypeStruct((b, sq, hq, dh), q.dtype)
     out_specs = pl.BlockSpec((1, blk_q, 1, dh),
                              lambda b_, h, i, j: (b_, i, h, 0))
@@ -195,19 +195,48 @@ def flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *, causal=True,
 
 
 # ---------------------------------------------------- packed flash bwd
-def _flash_mask(sq, pq, sk, pk, causal, window):
+def _flash_mask(sq, pq, sk, pk, causal, window, sink=0, rate=1, mblk=0):
+    """Token-level mask: segments + causal + MaskSpec terms (DESIGN.md §12).
+
+    ``window``/``sink`` are the sliding family's parameters (sink tokens
+    are the always-visible document head); ``rate``/``mblk`` the dilated
+    family's block stride at granularity ``mblk``.  Positions are
+    in-document, so sink and dilation are exact per document."""
     m = (sq[:, None] == sk[None, :]) & (sq[:, None] > 0) & (sk[None, :] > 0)
     if causal:
         m &= pq[:, None] >= pk[None, :]
     if window and window > 0:
-        m &= (pq[:, None] - pk[None, :]) < window
+        w = (pq[:, None] - pk[None, :]) < window
+        if sink and sink > 0:
+            w |= pk[None, :] < sink
+        m &= w
+    if rate and rate > 1:
+        m &= ((pq[:, None] // mblk) - (pk[None, :] // mblk)) % rate == 0
     return m
+
+
+def _flash_block_live(i, j, causal, window, sink, rate, blk_q, blk_k):
+    """Block-pruning predicate on chunk-order block indices.
+
+    Sound for packed layouts (documents are block-aligned and contiguous,
+    so the document offset cancels in ``i - j``).  When ``sink > 0`` the
+    window prune is disabled — sink tokens live at in-document positions
+    the global indices can't see — and the token mask alone enforces the
+    window; causal pruning still bounds the work."""
+    run = jnp.asarray(True)
+    if causal:
+        run = run & (j * blk_k < (i + 1) * blk_q)
+    if window and window > 0 and not sink:
+        run = run & ((j + 1) * blk_k - 1 >= i * blk_q - window)
+    if rate and rate > 1:
+        run = run & ((i - j) % rate == 0)
+    return run
 
 
 def _flash_bwd_dq_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
                          q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-                         dq_ref, dq_scr, *,
-                         scale, softcap, causal, window, blk_q, blk_k, nk):
+                         dq_ref, dq_scr, *, scale, softcap, causal,
+                         window, sink, rate, blk_q, blk_k, nk):
     i = pl.program_id(2)
     j = pl.program_id(3)
 
@@ -215,11 +244,7 @@ def _flash_bwd_dq_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
     def _init():
         dq_scr[...] = jnp.zeros_like(dq_scr)
 
-    run = jnp.asarray(True)
-    if causal:
-        run = run & (j * blk_k < (i + 1) * blk_q)
-    if window and window > 0:
-        run = run & ((j + 1) * blk_k - 1 >= i * blk_q - window)
+    run = _flash_block_live(i, j, causal, window, sink, rate, blk_q, blk_k)
 
     @pl.when(run)
     def _compute():
@@ -228,7 +253,8 @@ def _flash_bwd_dq_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         do = do_ref[0, :, 0, :].astype(jnp.float32)
         m = _flash_mask(seg_q_ref[0, :], pos_q_ref[0, :],
-                        seg_k_ref[0, :], pos_k_ref[0, :], causal, window)
+                        seg_k_ref[0, :], pos_k_ref[0, :], causal, window,
+                        sink, rate, blk_q)
         logits = _capped_masked_logits(q, k, m, scale, softcap)
         lse = lse_ref[0, 0, :]
         p = jnp.where(m, jnp.exp(logits - lse[:, None]), 0.0)
@@ -245,7 +271,8 @@ def _flash_bwd_dq_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
 def _flash_bwd_dkv_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
                           q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
                           dk_ref, dv_ref, dk_scr, dv_scr, *,
-                          scale, softcap, causal, window, blk_q, blk_k, nq):
+                          scale, softcap, causal, window, sink, rate,
+                          blk_q, blk_k, nq):
     j = pl.program_id(2)
     i = pl.program_id(3)
 
@@ -254,11 +281,7 @@ def _flash_bwd_dkv_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
         dk_scr[...] = jnp.zeros_like(dk_scr)
         dv_scr[...] = jnp.zeros_like(dv_scr)
 
-    run = jnp.asarray(True)
-    if causal:
-        run = run & (j * blk_k < (i + 1) * blk_q)
-    if window and window > 0:
-        run = run & ((j + 1) * blk_k - 1 >= i * blk_q - window)
+    run = _flash_block_live(i, j, causal, window, sink, rate, blk_q, blk_k)
 
     @pl.when(run)
     def _compute():
@@ -267,7 +290,8 @@ def _flash_bwd_dkv_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         do = do_ref[0, :, 0, :].astype(jnp.float32)
         m = _flash_mask(seg_q_ref[0, :], pos_q_ref[0, :],
-                        seg_k_ref[0, :], pos_k_ref[0, :], causal, window)
+                        seg_k_ref[0, :], pos_k_ref[0, :], causal, window,
+                        sink, rate, blk_q)
         logits = _capped_masked_logits(q, k, m, scale, softcap)
         lse = lse_ref[0, 0, :]
         p = jnp.where(m, jnp.exp(logits - lse[:, None]), 0.0)
@@ -284,8 +308,9 @@ def _flash_bwd_dkv_kernel(seg_q_ref, pos_q_ref, seg_k_ref, pos_k_ref,
 
 
 def flash_bwd(q, k, v, out, lse, do, seg_q, pos_q, seg_kv, pos_kv, *,
-              causal=True, window=0, softcap=0.0, scale=None,
-              blk_q=DEFAULT_BLOCK, blk_k=DEFAULT_BLOCK, interpret=True):
+              causal=True, window=0, sink=0, rate=1, softcap=0.0,
+              scale=None, blk_q=DEFAULT_BLOCK, blk_k=DEFAULT_BLOCK,
+              interpret=True):
     """Hand-written backward for ``flash_fwd`` from saved (out, lse).
 
     Two passes over the same pruned (i, j) block pairs as the forward:
@@ -298,6 +323,8 @@ def flash_bwd(q, k, v, out, lse, do, seg_q, pos_q, seg_kv, pos_kv, *,
     blk_q = min(blk_q, sq)
     blk_k = min(blk_k, skv)
     assert sq % blk_q == 0 and skv % blk_k == 0, "pad seq to block size"
+    if rate > 1:
+        assert blk_q == blk_k, "dilated masks need square block tiles"
     nq, nk = sq // blk_q, skv // blk_k
 
     # delta_i = rowsum(do * out) — linear precompute shared by both passes
@@ -315,7 +342,8 @@ def flash_bwd(q, k, v, out, lse, do, seg_q, pos_q, seg_kv, pos_kv, *,
     dq = pl.pallas_call(
         functools.partial(_flash_bwd_dq_kernel, scale=scale,
                           softcap=softcap, causal=causal, window=window,
-                          blk_q=blk_q, blk_k=blk_k, nk=nk),
+                          sink=sink, rate=rate, blk_q=blk_q, blk_k=blk_k,
+                          nk=nk),
         grid=(b, hq, nq, nk),
         in_specs=[seg_spec_q, seg_spec_q, seg_spec_k, seg_spec_k,
                   q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
@@ -342,7 +370,8 @@ def flash_bwd(q, k, v, out, lse, do, seg_q, pos_q, seg_kv, pos_kv, *,
     dk_h, dv_h = pl.pallas_call(
         functools.partial(_flash_bwd_dkv_kernel, scale=scale,
                           softcap=softcap, causal=causal, window=window,
-                          blk_q=blk_q, blk_k=blk_k, nq=nq),
+                          sink=sink, rate=rate, blk_q=blk_q, blk_k=blk_k,
+                          nq=nq),
         grid=(b, hq, nk, nq),
         in_specs=[seg_spec_qT, seg_spec_qT, seg_spec_kT, seg_spec_kT,
                   q_specT, kv_specT, kv_specT, q_specT, row_specT,
@@ -486,19 +515,47 @@ def ragged_decode_fwd(q_blocks, k_cache, v_cache, block_req, kv_len, q_pos,
 
 
 # ------------------------------------------------------- CA-server kernel
-def _ca_mask(pq, pk, causal, window):
+def _ca_mask(pq, pk, causal, window, sink=0, rate=1, mblk=0):
+    """Token-level CA-task mask on in-document positions.
+
+    The scheduler guarantees each task's kv range is its own document's
+    prefix, so segments are unneeded; sink/dilated terms (DESIGN.md §12)
+    work directly on the in-document positions."""
     m = (pq[:, None] >= 0) & (pk[None, :] >= 0)
     if causal:
         m &= pq[:, None] >= pk[None, :]
     if window and window > 0:
-        m &= (pq[:, None] - pk[None, :]) < window
+        w = (pq[:, None] - pk[None, :]) < window
+        if sink and sink > 0:
+            w |= pk[None, :] < sink
+        m &= w
+    if rate and rate > 1:
+        m &= ((pq[:, None] // mblk) - (pk[None, :] // mblk)) % rate == 0
     return m
+
+
+def _ca_live_mask(q_pos_ref, kv_pos_ref, causal, window, sink, rate, blk):
+    """(mask, any_live) for the current (task, kv-block) pair, or
+    ``(None, None)`` for the trivial dense-causal case.
+
+    The mask-driven live-block predicate is computed from the *actual*
+    position vectors (already resident for this grid cell), so it is
+    exact for any caller — no reliance on the plan's prefix invariant —
+    and skipping a dead block is a bit-exact no-op (its token mask is
+    all-False, so the online-softmax carry would pass through
+    unchanged).  ``mask.live_block_mask`` prices a conservative superset
+    of these blocks (DESIGN.md §12)."""
+    if not (window or sink or rate > 1):
+        return None, None
+    m = _ca_mask(q_pos_ref[0, :], kv_pos_ref[0, :], causal, window,
+                 sink, rate, blk)
+    return m, jnp.any(m)
 
 
 def _ca_server_kernel(kv_start_ref, kv_len_ref,       # scalar prefetch
                       q_pos_ref, kv_pos_ref, q_ref, k_ref, v_ref, *rest,
-                      scale, softcap, causal, window, jmax,
-                      save_lse=False):
+                      scale, softcap, causal, window, sink, rate, blk,
+                      jmax, save_lse=False):
     if save_lse:
         o_ref, lse_ref, m_scr, l_scr, acc_scr = rest
     else:
@@ -512,12 +569,20 @@ def _ca_server_kernel(kv_start_ref, kv_len_ref,       # scalar prefetch
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    @pl.when(j < kv_len_ref[t])
+    mask, any_live = _ca_live_mask(q_pos_ref, kv_pos_ref, causal, window,
+                                   sink, rate, blk)
+    live = j < kv_len_ref[t]
+    if mask is not None:
+        live &= any_live
+
+    @pl.when(live)
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32)
         k = k_ref[0, :, 0, :].astype(jnp.float32)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
-        m = _ca_mask(q_pos_ref[0, :], kv_pos_ref[0, :], causal, window)
+        m = mask if mask is not None else _ca_mask(
+            q_pos_ref[0, :], kv_pos_ref[0, :], causal, window, sink,
+            rate, blk)
         logits = _capped_masked_logits(q, k, m, scale, softcap)
 
         m_prev = m_scr[...]
@@ -543,13 +608,15 @@ def _ca_server_kernel(kv_start_ref, kv_len_ref,       # scalar prefetch
 
 
 def ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, *,
-                  causal=True, window=0, softcap=0.0, scale=None,
-                  jmax=None, interpret=True, return_lse=False):
+                  causal=True, window=0, sink=0, rate=1, softcap=0.0,
+                  scale=None, jmax=None, interpret=True, return_lse=False):
     """Fused CA-task batch (see ref.ref_ca_server_attention for semantics).
 
     q_tasks [T,blk,Hq,dh]; k_buf/v_buf [N,blk,Hkv,dh]; kv_start/kv_len [T];
     q_pos [T,blk]; kv_pos [N,blk].  ``jmax`` bounds the kv blocks any task
-    may touch (defaults to N)."""
+    may touch (defaults to N).  window/sink/rate are the MaskSpec terms
+    (DESIGN.md §12); kv blocks of a task's prefix that the mask leaves
+    fully dead are skipped via ``_ca_live_mask``'s exact predicate."""
     T, blk, hq, dh = q_tasks.shape
     N, _, hkv, _ = k_buf.shape
     rep = hq // hkv
@@ -565,7 +632,8 @@ def ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, *,
 
     kernel = functools.partial(
         _ca_server_kernel, scale=scale, softcap=softcap, causal=causal,
-        window=window, jmax=jmax, save_lse=return_lse)
+        window=window, sink=sink, rate=rate, blk=blk, jmax=jmax,
+        save_lse=return_lse)
     out_shape = jax.ShapeDtypeStruct((T, blk, hq, dh), q_tasks.dtype)
     out_specs = pl.BlockSpec((1, blk, 1, dh),
                              lambda t, h, j, st, ln: (t, 0, h, 0))
@@ -606,7 +674,8 @@ def ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, *,
 def _ca_bwd_dq_kernel(kv_start_ref, kv_len_ref,       # scalar prefetch
                       q_pos_ref, kv_pos_ref, q_ref, k_ref, v_ref, do_ref,
                       lse_ref, delta_ref, dq_ref, dq_scr, *,
-                      scale, softcap, causal, window, jmax):
+                      scale, softcap, causal, window, sink, rate, blk,
+                      jmax):
     t = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -614,13 +683,21 @@ def _ca_bwd_dq_kernel(kv_start_ref, kv_len_ref,       # scalar prefetch
     def _init():
         dq_scr[...] = jnp.zeros_like(dq_scr)
 
-    @pl.when(j < kv_len_ref[t])
+    mask, any_live = _ca_live_mask(q_pos_ref, kv_pos_ref, causal, window,
+                                   sink, rate, blk)
+    live = j < kv_len_ref[t]
+    if mask is not None:
+        live &= any_live
+
+    @pl.when(live)
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32)
         k = k_ref[0, :, 0, :].astype(jnp.float32)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         do = do_ref[0, :, 0, :].astype(jnp.float32)
-        m = _ca_mask(q_pos_ref[0, :], kv_pos_ref[0, :], causal, window)
+        m = mask if mask is not None else _ca_mask(
+            q_pos_ref[0, :], kv_pos_ref[0, :], causal, window, sink,
+            rate, blk)
         logits = _capped_masked_logits(q, k, m, scale, softcap)
         lse = lse_ref[0, 0, :]
         p = jnp.where(m, jnp.exp(logits - lse[:, None]), 0.0)
@@ -638,7 +715,8 @@ def _ca_bwd_dkv_kernel(kv_start_ref, kv_len_ref,      # scalar prefetch
                        q_pos_ref, kv_pos_ref, q_ref, k_ref, v_ref, do_ref,
                        lse_ref, delta_ref, dk_ref, dv_ref,
                        dk_scr, dv_scr, *,
-                       scale, softcap, causal, window, n_tasks):
+                       scale, softcap, causal, window, sink, rate, blk,
+                       n_tasks):
     n = pl.program_id(0)
     t = pl.program_id(2)
 
@@ -647,10 +725,16 @@ def _ca_bwd_dkv_kernel(kv_start_ref, kv_len_ref,      # scalar prefetch
         dk_scr[...] = jnp.zeros_like(dk_scr)
         dv_scr[...] = jnp.zeros_like(dv_scr)
 
-    # task t touches kv block n iff its prefix range covers it — a pure
-    # scalar-prefetch predicate, so untouched (block, task) pairs skip the
-    # whole body (the bwd analogue of the fwd's j < kv_len pruning)
-    covers = (kv_start_ref[t] <= n) & (n < kv_start_ref[t] + kv_len_ref[t])
+    # task t touches kv block n iff its prefix range covers it AND the
+    # mask keeps any (q, kv) pair of the block live — untouched
+    # (block, task) pairs skip the whole body (the bwd analogue of the
+    # fwd's mask-driven live-block iteration)
+    jrel = n - kv_start_ref[t]
+    covers = (jrel >= 0) & (jrel < kv_len_ref[t])
+    mask, any_live = _ca_live_mask(q_pos_ref, kv_pos_ref, causal, window,
+                                   sink, rate, blk)
+    if mask is not None:
+        covers &= any_live
 
     @pl.when(covers)
     def _compute():
@@ -658,7 +742,9 @@ def _ca_bwd_dkv_kernel(kv_start_ref, kv_len_ref,      # scalar prefetch
         k = k_ref[0, :, 0, :].astype(jnp.float32)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         do = do_ref[0, :, 0, :].astype(jnp.float32)
-        m = _ca_mask(q_pos_ref[0, :], kv_pos_ref[0, :], causal, window)
+        m = mask if mask is not None else _ca_mask(
+            q_pos_ref[0, :], kv_pos_ref[0, :], causal, window, sink,
+            rate, blk)
         logits = _capped_masked_logits(q, k, m, scale, softcap)
         lse = lse_ref[0, 0, :]
         p = jnp.where(m, jnp.exp(logits - lse[:, None]), 0.0)
@@ -675,8 +761,9 @@ def _ca_bwd_dkv_kernel(kv_start_ref, kv_len_ref,      # scalar prefetch
 
 
 def ca_server_bwd(q_tasks, k_buf, v_buf, out, lse, do, kv_start, kv_len,
-                  q_pos, kv_pos, *, causal=True, window=0, softcap=0.0,
-                  scale=None, jmax=None, interpret=True):
+                  q_pos, kv_pos, *, causal=True, window=0, sink=0,
+                  rate=1, softcap=0.0, scale=None, jmax=None,
+                  interpret=True):
     """Hand-written backward for ``ca_server_fwd`` from saved (out, lse).
 
     dq walks each task's kv prefix range exactly like the forward (same
@@ -719,7 +806,8 @@ def ca_server_bwd(q_tasks, k_buf, v_buf, out, lse, do, kv_start, kv_len,
     )
     dq = pl.pallas_call(
         functools.partial(_ca_bwd_dq_kernel, scale=scale, softcap=softcap,
-                          causal=causal, window=window, jmax=jmax),
+                          causal=causal, window=window, sink=sink,
+                          rate=rate, blk=blk, jmax=jmax),
         grid_spec=dq_grid_spec,
         out_shape=jax.ShapeDtypeStruct((T, blk, hq, dh), q_tasks.dtype),
         compiler_params=CompilerParams(
@@ -756,7 +844,8 @@ def ca_server_bwd(q_tasks, k_buf, v_buf, out, lse, do, kv_start, kv_len,
     )
     dk_h, dv_h = pl.pallas_call(
         functools.partial(_ca_bwd_dkv_kernel, scale=scale, softcap=softcap,
-                          causal=causal, window=window, n_tasks=T),
+                          causal=causal, window=window, sink=sink,
+                          rate=rate, blk=blk, n_tasks=T),
         grid_spec=dkv_grid_spec,
         out_shape=(jax.ShapeDtypeStruct((N, blk, hq, dh), jnp.float32),
                    jax.ShapeDtypeStruct((N, blk, hq, dh), jnp.float32)),

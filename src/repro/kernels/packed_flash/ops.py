@@ -37,35 +37,39 @@ def _resolve_bwd(bwd_impl) -> str:
 
 
 # ------------------------------------------------------------ packed flash
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11))
+# ``sink``/``rate`` trail the original args (keeping positional callers
+# valid): the unpacked static params of a non-causal MaskSpec
+# (DESIGN.md §12) — sliding-sink tokens and dilated block stride.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12, 13))
 def packed_flash_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
                            causal=True, window=0, softcap=0.0, scale=None,
-                           bwd_impl=None):
+                           bwd_impl=None, sink=0, rate=1):
     return K.flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal=causal,
-                       window=window, softcap=softcap, scale=scale,
-                       interpret=not _on_tpu())
+                       window=window, sink=sink, rate=rate, softcap=softcap,
+                       scale=scale, interpret=not _on_tpu())
 
 
 def _pf_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv, causal, window, softcap,
-            scale, bwd_impl):
+            scale, bwd_impl, sink, rate):
     out, lse = K.flash_fwd(q, k, v, seg_q, pos_q, seg_kv, pos_kv,
-                           causal=causal, window=window, softcap=softcap,
-                           scale=scale, interpret=not _on_tpu(),
-                           return_lse=True)
+                           causal=causal, window=window, sink=sink,
+                           rate=rate, softcap=softcap, scale=scale,
+                           interpret=not _on_tpu(), return_lse=True)
     return out, (q, k, v, seg_q, pos_q, seg_kv, pos_kv, out, lse)
 
 
-def _pf_bwd(causal, window, softcap, scale, bwd_impl, res, g):
+def _pf_bwd(causal, window, softcap, scale, bwd_impl, sink, rate, res, g):
     q, k, v, seg_q, pos_q, seg_kv, pos_kv, out, lse = res
     if _resolve_bwd(bwd_impl) == "pallas":
         dq, dk, dv = K.flash_bwd(q, k, v, out, lse, g, seg_q, pos_q,
                                  seg_kv, pos_kv, causal=causal,
-                                 window=window, softcap=softcap,
-                                 scale=scale, interpret=not _on_tpu())
+                                 window=window, sink=sink, rate=rate,
+                                 softcap=softcap, scale=scale,
+                                 interpret=not _on_tpu())
         return dq, dk, dv, None, None, None, None
     f = lambda q_, k_, v_: A.xla_flash_attention(
         q_, k_, v_, seg_q, pos_q, seg_kv, pos_kv, causal=causal,
-        window=window, softcap=softcap, scale=scale)
+        window=window, sink=sink, rate=rate, softcap=softcap, scale=scale)
     _, vjp = jax.vjp(f, q, k, v)
     dq, dk, dv = vjp(g)
     return dq, dk, dv, None, None, None, None
@@ -75,51 +79,58 @@ packed_flash_attention.defvjp(_pf_fwd, _pf_bwd)
 
 
 # -------------------------------------------------------------- CA server
-@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11, 12))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(7, 8, 9, 10, 11, 12, 13, 14))
 def ca_server_attention(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
                         kv_pos, causal=True, window=0, softcap=0.0,
-                        scale=None, jmax=0, bwd_impl=None):
+                        scale=None, jmax=0, bwd_impl=None, sink=0, rate=1):
     """Fused CA-task batch on an attention server (paper §4.1).
 
     ``jmax`` bounds the kv blocks any task may touch (0 -> all of k_buf);
-    the scheduler's plan guarantees every ``kv_len`` fits under it."""
+    the scheduler's plan guarantees every ``kv_len`` fits under it.
+    ``sink``/``rate`` carry a non-causal MaskSpec (DESIGN.md §12)."""
     return K.ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
-                           kv_pos, causal=causal, window=window,
-                           softcap=softcap, scale=scale, jmax=jmax or None,
-                           interpret=not _on_tpu())
+                           kv_pos, causal=causal, window=window, sink=sink,
+                           rate=rate, softcap=softcap, scale=scale,
+                           jmax=jmax or None, interpret=not _on_tpu())
 
 
 def _ca_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
-            causal, window, softcap, scale, jmax, bwd_impl):
+            causal, window, softcap, scale, jmax, bwd_impl, sink, rate):
     out, lse = K.ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len,
                                q_pos, kv_pos, causal=causal, window=window,
-                               softcap=softcap, scale=scale,
-                               jmax=jmax or None, interpret=not _on_tpu(),
-                               return_lse=True)
+                               sink=sink, rate=rate, softcap=softcap,
+                               scale=scale, jmax=jmax or None,
+                               interpret=not _on_tpu(), return_lse=True)
     return out, (q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
                  out, lse)
 
 
-def _ca_bwd(causal, window, softcap, scale, jmax, bwd_impl, res, g):
+def _ca_bwd(causal, window, softcap, scale, jmax, bwd_impl, sink, rate,
+            res, g):
     q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, out, lse = res
     if _resolve_bwd(bwd_impl) == "pallas":
         dq, dk, dv = K.ca_server_bwd(
             q_tasks, k_buf, v_buf, out, lse, g, kv_start, kv_len, q_pos,
-            kv_pos, causal=causal, window=window, softcap=softcap,
-            scale=scale, jmax=jmax or None, interpret=not _on_tpu())
+            kv_pos, causal=causal, window=window, sink=sink, rate=rate,
+            softcap=softcap, scale=scale, jmax=jmax or None,
+            interpret=not _on_tpu())
         return dq, dk, dv, None, None, None, None
     if causal:
         # blockwise-jnp recompute fallback — the attention-server scan
-        # path (dispatch._xla_server_bwd); its mask is causal-only
+        # path (dispatch._xla_server_bwd); mask params ride along
         from repro.core import dispatch as D
         f = lambda q_, k_, v_: D._xla_server(
             q_, k_, v_, kv_start, kv_len, q_pos, kv_pos,
-            jmax or k_buf.shape[0], softcap, window, scale)
+            jmax or k_buf.shape[0], softcap, window, scale, sink, rate)
     else:
+        from repro.core.mask import spec_from_params
         from repro.kernels.packed_flash import ref as R
+        spec = spec_from_params(window, sink, rate)
+        w = 0 if (spec is not None and spec.kind == "sliding") else window
         f = lambda q_, k_, v_: R.ref_ca_server_attention(
             q_, k_, v_, kv_start, kv_len, q_pos, kv_pos, causal=False,
-            window=window, softcap=softcap, scale=scale)
+            window=w, softcap=softcap, scale=scale, mask=spec)
     _, vjp = jax.vjp(f, q_tasks, k_buf, v_buf)
     dq, dk, dv = vjp(g)
     return dq, dk, dv, None, None, None, None

@@ -18,13 +18,53 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.attention import NEG_INF, ref_attention
+from repro.core.mask import pair_visible
 
 ref_packed_attention = ref_attention
 
 
+def ref_masked_attention(q, k, v, seg_q, pos_q, seg_kv, pos_kv, *,
+                         mask=None, blk=128, softcap=0.0, scale=None):
+    """Materialized oracle for every mask family (DESIGN.md §12).
+
+    Independent of the kernels and of ``core.attention.mask_fn``: the
+    full [B, Sq, Skv] visibility matrix is built inline from segments,
+    in-document positions, and the :class:`~repro.core.mask.MaskSpec`
+    terms, then run through a plain softmax.  ``blk`` is the block
+    granularity the dilated family strides over (the kernel tile size).
+    The differential suite checks kernel fwd/bwd against this.
+    """
+    hq, hkv = q.shape[2], k.shape[2]
+    rep = hq // hkv
+    if rep > 1:
+        b, s, _, dh = k.shape
+        k = jnp.broadcast_to(k[:, :, :, None, :],
+                             (b, s, hkv, rep, dh)).reshape(b, s, hq, dh)
+        v = jnp.broadcast_to(v[:, :, :, None, :],
+                             (b, s, hkv, rep, dh)).reshape(b, s, hq, dh)
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap and softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    pq = pos_q[:, :, None]
+    pk = pos_kv[:, None, :]
+    m = (seg_q[:, :, None] == seg_kv[:, None, :]) \
+        & (seg_q[:, :, None] > 0) & (seg_kv[:, None, :] > 0) \
+        & (pq >= pk)
+    extra = pair_visible(mask, pq, pk, blk)
+    if extra is not None:
+        m = m & extra
+    logits = jnp.where(m[:, None, :, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(m.any(axis=-1)[:, None, :, None], p, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def ref_ca_server_attention(q_tasks, k_buf, v_buf, kv_start, kv_len,
                             q_pos, kv_pos, *, softcap=0.0, window=0,
-                            causal=True, scale=None):
+                            causal=True, scale=None, mask=None):
     """Oracle for the fused CA-task kernel.
 
     q_tasks [T, blk, Hq, dh]   query blocks (one per CA-task slot)
@@ -70,6 +110,10 @@ def ref_ca_server_attention(q_tasks, k_buf, v_buf, kv_start, kv_len,
     if window and window > 0:
         m = m & ((q_pos[:, None, :, None] - kpf[None, None, None, :])
                  < window)
+    extra = pair_visible(mask, q_pos[:, None, :, None],
+                         kpf[None, None, None, :], blk)
+    if extra is not None:
+        m = m & extra
     logits = jnp.where(m, logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     p = jnp.where(m.any(-1)[..., None], p, 0.0)

@@ -15,7 +15,10 @@ imbalance budget), --prefetch (async plan look-ahead; 0 = synchronous),
 "1,0.5" gives rank 1 half the FLOPs), --calibrate (runtime cost-model
 calibration: per-server kernel timings are probed every
 --calibrate-every steps and fed back so later batches are planned from
-measured costs), --fault-schedule (elastic pool membership: a
+measured costs), --mask (attention task shape beyond dense causal:
+"sliding:window=256,sink=16" or "dilated:rate=4" — planning prices
+tasks by live blocks and the kernels apply the matching in-block mask,
+DESIGN.md §12), --fault-schedule (elastic pool membership: a
 deterministic FaultSchedule spec like "kill:1@5" or "flap:0@3+2,
 slow:2x4@4-8" — killed/drained servers are excluded from subsequent
 plans and flapped servers rejoin, DESIGN.md §9), --speculate-pct
@@ -60,6 +63,12 @@ def main():
                     help="kv blocks resident per streamed chunk; "
                          "lets dispatch serve tasks whose kv prefix "
                          "exceeds every --server-hbm budget (0 = off)")
+    ap.add_argument("--mask", default="",
+                    help="attention task shape (DESIGN.md §12): "
+                         "'causal' (default), "
+                         "'sliding:window=N[,sink=M]', "
+                         "'dilated:rate=R'; live-block planning + "
+                         "masked kernels")
     ap.add_argument("--calibrate", action="store_true",
                     help="runtime cost-model calibration: probe "
                          "per-server CA timings and replan from them")
@@ -105,15 +114,16 @@ def main():
             tolerance=args.tolerance, plan_policy=args.plan_policy,
             prefetch=args.prefetch, server_speeds=speeds,
             server_hbm=hbm, stream_chunk=args.stream_chunk,
-            calibrate=args.calibrate)
+            calibrate=args.calibrate, mask=args.mask or None)
         ctx = None
     else:
         if args.cad:
             print(f"note: {cfg.arch_id} is attention-free; CAD is "
                   f"inapplicable (DESIGN.md §5) — training without it")
-        if args.calibrate or speeds or args.fault_schedule:
-            print("note: --calibrate/--server-speeds/--fault-schedule "
-                  "only apply to the CAD attention service — ignored")
+        if args.calibrate or speeds or args.fault_schedule or args.mask:
+            print("note: --calibrate/--server-speeds/--fault-schedule/"
+                  "--mask only apply to the CAD attention service — "
+                  "ignored")
         ctx = ParallelContext(attn_impl="xla", remat=True)
     tc = TrainConfig(steps=args.steps, peak_lr=args.lr,
                      warmup=max(1, args.steps // 10),

@@ -1,0 +1,529 @@
+"""Mask-oracle differential suite (DESIGN.md §12).
+
+Block-sparse and document-masked attention as first-class task shapes:
+
+  * spec validation — every malformed :class:`MaskSpec` (and spec ×
+    layout combination) raises a typed :class:`MaskSpecError` naming the
+    offending parameter, segment, or task;
+  * live-block accounting — the cost model's ``live_block_table`` equals
+    an independent any-pair-visible recompute at token granularity, for
+    random specs (the count planners price tasks by);
+  * kernel parity — packed pallas kernels (interpret mode) and the XLA
+    fallback match the materialized ``ref_masked_attention`` oracle,
+    forward AND gradients, across causal/sliding/dilated masks;
+  * CAD dispatch parity — a planned, disaggregated step under a mask
+    matches the monolithic oracle, and live-block-priced loads match an
+    independent recompute;
+  * cross-document isolation — an impulse-response regression proves
+    ZERO attention mass crosses packed document boundaries in fused
+    batches, on every implementation and mask family (the doc-boundary
+    wiring of data/packing.py).
+
+Runs under hypothesis when installed; otherwise the same generators run
+as a seeded random sweep (the ``property_case`` pattern of
+``test_planner_properties.py``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cad import get_planner
+from repro.core import CADConfig, CADContext, cad_attention, ref_attention
+from repro.core.attention import xla_flash_attention
+from repro.core.cost_model import CommModel, MemoryModel
+from repro.core.mask import (MaskSpec, MaskSpecError, live_block_mask,
+                             live_block_table, live_kv_len, mask_params,
+                             pair_visible, parse_mask, spec_from_params,
+                             validate_mask_layout)
+from repro.core.scheduler import block_costs, layout_from_segments
+from repro.data.packing import pack_documents
+from repro.kernels.packed_flash import kernel as K
+from repro.kernels.packed_flash import ops as O
+from repro.kernels.packed_flash.ref import ref_masked_attention
+from repro.parallel import ParallelContext
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+N_EXAMPLES = 25
+
+
+class RngSampler:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def int_(self, lo, hi):
+        return int(self._rng.integers(lo, hi + 1))
+
+    def choice(self, seq):
+        return seq[self.int_(0, len(seq) - 1)]
+
+    def bool_(self, p=0.5):
+        return bool(self._rng.random() < p)
+
+
+class HypSampler:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def int_(self, lo, hi):
+        return self._draw(st.integers(lo, hi))
+
+    def choice(self, seq):
+        return self._draw(st.sampled_from(list(seq)))
+
+    def bool_(self, p=0.5):
+        return self._draw(st.booleans())
+
+
+def property_case(fn):
+    if HAVE_HYPOTHESIS:
+        def hyp_wrapper(data):
+            fn(HypSampler(data.draw))
+        hyp_wrapper.__name__ = fn.__name__
+        hyp_wrapper.__doc__ = fn.__doc__
+        return settings(max_examples=N_EXAMPLES, deadline=None)(
+            given(st.data())(hyp_wrapper))
+
+    def sweep_wrapper(seed):
+        fn(RngSampler(np.random.default_rng(seed)))
+    sweep_wrapper.__name__ = fn.__name__
+    sweep_wrapper.__doc__ = fn.__doc__
+    return pytest.mark.parametrize("seed", range(N_EXAMPLES))(sweep_wrapper)
+
+
+def gen_mask(s, blk):
+    """A random spec (None = dense causal) with parameters scaled to
+    ``blk`` so the mask actually bites on small layouts."""
+    kind = s.choice([None, "causal", "sliding", "dilated"])
+    if kind is None:
+        return None
+    if kind == "causal":
+        return MaskSpec()
+    if kind == "sliding":
+        return MaskSpec(kind="sliding",
+                        window=s.choice([blk // 2, blk, 2 * blk]),
+                        sink=s.choice([0, 0, blk // 4, blk]))
+    return MaskSpec(kind="dilated", rate=s.choice([2, 3, 4]))
+
+
+def aligned_layout(s, rows, n_blocks, blk):
+    """Random packed layout honoring the pipeline contract: doc starts
+    are blk-aligned, a doc's last block may be partially filled, ids are
+    globally unique, in-doc positions restart at 0."""
+    segs = np.zeros((rows, n_blocks * blk), np.int32)
+    poss = np.zeros((rows, n_blocks * blk), np.int32)
+    sid = 1
+    for r in range(rows):
+        t = 0
+        while t < n_blocks:
+            if s.bool_(0.15):
+                t += 1
+                continue
+            dbl = s.int_(1, min(4, n_blocks - t))
+            tokens = dbl * blk
+            if s.bool_(0.3):
+                tokens -= s.int_(0, blk - 1)
+            segs[r, t * blk:t * blk + tokens] = sid
+            poss[r, t * blk:t * blk + tokens] = np.arange(tokens)
+            sid += 1
+            t += dbl
+    return segs, poss
+
+
+# ======================================================== spec validation
+@pytest.mark.parametrize("ctor,match", [
+    (lambda: MaskSpec(kind="bogus"), "unknown mask kind"),
+    (lambda: MaskSpec(kind="causal", window=5),
+     "takes no window/sink/rate"),
+    (lambda: MaskSpec(kind="sliding", window=0), "zero-live-block"),
+    (lambda: MaskSpec(kind="sliding", window=4, sink=-1),
+     "sink must be >= 0"),
+    (lambda: MaskSpec(kind="sliding", window=4, rate=2),
+     "does not take rate"),
+    (lambda: MaskSpec(kind="dilated", rate=0), "zero-live-block"),
+    (lambda: MaskSpec(kind="dilated", rate=2, window=3),
+     "does not take window/sink"),
+    (lambda: parse_mask("sliding:width=4"), "bad mask parameter"),
+    (lambda: parse_mask("sliding:window=abc"), "not an integer"),
+    (lambda: parse_mask("blocky"), "unknown mask kind"),
+])
+def test_malformed_specs_raise_typed_errors(ctor, match):
+    with pytest.raises(MaskSpecError, match=match):
+        ctor()
+    with pytest.raises(ValueError):        # MaskSpecError IS a ValueError
+        ctor()
+
+
+def test_error_names_segment_and_task():
+    e = MaskSpecError("boom", segment=7)
+    assert "(segment 7)" in str(e) and e.segment == 7
+    e = MaskSpecError("boom", task=3)
+    assert "(task 3)" in str(e) and e.task == 3
+
+
+@pytest.mark.parametrize("text,spec", [
+    ("", MaskSpec()),
+    ("causal", MaskSpec()),
+    ("sliding:window=256,sink=16",
+     MaskSpec(kind="sliding", window=256, sink=16)),
+    ("dilated:rate=4", MaskSpec(kind="dilated", rate=4)),
+])
+def test_parse_roundtrip(text, spec):
+    assert parse_mask(text) == spec
+    assert parse_mask(spec.describe()) == spec
+
+
+def test_mask_params_spec_roundtrip():
+    for spec in (MaskSpec(kind="sliding", window=32, sink=8),
+                 MaskSpec(kind="dilated", rate=3)):
+        assert spec_from_params(*mask_params(spec)) == spec
+    # trivial specs unpack to the caller's window and reconstruct to None
+    assert mask_params(None, 7) == (7, 0, 1)
+    assert mask_params(MaskSpec(), 7) == (7, 0, 1)
+    assert spec_from_params(7, 0, 1) is None
+
+
+# ==================================================== layout validation
+BLK = 16
+
+
+def test_layout_overlapping_runs_in_row():
+    seg = np.zeros(8 * BLK, np.int32)
+    seg[0:BLK] = 1
+    seg[2 * BLK:3 * BLK] = 1          # id 1 again, non-contiguous
+    with pytest.raises(MaskSpecError,
+                       match="occupies multiple runs") as ei:
+        validate_mask_layout(None, seg, BLK)
+    assert ei.value.segment == 1
+
+
+def test_layout_segment_spans_rows():
+    seg = np.zeros((2, 4 * BLK), np.int32)
+    seg[0, :BLK] = 5
+    seg[1, :BLK] = 5
+    with pytest.raises(MaskSpecError, match="spans rows") as ei:
+        validate_mask_layout(None, seg, BLK)
+    assert ei.value.segment == 5
+
+
+def test_layout_misaligned_segment_start():
+    seg = np.zeros(4 * BLK, np.int32)
+    seg[BLK + 3: 2 * BLK] = 1          # starts mid-block
+    with pytest.raises(MaskSpecError, match="not aligned"):
+        validate_mask_layout(None, seg, BLK)
+
+
+def test_window_larger_than_kv_names_longest_doc():
+    seg = np.zeros((1, 8 * BLK), np.int32)
+    seg[0, :2 * BLK] = 1
+    seg[0, 2 * BLK:5 * BLK] = 2        # longest: 3 blocks
+    spec = MaskSpec(kind="sliding", window=100 * BLK)
+    with pytest.raises(MaskSpecError, match="larger than kv") as ei:
+        validate_mask_layout(spec, seg, BLK)
+    assert ei.value.segment == 2
+    # a window that fits the longest doc passes
+    validate_mask_layout(MaskSpec(kind="sliding", window=BLK), seg, BLK)
+
+
+def test_packed_pipeline_layout_validates():
+    chunks = pack_documents([100, 300, 60, 500, 17], 512, 2, block=128)
+    segs = np.stack([c.segment_ids for c in chunks])
+    validate_mask_layout(None, segs, 128)
+    validate_mask_layout(MaskSpec(kind="dilated", rate=2), segs, 128)
+
+
+# ================================================== live-block accounting
+@property_case
+def test_live_block_table_equals_independent_recompute(s):
+    """Cost-model liveness == brute-force any-pair-visible at token
+    granularity (full blocks): the count planners price tasks by is
+    exactly what a kernel that skips fully-dead blocks executes."""
+    blk = s.choice([8, 16])
+    nb = s.int_(1, 6)
+    spec = gen_mask(s, blk)
+    got = live_block_mask(spec, nb, nb, blk)
+    pq = np.arange(nb * blk)[:, None]
+    pk = np.arange(nb * blk)[None, :]
+    vis = pq >= pk
+    extra = pair_visible(spec, pq, pk, blk)
+    if extra is not None:
+        vis = vis & extra
+    exact = vis.reshape(nb, blk, nb, blk).any(axis=(1, 3))
+    np.testing.assert_array_equal(got, exact)
+    np.testing.assert_array_equal(live_block_table(spec, nb, blk),
+                                  exact.sum(axis=1))
+    for kvb in range(1, nb + 1):
+        assert live_kv_len(spec, kvb, blk) \
+            == int(exact[kvb - 1].sum()) * blk
+
+
+@property_case
+def test_masked_cost_never_exceeds_dense(s):
+    """Live-block pricing is monotone: a mask can only remove work."""
+    blk = s.choice([8, 16])
+    spec = gen_mask(s, blk)
+    segs, _ = aligned_layout(s, s.int_(1, 3), s.int_(2, 8), blk)
+    _docs, doc_of, bi_of = layout_from_segments(segs, blk, segs.shape[0])
+    dense = block_costs(doc_of, bi_of, blk)
+    masked = block_costs(doc_of, bi_of, blk, None, spec)
+    assert (masked <= dense + 1e-9).all()
+    assert (masked[doc_of >= 0] > 0).all()      # no zero-live-block task
+    mm = MemoryModel(CommModel(2, 8, 2))
+    for kvb in (1, 3):
+        assert mm.task_bytes(blk, kvb * blk, spec, blk) \
+            <= mm.task_bytes(blk, kvb * blk) + 1e-9
+
+
+# ===================================================== oracle differential
+def _rand_inputs(key, segs, poss, hq=4, hkv=2, dh=32):
+    b, sl = segs.shape
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, sl, hq, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, sl, hkv, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, sl, hkv, dh), jnp.float32)
+    return q, k, v, jnp.asarray(segs), jnp.asarray(poss)
+
+
+MASKS_128 = [
+    None,
+    MaskSpec(kind="sliding", window=96),
+    MaskSpec(kind="sliding", window=64, sink=32),
+    MaskSpec(kind="dilated", rate=2),
+    MaskSpec(kind="dilated", rate=3),
+]
+
+
+@property_case
+def test_ref_paths_agree(s):
+    """Two independent oracle constructions (scan-free mask_fn vs the
+    materialized matrix) agree for random specs and layouts."""
+    blk = 128
+    spec = gen_mask(s, blk)
+    segs, poss = aligned_layout(s, 1, s.int_(2, 4), blk)
+    q, k, v, seg, pos = _rand_inputs(jax.random.PRNGKey(s.int_(0, 99)),
+                                     segs, poss)
+    window, sink, rate = mask_params(spec)
+    a = ref_attention(q, k, v, seg, pos, seg, pos, window=window,
+                      sink=sink, rate=rate, blk=blk)
+    b = ref_masked_attention(q, k, v, seg, pos, seg, pos, mask=spec,
+                             blk=blk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("spec", MASKS_128)
+def test_xla_flash_matches_oracle_fwd_bwd(spec):
+    segs, poss = aligned_layout(RngSampler(np.random.default_rng(5)),
+                                2, 3, 128)
+    q, k, v, seg, pos = _rand_inputs(jax.random.PRNGKey(7), segs, poss)
+    window, sink, rate = mask_params(spec)
+
+    def loss_x(q_, k_, v_):
+        return jnp.sum(xla_flash_attention(
+            q_, k_, v_, seg, pos, seg, pos, window=window, sink=sink,
+            rate=rate, blk=128, q_block=128, kv_block=128))
+
+    def loss_r(q_, k_, v_):
+        return jnp.sum(ref_masked_attention(q_, k_, v_, seg, pos, seg,
+                                            pos, mask=spec, blk=128))
+
+    np.testing.assert_allclose(
+        np.asarray(xla_flash_attention(q, k, v, seg, pos, seg, pos,
+                                       window=window, sink=sink,
+                                       rate=rate, blk=128)),
+        np.asarray(ref_masked_attention(q, k, v, seg, pos, seg, pos,
+                                        mask=spec, blk=128)), atol=2e-5)
+    gx = jax.grad(loss_x, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gx, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4)
+
+
+@pytest.mark.parametrize("spec", MASKS_128)
+def test_pallas_packed_matches_oracle_fwd_bwd(spec):
+    segs, poss = aligned_layout(RngSampler(np.random.default_rng(11)),
+                                1, 3, 128)
+    q, k, v, seg, pos = _rand_inputs(jax.random.PRNGKey(13), segs, poss)
+    window, sink, rate = mask_params(spec)
+
+    def loss_p(q_, k_, v_):
+        return jnp.sum(O.packed_flash_attention(
+            q_, k_, v_, seg, pos, seg, pos, True, window, 0.0, None,
+            None, sink, rate))
+
+    def loss_r(q_, k_, v_):
+        return jnp.sum(ref_masked_attention(q_, k_, v_, seg, pos, seg,
+                                            pos, mask=spec, blk=128))
+
+    out = K.flash_fwd(q, k, v, seg, pos, seg, pos, window=window,
+                      sink=sink, rate=rate)
+    exp = ref_masked_attention(q, k, v, seg, pos, seg, pos, mask=spec,
+                               blk=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5)
+    gp = jax.grad(loss_p, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4)
+
+
+# ========================================================= CAD dispatch
+def _cad_setup(policy, spec, seed=0, d=2, nb=6, blk=16):
+    s = RngSampler(np.random.default_rng(seed))
+    segs, poss = aligned_layout(s, d, nb, blk)
+    cfg = CADConfig(n_servers=d, blk=blk, nb=nb, cq=nb, ckv=2 * nb,
+                    nkv=4 * nb)
+    res = get_planner(policy)(cfg, segs, comm=CommModel(4, 32, 2),
+                              tolerance=0.1, mask=spec)
+    return cfg, segs, poss, res
+
+
+@pytest.mark.parametrize("spec", [
+    MaskSpec(kind="sliding", window=24),
+    MaskSpec(kind="sliding", window=16, sink=16),
+    MaskSpec(kind="dilated", rate=2),
+])
+@pytest.mark.parametrize("policy", ["identity", "balanced"])
+def test_cad_masked_matches_oracle(policy, spec):
+    """Disaggregated serving under a mask-structured plan equals the
+    monolithic oracle — q/kv routing, live-block splits and all."""
+    cfg, segs, poss, res = _cad_setup(policy, spec, seed=3)
+    plan = jax.tree.map(jnp.asarray, res.plan)
+    q, k, v, seg, pos = _rand_inputs(jax.random.PRNGKey(17), segs, poss)
+    cad = CADContext(cfg=cfg, plan=plan, kernel="xla", jmax=cfg.nkv,
+                     mask=spec)
+    ctx = ParallelContext(mesh=None, attn_impl="cad", cad=cad)
+    out = cad_attention(q, k, v, seg, pos, seg, pos, ctx=ctx, mask=spec)
+    exp = ref_masked_attention(q, k, v, seg, pos, seg, pos, mask=spec,
+                               blk=cfg.blk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5)
+
+
+def test_cad_masked_grads_match_oracle():
+    spec = MaskSpec(kind="sliding", window=24, sink=16)
+    cfg, segs, poss, res = _cad_setup("balanced", spec, seed=4)
+    plan = jax.tree.map(jnp.asarray, res.plan)
+    q, k, v, seg, pos = _rand_inputs(jax.random.PRNGKey(19), segs, poss)
+    cad = CADContext(cfg=cfg, plan=plan, kernel="xla", jmax=cfg.nkv,
+                     mask=spec)
+    ctx = ParallelContext(mesh=None, attn_impl="cad", cad=cad)
+
+    def loss_c(q_, k_, v_):
+        return jnp.sum(cad_attention(q_, k_, v_, seg, pos, seg, pos,
+                                     ctx=ctx, mask=spec))
+
+    def loss_r(q_, k_, v_):
+        return jnp.sum(ref_masked_attention(q_, k_, v_, seg, pos, seg,
+                                            pos, mask=spec, blk=cfg.blk))
+
+    gc = jax.grad(loss_c, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gc, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4)
+
+
+@property_case
+def test_masked_plan_loads_match_recompute(s):
+    """Planner loads under a mask equal the independent live-block
+    recompute, and masked balanced planning never leaves a server with
+    more modeled time than identity."""
+    blk = 16
+    spec = gen_mask(s, blk)
+    d = s.int_(2, 4)
+    segs, _ = aligned_layout(s, d, s.int_(3, 8), blk)
+    cfg = CADConfig(n_servers=d, blk=blk, nb=segs.shape[1] // blk,
+                    cq=segs.shape[1] // blk,
+                    ckv=2 * (segs.shape[1] // blk),
+                    nkv=4 * (segs.shape[1] // blk))
+    for policy in ("identity", "balanced"):
+        res = get_planner(policy)(cfg, segs, comm=None, tolerance=0.1,
+                                  mask=spec)
+        _docs, doc_of, bi_of = layout_from_segments(segs, blk, d)
+        cost = block_costs(doc_of, bi_of, blk, None, spec)
+        live = doc_of >= 0
+        expect = np.zeros(d)
+        np.add.at(expect, res.assign[live].astype(np.int64), cost[live])
+        np.testing.assert_allclose(res.loads, expect, rtol=1e-9)
+    ident = get_planner("identity")(cfg, segs, comm=None, tolerance=0.1,
+                                    mask=spec)
+    bal = get_planner("balanced")(cfg, segs, comm=None, tolerance=0.1,
+                                  mask=spec)
+    assert bal.loads.max() <= ident.loads.max() * (1 + 1e-9)
+
+
+# ==================================================== cross-doc isolation
+def _impulse_v(segs, n_docs, hkv, blk_dh):
+    """v whose channel ``sid - 1`` is 1 for tokens of doc ``sid`` — any
+    output mass on another doc's channel IS cross-document attention."""
+    b, sl = segs.shape
+    v = np.zeros((b, sl, hkv, blk_dh), np.float32)
+    for sid in range(1, n_docs + 1):
+        rows, cols = np.nonzero(segs == sid)
+        v[rows, cols, :, sid - 1] = 1.0
+    return jnp.asarray(v)
+
+
+@pytest.mark.parametrize("spec", [None,
+                                  MaskSpec(kind="sliding", window=96,
+                                           sink=32),
+                                  MaskSpec(kind="dilated", rate=2)])
+def test_zero_cross_document_attention_mass(spec):
+    """Impulse-response regression over the REAL packing path: docs
+    sharing a fused chunk must exchange exactly zero attention mass, on
+    the oracle, the XLA fallback, the pallas kernel, and the planned CAD
+    dispatch."""
+    chunks = pack_documents([200, 100, 150, 300, 60, 180], 512, 2,
+                            block=128)
+    segs = np.stack([c.segment_ids for c in chunks])
+    poss = np.stack([c.positions for c in chunks])
+    n_docs = int(segs.max())
+    dh = max(32, n_docs)
+    key = jax.random.PRNGKey(23)
+    ks = jax.random.split(key, 2)
+    q = jax.random.normal(ks[0], (2, 512, 4, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 512, 2, dh), jnp.float32)
+    v = _impulse_v(segs, n_docs, 2, dh)
+    seg, pos = jnp.asarray(segs), jnp.asarray(poss)
+    window, sink, rate = mask_params(spec)
+
+    outs = {
+        "oracle": ref_masked_attention(q, k, v, seg, pos, seg, pos,
+                                       mask=spec, blk=128),
+        "xla": xla_flash_attention(q, k, v, seg, pos, seg, pos,
+                                   window=window, sink=sink, rate=rate,
+                                   blk=128),
+        "pallas": K.flash_fwd(q, k, v, seg, pos, seg, pos, window=window,
+                              sink=sink, rate=rate),
+    }
+    cfg = CADConfig(n_servers=2, blk=128, nb=4, cq=4, ckv=8, nkv=16)
+    res = get_planner("balanced")(cfg, segs, comm=CommModel(4, dh, 2),
+                                  tolerance=0.1, mask=spec)
+    cad = CADContext(cfg=cfg, plan=jax.tree.map(jnp.asarray, res.plan),
+                     kernel="xla", jmax=cfg.nkv, mask=spec)
+    ctx = ParallelContext(mesh=None, attn_impl="cad", cad=cad)
+    outs["cad"] = cad_attention(q, k, v, seg, pos, seg, pos, ctx=ctx,
+                                mask=spec)
+
+    for name, out in outs.items():
+        arr = np.asarray(out)
+        for sid in range(1, n_docs + 1):
+            rows, cols = np.nonzero(segs == sid)
+            others = [c for c in range(n_docs) if c != sid - 1]
+            leak = np.abs(arr[rows, cols][..., others]).max() \
+                if len(rows) else 0.0
+            assert leak == 0.0, \
+                f"{name}: doc {sid} receives attention mass {leak} " \
+                f"from other documents (spec={spec})"
+        # padding tokens attend nothing at all
+        prow, pcol = np.nonzero(segs == 0)
+        if len(prow):
+            assert np.abs(arr[prow, pcol]).max() == 0.0, \
+                f"{name}: padding rows carry attention output"

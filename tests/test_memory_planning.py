@@ -27,6 +27,7 @@ import pytest
 from repro.cad import CADConfig, PlanMemoryError, get_planner
 from repro.cad.session import CADSession
 from repro.core.cost_model import CommModel, MemoryModel
+from repro.core.mask import MaskSpec
 from repro.core.dispatch import (CADContext, assemble_step_outputs,
                                  build_server_inputs, serve_task_batch,
                                  stream_task_batch)
@@ -183,6 +184,44 @@ def test_stream_serve_bit_identical(chunk):
             cad, inputs[s], plans_r[s], stream_chunk=chunk))
         assert plain.tobytes() == streamed.tobytes(), \
             f"server {s} chunk {chunk} not bit-identical"
+
+
+@pytest.mark.parametrize("spec", [
+    MaskSpec(kind="sliding", window=24),
+    MaskSpec(kind="sliding", window=16, sink=16),
+    MaskSpec(kind="dilated", rate=2),
+])
+@pytest.mark.parametrize("chunk", [1, 3, 5])
+def test_stream_bit_identical_under_masks(chunk, spec):
+    """Streaming must commute with every task shape (DESIGN.md §12):
+    chunked kv serving under sliding/sink/dilated masks is bit-identical
+    to the unstreamed masked path, for ragged chunk sizes too.  The
+    online-softmax no-op property makes this exact, not approximate:
+    fully-masked kv positions contribute exp(-inf) = 0 in either
+    partitioning."""
+    segs = _segs_one_long_doc(n_ranks=2, nb=4)
+    cfg = _cfg(n_ranks=2, nb=4)
+    res = get_planner("balanced")(cfg, segs, comm=COMM, tolerance=0.05,
+                                  mask=spec)
+    D, s_len = segs.shape
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(kq, (D, s_len, 2, 16), jnp.float32)
+    k = jax.random.normal(kk, (D, s_len, 2, 16), jnp.float32)
+    v = jax.random.normal(kv, (D, s_len, 2, 16), jnp.float32)
+    pos = jnp.asarray(np.where(segs > 0, np.arange(s_len)[None, :],
+                               -1).astype(np.int32))
+    cad = CADContext(cfg=cfg, kernel="xla", mask=spec)
+    inputs, plans_r = build_server_inputs(cad, res.plan, q, k, v, pos)
+    for s in range(D):
+        plain = np.asarray(serve_task_batch(cad, inputs[s], plans_r[s]))
+        streamed = np.asarray(serve_task_batch(
+            cad, inputs[s], plans_r[s], stream_chunk=chunk))
+        explicit = np.asarray(stream_task_batch(
+            cad, inputs[s], plans_r[s], chunk_blocks=chunk))
+        assert plain.tobytes() == streamed.tobytes() \
+            == explicit.tobytes(), \
+            f"server {s} chunk {chunk} mask {spec.describe()} " \
+            f"not bit-identical"
 
 
 def test_stream_via_config_and_explicit_call():

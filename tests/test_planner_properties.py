@@ -27,6 +27,7 @@ import pytest
 from repro.cad import (CADConfig, PlanCapacityError, PlanMemoryError,
                        available_policies, get_planner)
 from repro.core.cost_model import CommModel, CostModel, MemoryModel
+from repro.core.mask import MaskSpec
 from repro.core.plan import identity_assignment, plan_from_assignment
 from repro.core.scheduler import (assignment_resident_bytes, block_costs,
                                   layout_from_segments)
@@ -447,3 +448,97 @@ def test_stats_moves_match_assignment(s):
         if res.stats["n_moves"] == 0:
             assert moved == 0
     assert res.stats["comm_bytes"] >= 0.0
+
+
+# --------------------------------------------- mask-structured tasks (§12)
+def gen_mask(s):
+    """Random non-trivial task-shape spec scaled to BLK (DESIGN.md §12)."""
+    if s.choice(["sliding", "dilated"]) == "sliding":
+        return MaskSpec(kind="sliding",
+                        window=s.choice([BLK // 2, BLK, 3 * BLK]),
+                        sink=s.choice([0, BLK]))
+    return MaskSpec(kind="dilated", rate=s.choice([2, 3, 4]))
+
+
+def run_policy_mask(policy, cfg, segs, cost_model, tolerance, mask):
+    return get_planner(policy)(cfg, segs, comm=None, tolerance=tolerance,
+                               cost_model=cost_model, mask=mask)
+
+
+@property_case
+def test_masked_coverage_loads_and_capacities(s):
+    """Mask-structured splits keep every plan invariant: exactly-once
+    coverage, dense send prefixes within static capacities, loads equal
+    to the live-block cost recompute (work conserved under speeds), and
+    bit-identical replanning."""
+    cfg, segs, cm, tol = gen_scenario(s)
+    mask = gen_mask(s)
+    policy = s.choice(POLICIES)
+    res = run_policy_mask(policy, cfg, segs, cm, tol, mask)
+    _docs, doc_of, bi_of = layout_from_segments(segs, cfg.blk,
+                                                cfg.n_servers)
+    served, dupes = plan_served_blocks(cfg, res.plan)
+    assert not dupes, f"{policy}/{mask.describe()}: served twice: {dupes}"
+    for g in range(cfg.n_servers * cfg.nb):
+        if doc_of[g] >= 0:
+            assert g in served and served[g] == int(res.assign[g]), \
+                f"{policy}/{mask.describe()}: block {g} miscovered"
+        else:
+            assert g not in served
+    for key in ("q_send_idx", "kv_send_idx"):
+        arr = np.asarray(res.plan[key])
+        cap = cfg.cq if key == "q_send_idx" else cfg.ckv
+        assert ((arr >= 0).sum(-1) <= cap).all()
+        live = arr >= 0
+        assert not (~live[..., :-1] & live[..., 1:]).any()
+    cost = block_costs(doc_of, bi_of, cfg.blk, cm, mask)
+    live = doc_of >= 0
+    expect = np.zeros(cfg.n_servers)
+    np.add.at(expect, res.assign[live].astype(np.int64), cost[live])
+    np.testing.assert_allclose(res.loads, expect / cfg.speeds(),
+                               rtol=1e-9)
+    np.testing.assert_allclose((res.loads * cfg.speeds()).sum(),
+                               cost[live].sum(), rtol=1e-9)
+    again = run_policy_mask(policy, cfg, segs, cm, tol, mask)
+    np.testing.assert_array_equal(res.assign, again.assign)
+
+
+@property_case
+def test_masked_balanced_and_memory_budget(s):
+    """Under live-block pricing the greedy scheduler still never leaves
+    a higher max modeled time than identity, and HBM budgets keep their
+    inclusive-fit guarantee (residency is the full kv prefix the gather
+    buffer realizes, mask or not — DESIGN.md §11/§12)."""
+    cfg, segs, cm, tol = gen_scenario(s)
+    mask = gen_mask(s)
+    ident = run_policy_mask("identity", cfg, segs, cm, tol, mask)
+    bal = run_policy_mask("balanced", cfg, segs, cm, tol, mask)
+    assert bal.loads.max() <= ident.loads.max() * (1 + 1e-9), \
+        (mask.describe(), bal.loads, ident.loads)
+    mem = MemoryModel(CommModel(2, 8, 2))
+    policy = s.choice(POLICIES)
+    base = get_planner(policy)(cfg, segs, comm=None, tolerance=tol,
+                               cost_model=cm, mem_model=mem, mask=mask)
+    resident0 = np.asarray(base.resident_bytes, np.float64)
+    if resident0.max() <= 0:
+        return                               # all-padding batch
+    budgets = np.full(cfg.n_servers, s.choice([1.0, 0.7]) *
+                      resident0.max())
+    try:
+        res = get_planner(policy)(cfg, segs, comm=None, tolerance=tol,
+                                  cost_model=cm, mem_model=mem,
+                                  budgets=budgets, mask=mask)
+    except PlanMemoryError as e:
+        assert e.resident_bytes > e.budget_bytes >= 0
+        return
+    docs, doc_of, bi_of = layout_from_segments(segs, cfg.blk,
+                                               cfg.n_servers)
+    rec = assignment_resident_bytes(res.assign, doc_of, bi_of, cfg.blk,
+                                    cfg.n_servers, mem,
+                                    streamed=res.streamed)
+    np.testing.assert_allclose(np.asarray(res.resident_bytes), rec,
+                               rtol=1e-9)
+    assert (np.asarray(res.resident_bytes) <= budgets + 1e-9).all()
+    served, dupes = plan_served_blocks(cfg, res.plan)
+    assert not dupes
+    assert len(served) == int((doc_of >= 0).sum())
