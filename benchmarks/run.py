@@ -31,6 +31,12 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py format).
                                     live-block-priced planning reaches
                                     <=1.1 compute max/mean where
                                     area-priced planning exceeds 1.4
+  cad_vs_ring           DESIGN §13 — CAD vs the in-repo ring/context-
+                                    parallel baseline at 128k-512k:
+                                    live-compute max/mean and modeled
+                                    step time (barrier-per-pass ring vs
+                                    one fused serve), dense-causal and
+                                    doc-masked workloads
   memory_pressure       DESIGN §11 — memory-aware planning + chunked KV
                                     streaming: a workload whose kv
                                     prefix overflows any endpoint
@@ -159,6 +165,9 @@ GATE_RULES = (
     (r"^serve\.prefill_speedup_vs_loop$", "higher", 0.50, False),
     (r"^sparse\.live_max_over_mean$", "lower", 0.15, False),
     (r"^sparse\.area_max_over_mean$", "higher", 0.15, False),
+    (r"^ring\.dense\.ring_over_cad_balance$", "higher", 0.15, False),
+    (r"^ring\.dense\.cad_max_over_mean$", "lower", 0.15, False),
+    (r"^ring\.dense\.ring_step_over_cad_step$", "higher", 0.15, False),
     (r"^memory\.resident_max_over_mean$", "lower", 0.15, False),
     (r"^memory\.curve\.\d+\.resident_max_over_mean$",
      "lower", 0.15, False),
@@ -253,12 +262,13 @@ def main() -> None:
                          "off by default)")
     args = ap.parse_args()
 
-    from benchmarks import (cp_overheads, dedicated_pool, e2e_sim,
-                            elastic_recovery, fabric_mix, imbalance,
-                            kernel_throughput, memory_pressure, overlap,
-                            pp_bubbles, serve_throughput,
-                            sparse_balance, straggler_elim,
-                            table1_scaling, tolerance_sweep)
+    from benchmarks import (cad_vs_ring, cp_overheads, dedicated_pool,
+                            e2e_sim, elastic_recovery, fabric_mix,
+                            imbalance, kernel_throughput,
+                            memory_pressure, overlap, pp_bubbles,
+                            serve_throughput, sparse_balance,
+                            straggler_elim, table1_scaling,
+                            tolerance_sweep)
     benches = {
         "table1": table1_scaling.main,
         "fig3": cp_overheads.main,
@@ -278,13 +288,15 @@ def main() -> None:
         "fabric": lambda: fabric_mix.main(fast=args.fast),
         "memory": lambda: memory_pressure.main(fast=args.fast),
         "sparse": lambda: sparse_balance.main(fast=args.fast),
+        "ring": lambda: cad_vs_ring.main(fast=args.fast),
     }
     # the machine-readable subset: kernel fwd/bwd, plan imbalance,
     # prefetch overlap, straggler elimination, serve throughput,
     # elastic recovery, fabric mix, memory pressure — the CI perf
     # trajectory
     json_keys = ("fig5", "kernel_bwd", "fig4", "prefetch", "straggler",
-                 "serve", "elastic", "fabric", "memory", "sparse")
+                 "serve", "elastic", "fabric", "memory", "sparse",
+                 "ring")
     results, failed = {}, 0
     for name, fn in benches.items():
         if args.only and name != args.only:

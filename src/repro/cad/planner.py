@@ -11,6 +11,10 @@ benchmarks, launch dry-runs, examples — selects behavior with a single
   per_doc_cp  head-tail per-document context parallelism (paper §2.2,
               DISTFLASHATTN-style) as a registered policy
   balanced    the communication-aware greedy scheduler (paper §4.2)
+  ring        DISTFLASHATTN-style ring / context parallelism: each
+              endpoint owns the p-th contiguous kv shard of every
+              document (DESIGN.md §13) — the external baseline CAD's
+              planners are measured against in benchmarks/cad_vs_ring
 
 All planners build their dispatch arrays through the same
 ``plan_from_assignment``, so two policies that produce the same
@@ -56,7 +60,8 @@ import numpy as np
 from repro.core.cost_model import CommModel, CostModel, MemoryModel
 from repro.core.mask import MaskSpec
 from repro.core.plan import CADConfig, PlanMemoryError, StepPlan, \
-    head_tail_assignment, identity_assignment, plan_from_assignment
+    head_tail_assignment, identity_assignment, plan_from_assignment, \
+    ring_assignment
 from repro.core.scheduler import assignment_resident_bytes, block_costs, \
     check_exclude, layout_from_segments, schedule, streamed_doc_ids
 
@@ -291,6 +296,54 @@ def per_doc_cp_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
                                      stream_chunk)
     resident, streamed = _check_fixed_layout_memory(
         "per_doc_cp", cfg, assign, docs, doc_of, bi_of, mem, budgets,
+        chunk, allowed)
+    plan = plan_from_assignment(cfg, assign, doc_of, bi_of, docs) \
+        if build_plan else None
+    loads = _loads_of(assign, doc_of, bi_of, cfg.blk, cfg.n_servers,
+                      cost_model, _resolve_speeds(cfg, speeds), mask)
+    n_moves = int((assign != identity_assignment(cfg)).sum())
+    return PlanResult(
+        plan=plan, assign=assign, loads=loads,
+        stats=_stats(loads, _migration_bytes(cfg, assign, docs, doc_of,
+                                             bi_of, comm), n_moves,
+                     resident, allowed),
+        resident_bytes=resident, streamed=streamed)
+
+
+@register_planner("ring")
+def ring_planner(cfg: CADConfig, segment_ids: np.ndarray, *,
+                 comm: Optional[CommModel] = None,
+                 tolerance: float = 0.0,
+                 build_plan: bool = True,
+                 cost_model: Optional[CostModel] = None,
+                 speeds: Optional[np.ndarray] = None,
+                 exclude: Optional[Iterable[int]] = None,
+                 mem_model: Optional[MemoryModel] = None,
+                 budgets: Optional[np.ndarray] = None,
+                 stream_chunk: Optional[int] = None,
+                 mask: Optional[MaskSpec] = None) -> PlanResult:
+    """Ring / context-parallel attention (DISTFLASHATTN, DESIGN.md §13)
+    as a registered policy: every document is cut into P contiguous kv
+    shards and shard ``p`` is owned by the ``p``-th allowed server, so
+    q blocks rotate through P ring passes at execution time
+    (``dispatch.ring_attention``).  Sequence-contiguous and
+    workload-oblivious by construction — under causal attention the
+    tail-shard endpoints carry quadratically more compute, the
+    imbalance CAD's ``balanced`` planner is quantified against in
+    ``benchmarks/cad_vs_ring.py``.  Loads/stats are reported in modeled
+    time with mask-aware live-block pricing like every other policy,
+    so the comparison measures what the kernels execute.  With
+    ``exclude`` the ring shrinks to the surviving servers."""
+    docs, doc_of, bi_of = layout_from_segments(segment_ids, cfg.blk,
+                                               cfg.n_servers)
+    exclude = check_exclude(exclude, cfg.n_servers)
+    allowed = tuple(s for s in range(cfg.n_servers) if s not in exclude)
+    servers = allowed if exclude else None
+    assign = ring_assignment(cfg, docs, servers)
+    mem, budgets, chunk = _mem_setup(cfg, comm, mem_model, budgets,
+                                     stream_chunk)
+    resident, streamed = _check_fixed_layout_memory(
+        "ring", cfg, assign, docs, doc_of, bi_of, mem, budgets,
         chunk, allowed)
     plan = plan_from_assignment(cfg, assign, doc_of, bi_of, docs) \
         if build_plan else None

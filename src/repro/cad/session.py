@@ -68,7 +68,8 @@ class CADSession:
     bwd: Optional[str] = None      # None (default) | "pallas" | "xla"
     pingpong: bool = False
     tolerance: float = 0.1
-    plan_policy: str = "balanced"
+    plan_policy: str = "balanced"  # registry name: identity | per_doc_cp
+                                   # | balanced | ring (DESIGN.md §13)
     jmax: int = 0                  # max kv blocks per task (0 -> cfg.nkv)
     comm: Optional[CommModel] = None
     mesh: Any = None

@@ -36,7 +36,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.attention import NEG_INF, xla_flash_attention
-from repro.core.mask import live_kv_len, mask_params
+from repro.core.mask import live_block_mask, live_kv_len, mask_params
 from repro.core.plan import CADConfig, PingPongPlan
 
 from repro.compat import shard_map as _shard_map
@@ -230,6 +230,20 @@ def _xla_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos,
 
 def _xla_server_bwd(jmax, softcap, window, scale, sink, rate, res, g):
     """Flash-style recompute backward: nothing quadratic is saved."""
+    return _xla_server_bwd_impl(res, g, None, jmax=jmax, softcap=softcap,
+                                window=window, scale=scale, sink=sink,
+                                rate=rate) + (None, None, None, None)
+
+
+def _xla_server_bwd_impl(res, g, g_lse, *, jmax, softcap, window, scale,
+                         sink, rate):
+    """Blockwise recompute backward body, shared by the full serve's vjp
+    and the ring partial op (``ops.ca_partial_attention``).  ``g_lse``
+    is the cotangent of the partial's log-sum-exp output (None for the
+    out-only full serve — the original expression is kept verbatim so
+    pre-ring traces stay byte-identical); since ``d lse / d logits`` is
+    the softmax itself, it joins the score gradient as
+    ``ds = p * (dp - delta + g_lse)``.  Returns ``(dq, dk, dv)``."""
     q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos, kv_pos, out, lse = res
     T, blk, hq, dh = q_tasks.shape
     n = k_buf.shape[0]
@@ -254,7 +268,10 @@ def _xla_server_bwd(jmax, softcap, window, scale, sink, rate, res, g):
         p = jnp.where(msk, jnp.exp(logits - lse[..., None]), 0.0)
         dvj = jnp.einsum("thqk,tqhd->tkhd", p, gf)          # [T,blk,hq,dh]
         dp = jnp.einsum("tqhd,tkhd->thqk", gf, vj.astype(jnp.float32))
-        ds = p * (dp - delta[..., None])
+        if g_lse is None:
+            ds = p * (dp - delta[..., None])
+        else:
+            ds = p * (dp - (delta - g_lse.astype(jnp.float32))[..., None])
         if softcap and softcap > 0:
             sc = jnp.where(msk, logits / softcap, 0.0)
             ds = ds * (1.0 - sc * sc)
@@ -273,7 +290,7 @@ def _xla_server_bwd(jmax, softcap, window, scale, sink, rate, res, g):
     (dq, dk, dv), _ = jax.lax.scan(body, (dq0, dk0, dv0),
                                    jnp.arange(jmax))
     return (dq.astype(q_tasks.dtype), dk.astype(k_buf.dtype),
-            dv.astype(v_buf.dtype), None, None, None, None)
+            dv.astype(v_buf.dtype))
 
 
 _xla_server.defvjp(_xla_server_fwd, _xla_server_bwd)
@@ -629,6 +646,190 @@ def merge_recovered(cfg: CADConfig, base, recovered,
     tok = np.repeat(lost, blk, axis=1)           # [D, NB*blk] per-token
     mask = tok.reshape((base.shape[0], base.shape[1]))
     return jnp.where(jnp.asarray(mask)[..., None, None], recovered, base)
+
+
+# ------------------------------------------- ring baseline (DESIGN.md §13)
+def _plan_task_q_block(cfg: CADConfig, plan_np, server: int,
+                       slot: int) -> Optional[int]:
+    """Global q-block index of task ``slot`` on ``server`` (None for a
+    dead slot) — the plan-array inverse ``iter_plan_tasks`` walks."""
+    nb, cq = cfg.nb, cfg.cq
+    if slot < nb:
+        idx = int(plan_np["q_home_idx"][server, slot])
+        return server * nb + idx if idx >= 0 else None
+    src, c = divmod(slot - nb, cq)
+    idx = int(plan_np["q_send_idx"][src, server, c])
+    return src * nb + idx if idx >= 0 else None
+
+
+def ring_pass_geometry(cfg: CADConfig, segment_ids: np.ndarray, plan, *,
+                       n_passes: Optional[int] = None, mask=None) \
+        -> List[Dict[str, Any]]:
+    """Host-side ring pass construction (DESIGN.md §13): split every
+    task's kv prefix into the P contiguous document shards of the
+    DISTFLASHATTN schedule and emit one pseudo-plan per ring pass.
+
+    At pass ``t`` a task whose q block sits in document shard ``i``
+    consumes kv shard ``j = (i - t) % P``, i.e. blocks
+    ``[j*L, (j+1)*L)`` of its document clipped to the causal prefix
+    (``L = ring_shard_size``).  Dead pairs are skipped *exactly*:
+    causal-dead shards (``j > i``) get ``kv_len 0``, and with a
+    non-trivial ``mask`` the shard range is trimmed to its live columns
+    (``live_block_mask``) — a fully mask-dead shard is dropped like a
+    causal one.  Returns one dict per pass with the ``task_kv_start`` /
+    ``task_kv_len`` ``[D, T]`` arrays the partial serve consumes and
+    ``jmax`` (max live kv blocks across the pool; 0 marks a globally
+    dead pass the executors skip entirely)."""
+    from repro.core.scheduler import layout_from_segments, ring_shard_size
+    docs, doc_of, bi_of = layout_from_segments(
+        np.asarray(segment_ids).reshape(cfg.n_servers, -1), cfg.blk,
+        cfg.n_servers)
+    plan_np = jax.tree.map(np.asarray, dict(plan.items()))
+    kv_start = plan_np["task_kv_start"]
+    kv_len = plan_np["task_kv_len"]
+    d, n_tasks = kv_len.shape
+    P = int(n_passes) if n_passes else cfg.n_servers
+    trivial = mask is None or mask.trivial
+    lbm_cache: Dict[int, np.ndarray] = {}
+
+    def lbm(n):
+        if n not in lbm_cache:
+            lbm_cache[n] = live_block_mask(mask, n, n, cfg.blk)
+        return lbm_cache[n]
+
+    starts = [kv_start.copy() for _ in range(P)]
+    lens = [np.zeros_like(kv_len) for _ in range(P)]
+    for s in range(d):
+        for slot in range(n_tasks):
+            if kv_len[s, slot] <= 0:
+                continue
+            g = _plan_task_q_block(cfg, plan_np, s, slot)
+            bi = int(bi_of[g])
+            n = docs[int(doc_of[g])].n_blocks
+            L = ring_shard_size(n, P)
+            i = bi // L
+            row = None if trivial else lbm(n)[bi]
+            for t in range(P):
+                j = (i - t) % P
+                lo, hi = j * L, min((j + 1) * L, bi + 1)
+                if hi <= lo:
+                    continue                      # causal-dead ring step
+                if row is not None:
+                    live = np.nonzero(row[lo:hi])[0]
+                    if live.size == 0:
+                        continue                  # mask-dead ring step
+                    lo, hi = lo + int(live[0]), lo + int(live[-1]) + 1
+                starts[t][s, slot] = kv_start[s, slot] + lo
+                lens[t][s, slot] = hi - lo
+    return [{"task_kv_start": starts[t], "task_kv_len": lens[t],
+             "jmax": int(lens[t].max(initial=0))} for t in range(P)]
+
+
+def _ring_serve_merge(cad: CADContext, inputs_s, pass_plans, server: int,
+                      *, softcap: float = 0.0, scale=None):
+    """ONE endpoint's ring execution: serve each live pass's kv window as
+    a finalized ``(out, lse)`` partial and fold the passes together in
+    pass order with ``merge_softmax_partials`` — dead per-task windows
+    merge as bitwise no-ops, globally dead passes are never served."""
+    from repro.kernels.packed_flash import ops as O
+    q_tasks, qpos, k_buf, v_buf, kpos = inputs_s
+    window, sink, rate = mask_params(cad.mask, 0)
+    merged = None
+    for t, pp in enumerate(pass_plans):
+        if t > 0 and pp["jmax"] <= 0:
+            continue                        # dead ring pass: skipped exactly
+        o, l = O.ca_partial_attention(
+            q_tasks, k_buf, v_buf,
+            jnp.asarray(pp["task_kv_start"][server]),
+            jnp.asarray(pp["task_kv_len"][server]), qpos, kpos,
+            max(pp["jmax"], 1), window, softcap, scale, sink, rate,
+            cad.kernel)
+        merged = (o, l) if merged is None \
+            else O.merge_softmax_partials(merged[0], merged[1], o, l)
+    return merged[0]
+
+
+def ring_attention(cad: CADContext, plan, segment_ids: np.ndarray,
+                   q, k, v, pos, *, n_passes: Optional[int] = None,
+                   softcap: float = 0.0, scale=None, pass_plans=None):
+    """Decomposed ring-attention execution of one step (DESIGN.md §13):
+    the DISTFLASHATTN baseline run through CAD's own dispatch substrate.
+    Each endpoint serves its fused task batch one ring pass at a time —
+    kv windows rotating through the P document shards — merging the
+    per-pass ``(out, lse)`` partials online, then outputs are
+    reassembled exactly like the standard serve.  Bit-identical
+    (forward *and* vjp) to :func:`ring_global_sim`, the single-pool
+    oracle running the same pass schedule through the fused vmapped
+    orchestration."""
+    cfg = cad.cfg
+    if pass_plans is None:
+        pass_plans = ring_pass_geometry(cfg, segment_ids, plan,
+                                        n_passes=n_passes, mask=cad.mask)
+    inputs, _plans_r = build_server_inputs(cad, plan, q, k, v, pos)
+    outs = {s: _ring_serve_merge(cad, inputs[s], pass_plans, s,
+                                 softcap=softcap, scale=scale)
+            for s in range(cfg.n_servers)}
+    return assemble_step_outputs(cfg, plan, outs, q.shape, q.dtype)
+
+
+def ring_global_sim(q, k, v, pos, plan, cad: CADContext,
+                    segment_ids: np.ndarray, *,
+                    n_passes: Optional[int] = None,
+                    softcap: float = 0.0, scale=None, pass_plans=None):
+    """Single-pool oracle for the ring schedule: the same per-pass
+    partial serves and lse merges as :func:`ring_attention`, executed
+    through the fused vmapped single-device orchestration of
+    :func:`_global_sim` — same ops in the same order, different
+    orchestration, so the decomposed ring dispatch must match it
+    bitwise (the PR 5 differential discipline applied to the ring)."""
+    from repro.kernels.packed_flash import ops as O
+    cfg = cad.cfg
+    d = cfg.n_servers
+    blk = cfg.blk
+    if pass_plans is None:
+        pass_plans = ring_pass_geometry(cfg, segment_ids, plan,
+                                        n_passes=n_passes, mask=cad.mask)
+
+    def stack_ranks(x):
+        return x.reshape((d, x.shape[0] // d) + x.shape[1:])
+
+    qs, ks, vs, ps = map(stack_ranks, (q, k, v, pos))
+    qb = jax.vmap(lambda t: _to_blocks(t, blk))(qs)
+    kb = jax.vmap(lambda t: _to_blocks(t, blk))(ks)
+    vb = jax.vmap(lambda t: _to_blocks(t, blk))(vs)
+    posb = jax.vmap(lambda t: _to_blocks(t, blk))(ps)
+    nb = qb.shape[1]
+
+    sends = jax.vmap(_make_sends)(qb, kb, vb, posb, plan)
+    recv = tuple(_sim_exchange(s) for s in sends)
+    q_tasks, qpos_tasks, k_buf, v_buf, kpos_buf = jax.vmap(
+        lambda a, b, c, dd, r, pr: _server_tasks(a, b, c, dd, r, pr, cfg)
+    )(qb, kb, vb, posb, recv, plan)
+
+    window, sink, rate = mask_params(cad.mask, 0)
+    merged = None
+    for t, pp in enumerate(pass_plans):
+        if t > 0 and pp["jmax"] <= 0:
+            continue                        # dead ring pass: skipped exactly
+        o, l = jax.vmap(
+            lambda qt, kbf, vbf, st, ln, qp, kp, jm=max(pp["jmax"], 1):
+            O.ca_partial_attention(qt, kbf, vbf, st, ln, qp, kp, jm,
+                                   window, softcap, scale, sink, rate,
+                                   cad.kernel)
+        )(q_tasks, k_buf, v_buf, jnp.asarray(pp["task_kv_start"]),
+          jnp.asarray(pp["task_kv_len"]), qpos_tasks, kpos_buf)
+        merged = (o, l) if merged is None \
+            else O.merge_softmax_partials(merged[0], merged[1], o, l)
+    out_tasks = merged[0]
+
+    ret_send = out_tasks[:, nb:].reshape((d, d, cfg.cq)
+                                         + out_tasks.shape[2:])
+    ret_recv = _sim_exchange(ret_send)
+    out = jax.vmap(
+        lambda ot, rr, pr: _scatter_outputs(ot, rr, pr, cfg, nb, blk,
+                                            q.shape[2], q.shape[3], q.dtype)
+    )(out_tasks, ret_recv, plan)
+    return out.reshape(q.shape)
 
 
 def probe_plan_times(cad: CADContext, plan, *, n_heads: int = 1,

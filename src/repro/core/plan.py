@@ -36,7 +36,8 @@ from typing import Any, Dict, Iterator, Optional, Tuple
 
 import numpy as np
 
-from repro.core.scheduler import Caps, Doc, Schedule, layout_from_segments
+from repro.core.scheduler import (Caps, Doc, Schedule, layout_from_segments,
+                                  ring_shard_size)
 
 PLAN_FIELDS = ("q_home_idx", "q_send_idx", "kv_send_idx", "kv_gather",
                "task_kv_start", "task_kv_len")
@@ -366,6 +367,27 @@ def head_tail_assignment(cfg: CADConfig, docs,
     for doc in docs:
         for j, g in enumerate(doc.blocks()):
             assign[g] = ht[j % len(ht)]
+    return assign
+
+
+def ring_assignment(cfg: CADConfig, docs,
+                    servers: Optional[Tuple[int, ...]] = None) \
+        -> np.ndarray:
+    """Ring / context-parallel sharding (DISTFLASHATTN baseline,
+    DESIGN.md §13): each document's blocks are cut into contiguous
+    shards of :func:`ring_shard_size` blocks and shard ``p`` is owned by
+    the ``p``-th allowed server — endpoint ``p`` holds the ``p``-th kv
+    shard of *every* document, the classic sequence-contiguous CP
+    layout.  Under causal attention the tail shards see quadratically
+    more context than the head shards, which is exactly the imbalance
+    ``benchmarks/cad_vs_ring.py`` quantifies CAD's planners against.
+    ``servers`` restricts the deal to a surviving subset of the pool."""
+    srv = list(range(cfg.n_servers)) if servers is None else list(servers)
+    assign = identity_assignment(cfg)
+    for doc in docs:
+        L = ring_shard_size(doc.n_blocks, len(srv))
+        for j, g in enumerate(doc.blocks()):
+            assign[g] = srv[j // L]
     return assign
 
 

@@ -68,7 +68,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 import numpy as np
 
 from repro.core.cost_model import CommModel, CostModel, MemoryModel
-from repro.core.mask import MaskSpec, live_block_table
+from repro.core.mask import MaskSpec, live_block_mask, live_block_table
 
 
 @dataclasses.dataclass
@@ -180,6 +180,62 @@ def block_costs(doc_of: np.ndarray, bi_of: np.ndarray, blk: int,
     return out
 
 
+def ring_shard_size(n_blocks: int, n_ring: int) -> int:
+    """Contiguous kv-shard length (in blocks) of a DISTFLASHATTN-style
+    ring split of an ``n_blocks``-long document over ``n_ring``
+    endpoints: shard ``p`` covers in-doc blocks ``[p*L, (p+1)*L)``
+    clipped to the document.  Shared by the ring planner
+    (``repro.cad.planner``), the ring pass geometry (``core.dispatch``)
+    and :func:`ring_pass_costs` so all three agree on shard
+    boundaries."""
+    return -(-max(int(n_blocks), 1) // max(int(n_ring), 1))
+
+
+def ring_pass_costs(docs: List[Doc], blk: int, n_servers: int, *,
+                    servers: Optional[Iterable[int]] = None,
+                    cost_model: Optional[CostModel] = None,
+                    mask: Optional[MaskSpec] = None) -> np.ndarray:
+    """Per-(ring pass, endpoint) modeled compute of the DISTFLASHATTN
+    ring schedule (DESIGN.md §13): ``costs[t, s]`` is what endpoint
+    ``s`` executes during synchronous ring pass ``t``.
+
+    Each document is cut into ``P`` contiguous kv shards of
+    :func:`~repro.core.plan.ring_shard_size` blocks; a q block in shard
+    ``i`` consumes kv shard ``(i - t) % P`` at pass ``t``.  Causal-dead
+    and mask-dead (q block, kv shard) pairs cost zero — the pass is
+    skipped exactly, mirroring ``dispatch.ring_pass_geometry`` — and
+    live work is priced per live kv block like :func:`block_costs`, so
+    ``costs.sum(0)`` equals the ring assignment's per-endpoint loads.
+
+    Because the ring barriers between passes, the schedule's modeled
+    step time is ``sum_t max_s costs[t, s] / speed[s]`` — the quantity
+    ``benchmarks/cad_vs_ring.py`` compares against CAD's
+    ``max_s sum_t`` (no inner barrier)."""
+    allowed = tuple(range(n_servers)) if servers is None \
+        else tuple(servers)
+    P = len(allowed)
+    costs = np.zeros((P, n_servers))
+    for d in docs:
+        n = d.n_blocks
+        L = ring_shard_size(n, P)
+        lbm = live_block_mask(mask, n, n, blk)          # [n, n] bool
+        pad = P * L - n
+        counts = np.pad(lbm, ((0, 0), (0, pad))) \
+            .reshape(n, P, L).sum(-1)                   # [n, P] live blocks
+        shard_q = np.arange(n) // L                     # q shard per row
+        owner = np.asarray(allowed)[shard_q]            # endpoint per row
+        for t in range(P):
+            j = (shard_q - t) % P
+            live = np.take_along_axis(counts, j[:, None], 1)[:, 0]
+            if cost_model is None:
+                c = live * float(blk * blk)
+            else:
+                c = np.where(live > 0,
+                             cost_model.predict(blk, live * blk), 0.0)
+            np.add.at(costs[t], owner, c)
+    return costs
+
+
 def _bi_cost_table(blk: int, max_blocks: int,
                    cost_model: Optional[CostModel],
                    mask: Optional[MaskSpec] = None) -> np.ndarray:
@@ -208,7 +264,8 @@ def check_exclude(exclude: Optional[Iterable[int]],
 
 def streamed_doc_ids(docs: List[Doc], blk: int, mem: MemoryModel,
                      budgets: np.ndarray, *, stream_chunk: int,
-                     allowed: Optional[Iterable[int]] = None) \
+                     allowed: Optional[Iterable[int]] = None,
+                     mask: Optional[MaskSpec] = None) \
         -> Tuple[int, ...]:
     """Documents that must stream their kv: the doc's *final* task (one
     q block against the full causal prefix) overflows EVERY allowed
@@ -216,13 +273,17 @@ def streamed_doc_ids(docs: List[Doc], blk: int, mem: MemoryModel,
     needs the whole prefix resident for that task unless it is consumed
     in chunks (DESIGN.md §11).  With streaming disabled such a doc is
     unplannable: :class:`~repro.core.plan.PlanMemoryError` at planning
-    time, not an OOM at step time."""
+    time, not an OOM at step time.
+
+    ``mask`` switches the final task's pricing to the ``live_kv_bytes``
+    view (DESIGN.md §12) — the elastic pricing paths pass the session's
+    MaskSpec here; planners keep the default dense-prefix ledger."""
     idx = list(range(len(budgets))) if allowed is None else list(allowed)
     cap = float(budgets[idx].max())
     cap_srv = int(idx[int(np.argmax(budgets[idx]))])
     out = []
     for d in docs:
-        need = mem.task_bytes(blk, d.n_blocks * blk)
+        need = mem.task_bytes(blk, d.n_blocks * blk, mask, blk)
         if need > cap:
             if stream_chunk <= 0:
                 from repro.core.plan import PlanMemoryError  # circular-safe
@@ -239,13 +300,23 @@ def assignment_resident_bytes(assign: np.ndarray, doc_of: np.ndarray,
                               bi_of: np.ndarray, blk: int, n_servers: int,
                               mem: MemoryModel, *,
                               streamed: Iterable[int] = (),
-                              stream_chunk: int = 0) -> np.ndarray:
+                              stream_chunk: int = 0,
+                              mask: Optional[MaskSpec] = None) \
+        -> np.ndarray:
     """Per-server modeled HBM working set of an assignment: every live
     q block contributes its q/o shard plus backward residuals, and each
     (server, doc) pair contributes the doc's needed kv prefix exactly
     once — the same deduplicated counting ``plan_from_assignment``'s
     kv-gather buffer realizes.  Streamed docs' kv residency is bounded
-    by one ``stream_chunk`` of blocks."""
+    by one ``stream_chunk`` of blocks.
+
+    ``mask`` switches kv pricing to the ``live_kv_bytes`` view
+    (DESIGN.md §12): planners leave it unset — the dense prefix remains
+    the residency ledger's unit because the dispatch gather buffer
+    realizes the contiguous range — while the elastic pricing paths
+    (``executor._recovery_memory``) pass the session's MaskSpec so
+    recovery destinations are weighed by live bandwidth (DESIGN.md §9).
+    """
     streamed = set(streamed)
     res = np.zeros(n_servers)
     q_unit = mem.q_bytes(blk) + mem.residual_bytes(blk)
@@ -259,7 +330,7 @@ def assignment_resident_bytes(assign: np.ndarray, doc_of: np.ndarray,
         for dc, pref in needs[s].items():
             if dc in streamed and stream_chunk > 0:
                 pref = min(pref, stream_chunk)
-            res[s] += mem.kv_bytes(pref * blk)
+            res[s] += mem.live_kv_bytes(pref * blk, mask, blk)
     return res
 
 

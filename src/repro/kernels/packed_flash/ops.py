@@ -139,6 +139,148 @@ def _ca_bwd(causal, window, softcap, scale, jmax, bwd_impl, sink, rate,
 ca_server_attention.defvjp(_ca_fwd, _ca_bwd)
 
 
+# --------------------------------------------- ring partials (DESIGN.md §13)
+def _lse_dead(lse):
+    """Rows whose partial saw no live kv (``kernel.LSE_DEAD`` marker)."""
+    return lse >= K.LSE_DEAD / 2
+
+
+def _merge_weights(lse_a, lse_b, lse):
+    """Softmax merge weights, zeroed on dead partials.  When exactly one
+    side is live its weight is ``exp(0) == 1.0`` exactly, so the merge
+    below degenerates to a bitwise pass-through of the live side."""
+    w_a = jnp.where(_lse_dead(lse_a), 0.0, jnp.exp(lse_a - lse))
+    w_b = jnp.where(_lse_dead(lse_b), 0.0, jnp.exp(lse_b - lse))
+    return w_a, w_b
+
+
+def _broadcast_rows(w):
+    """[..., hq, blk] row weights -> [..., blk, hq, 1] out broadcast."""
+    return jnp.swapaxes(w, -1, -2)[..., None]
+
+
+@jax.custom_vjp
+def merge_softmax_partials(out_a, lse_a, out_b, lse_b):
+    """Online-softmax merge of two finalized attention partials.
+
+    ``out_*`` is ``[..., blk, hq, dh]`` (already normalized), ``lse_*``
+    the matching ``[..., hq, blk]`` log-sum-exp over each partial's kv
+    range; leading batch dims broadcast elementwise, so per-server
+    ``[T, ...]`` and stacked-pool ``[D, T, ...]`` layouts merge with the
+    identical FP ops (the ring dispatch / single-pool oracle bit-identity
+    contract, DESIGN.md §13).  A dead partial (``kernel.LSE_DEAD``: no
+    live kv in its range — a causal- or mask-dead ring pass) is a
+    *bitwise* no-op: the result is selected, not blended, from the live
+    side, the same discipline as ``dispatch.merge_recovered``.  Both
+    outputs are differentiable, so merges chain across ring passes and
+    gradients flow back into every partial."""
+    out, lse = _merge_fwd(out_a, lse_a, out_b, lse_b)[0]
+    return out, lse
+
+
+def _merge_fwd(out_a, lse_a, out_b, lse_b):
+    dead_a, dead_b = _lse_dead(lse_a), _lse_dead(lse_b)
+    # neutralize dead sentinels before the max-stabilized logaddexp so a
+    # dead side can never dominate the stabilizer
+    la = jnp.where(dead_a, -K.LSE_DEAD, lse_a)
+    lb = jnp.where(dead_b, -K.LSE_DEAD, lse_b)
+    m = jnp.maximum(la, lb)
+    lse_m = m + jnp.log(jnp.exp(la - m) + jnp.exp(lb - m))
+    w_a, w_b = _merge_weights(lse_a, lse_b, lse_m)
+    out_m = (_broadcast_rows(w_a) * out_a.astype(jnp.float32)
+             + _broadcast_rows(w_b) * out_b.astype(jnp.float32)) \
+        .astype(out_a.dtype)
+    # bitwise select: a dead partial must not perturb the live side
+    # (0.0*x + 1.0*y is not bitwise y when y holds -0.0)
+    sel_b = _broadcast_rows(dead_b)
+    sel_a = _broadcast_rows(dead_a)
+    out = jnp.where(sel_b, out_a, jnp.where(sel_a, out_b, out_m))
+    lse = jnp.where(dead_b, lse_a, jnp.where(dead_a, lse_b, lse_m))
+    return (out, lse), (out_a, lse_a, out_b, lse_b, out, lse)
+
+
+def _merge_bwd(res, g):
+    out_a, lse_a, out_b, lse_b, out, lse = res
+    g_out, g_lse = g
+    gf = g_out.astype(jnp.float32)
+    of = out.astype(jnp.float32)
+    w_a, w_b = _merge_weights(lse_a, lse_b, lse)
+    d_out_a = (_broadcast_rows(w_a) * gf).astype(out_a.dtype)
+    d_out_b = (_broadcast_rows(w_b) * gf).astype(out_b.dtype)
+    # d lse_i = w_i * (sum_dh g_out * (out_i - out) + g_lse): the weight
+    # path (out shifts toward out_i as lse_i grows) plus the merged-lse
+    # path (d lse / d lse_i == w_i)
+    da = jnp.swapaxes(
+        (gf * (out_a.astype(jnp.float32) - of)).sum(-1), -1, -2)
+    db = jnp.swapaxes(
+        (gf * (out_b.astype(jnp.float32) - of)).sum(-1), -1, -2)
+    d_lse_a = w_a * (da + g_lse)
+    d_lse_b = w_b * (db + g_lse)
+    return d_out_a, d_lse_a, d_out_b, d_lse_b
+
+
+merge_softmax_partials.defvjp(
+    lambda oa, la, ob, lb: _merge_fwd(oa, la, ob, lb), _merge_bwd)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(7, 8, 9, 10, 11, 12, 13))
+def ca_partial_attention(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
+                         kv_pos, jmax=0, window=0, softcap=0.0,
+                         scale=None, sink=0, rate=1, kernel="xla"):
+    """One ring pass of a fused CA-task batch: attention over the pass's
+    kv sub-range ``[kv_start, kv_start + kv_len)`` returning the
+    finalized ``(out, lse)`` partial — both differentiable, so
+    :func:`merge_softmax_partials` chains across passes with gradients
+    intact.  ``kv_len == 0`` rows yield a dead partial (zero out,
+    ``kernel.LSE_DEAD`` lse) that merges as a bitwise no-op.  ``kernel``
+    picks the forward ("pallas" fused kernel / "xla" blockwise scan);
+    backward always runs the blockwise recompute extended with the lse
+    cotangent (``ds = p * (dp - delta + g_lse)``)."""
+    return _partial_fwd_impl(q_tasks, k_buf, v_buf, kv_start, kv_len,
+                             q_pos, kv_pos, jmax, window, softcap, scale,
+                             sink, rate, kernel)
+
+
+def _partial_fwd_impl(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
+                      kv_pos, jmax, window, softcap, scale, sink, rate,
+                      kernel):
+    if kernel == "pallas":
+        return K.ca_server_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len,
+                               q_pos, kv_pos, causal=True, window=window,
+                               sink=sink, rate=rate, softcap=softcap,
+                               scale=scale, jmax=jmax or None,
+                               interpret=not _on_tpu(), return_lse=True)
+    from repro.core import dispatch as D
+    return D._xla_server_fwd_impl(q_tasks, k_buf, v_buf, kv_start, kv_len,
+                                  q_pos, kv_pos,
+                                  jmax or k_buf.shape[-4], softcap,
+                                  window, scale, sink, rate)
+
+
+def _ca_partial_fwd(q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
+                    kv_pos, jmax, window, softcap, scale, sink, rate,
+                    kernel):
+    out, lse = _partial_fwd_impl(q_tasks, k_buf, v_buf, kv_start, kv_len,
+                                 q_pos, kv_pos, jmax, window, softcap,
+                                 scale, sink, rate, kernel)
+    return (out, lse), (q_tasks, k_buf, v_buf, kv_start, kv_len, q_pos,
+                        kv_pos, out, lse)
+
+
+def _ca_partial_bwd(jmax, window, softcap, scale, sink, rate, kernel,
+                    res, g):
+    g_out, g_lse = g
+    from repro.core import dispatch as D
+    dq, dk, dv = D._xla_server_bwd_impl(
+        res, g_out, g_lse, jmax=jmax or res[1].shape[-4], softcap=softcap,
+        window=window, scale=scale, sink=sink, rate=rate)
+    return dq, dk, dv, None, None, None, None
+
+
+ca_partial_attention.defvjp(_ca_partial_fwd, _ca_partial_bwd)
+
+
 # ---------------------------------------------------- ragged decode (serve)
 def _resolve_decode(impl) -> str:
     """"pallas" | "xla"; None defers to $REPRO_KERNEL_DECODE (default

@@ -8,7 +8,9 @@ configs (the mesh flags are for the dry-run, see dryrun.py).
 
 Flags mirror the paper's system knobs: --cad (core attention
 disaggregation on/off), --plan-policy (identity | per_doc_cp |
-balanced), --pingpong (nano-batch overlap), --tolerance (scheduler
+balanced | ring — the last is the DISTFLASHATTN-style context-parallel
+baseline layout, DESIGN.md §13), --pingpong (nano-batch overlap),
+--tolerance (scheduler
 imbalance budget), --prefetch (async plan look-ahead; 0 = synchronous),
 --strategy fixed|variable (packing baseline), --server-speeds
 (heterogeneous pool: comma-separated per-rank speed factors, e.g.

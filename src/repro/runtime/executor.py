@@ -150,7 +150,8 @@ class ElasticExecutor:
         self.timer = timer
         self.feed_calibrator = feed_calibrator
         self._cad = CADContext(cfg=session.cfg, kernel=session.kernel,
-                               bwd=session.bwd, jmax=session.jmax)
+                               bwd=session.bwd, jmax=session.jmax,
+                               mask=session.mask)
 
     # ------------------------------------------------------------ helpers
     def _cost_view(self):
@@ -186,13 +187,14 @@ class ElasticExecutor:
         mem = MemoryModel(comm)
         docs, doc_of, bi_of = layout_from_segments(segs, cfg.blk,
                                                    cfg.n_servers)
+        mask = self.session.mask
         streamed = streamed_doc_ids(docs, cfg.blk, mem, budgets,
                                     stream_chunk=cfg.stream_chunk,
-                                    allowed=backups)
+                                    allowed=backups, mask=mask)
         res = assignment_resident_bytes(
             assignment_of_plan(cfg, plan), doc_of, bi_of, cfg.blk,
             cfg.n_servers, mem, streamed=streamed,
-            stream_chunk=cfg.stream_chunk)
+            stream_chunk=cfg.stream_chunk, mask=mask)
         return mem, {s: float(res[s]) for s in backups}
 
     # ----------------------------------------------------------- stepping
@@ -223,7 +225,11 @@ class ElasticExecutor:
         injected = {e.server for e in self.faults.failures_at(step)} \
             & set(view.active)
         tasks_by = {s: [] for s in range(cfg.n_servers)}
-        for s, _slot, qt, kvt in iter_plan_tasks(cfg, plan):
+        # live kv tokens under the session mask: the calibrator keys its
+        # grid on live tokens, so rectangle lengths would both mis-price
+        # the straggler deadline and feed the wrong cells (DESIGN.md §12)
+        for s, _slot, qt, kvt in iter_plan_tasks(cfg, plan,
+                                                 self.session.mask):
             tasks_by[s].append((qt, kvt))
         cm, speeds = self._cost_view()
         preds = {s: self._predict_server(cm, speeds, tasks_by[s], s)
@@ -320,7 +326,8 @@ class ElasticExecutor:
                 cfg, segs, plan, to_recover, allowed=backups,
                 base_loads={s: seconds[s] for s in backups},
                 cost_model=cm, speeds=speeds, mem_model=mem,
-                base_resident=base_res) if to_recover else None
+                base_resident=base_res,
+                mask=self.session.mask) if to_recover else None
         base = assemble_step_outputs(cfg, plan, outs, q.shape, q.dtype)
         if rec is not None:
             rec_inputs, rec_plans = build_server_inputs(

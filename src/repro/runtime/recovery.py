@@ -27,6 +27,7 @@ from typing import Dict, Iterable, Optional, Tuple
 import numpy as np
 
 from repro.core.cost_model import CommModel, CostModel, MemoryModel
+from repro.core.mask import MaskSpec
 from repro.core.plan import CADConfig, StepPlan, plan_from_assignment
 from repro.core.scheduler import (block_costs, layout_from_segments,
                                   streamed_doc_ids)
@@ -106,7 +107,8 @@ def build_recovery_plan(cfg: CADConfig, segment_ids: np.ndarray, plan,
                         mem_model: Optional[MemoryModel] = None,
                         budgets: Optional[np.ndarray] = None,
                         base_resident: Optional[Dict[int, float]] = None,
-                        stream_chunk: Optional[int] = None) \
+                        stream_chunk: Optional[int] = None,
+                        mask: Optional[MaskSpec] = None) \
         -> Optional[RecoveryPlan]:
     """Build the sub-plan that recomputes every task lost on ``failed``
     onto ``allowed`` survivors.
@@ -127,7 +129,15 @@ def build_recovery_plan(cfg: CADConfig, segment_ids: np.ndarray, plan,
     recovery has nowhere cheaper to go — the least-loaded survivor
     takes the run anyway: with ``stream_chunk`` set, dispatch streams
     the kv prefix chunkwise so hardware residency stays bounded; a
-    lost task is never dropped for memory (DESIGN.md §11)."""
+    lost task is never dropped for memory (DESIGN.md §11).
+
+    ``mask`` is the session's :class:`~repro.core.mask.MaskSpec`: run
+    pricing and the incremental kv view both use *live*-block costs
+    (DESIGN.md §12), so doc-masked recovery lands where the real
+    compute is cheapest — area pricing would deal deep (area-heavy,
+    mask-cheap) runs as if they were expensive and skew the survivor
+    balance.  Every elastic pricing path must consume mask-aware costs
+    (DESIGN.md §9)."""
     failed = sorted({int(s) for s in failed})
     allowed = sorted({int(s) for s in allowed})
     if not allowed:
@@ -141,7 +151,7 @@ def build_recovery_plan(cfg: CADConfig, segment_ids: np.ndarray, plan,
         return None
     speeds = cfg.speeds() if speeds is None \
         else np.asarray(speeds, np.float64)
-    cost = block_costs(doc_of, bi_of, cfg.blk, cost_model)
+    cost = block_costs(doc_of, bi_of, cfg.blk, cost_model, mask)
     loads = {s: float((base_loads or {}).get(s, 0.0)) for s in allowed}
     added = {s: 0.0 for s in allowed}
 
@@ -162,10 +172,15 @@ def build_recovery_plan(cfg: CADConfig, segment_ids: np.ndarray, plan,
 
     def mem_add(s: int, dc: int, pref: int, n_q: int) -> float:
         """Incremental resident bytes if survivor ``s`` takes a run of
-        ``n_q`` blocks of doc ``dc`` needing kv prefix ``pref``."""
+        ``n_q`` blocks of doc ``dc`` needing kv prefix ``pref`` — the
+        ``live_kv_bytes`` view under a mask (prefix-live difference),
+        reducing exactly to the dense increment when the mask is
+        trivial."""
         p = min(pref, chunk) if dc in streamed else pref
-        have = kv_need[s].get(dc, 0)
-        return q_unit * n_q + mem.kv_bytes(max(0, p - have) * cfg.blk)
+        have = min(kv_need[s].get(dc, 0), p)
+        kv = mem.live_kv_bytes(p * cfg.blk, mask, cfg.blk) \
+            - mem.live_kv_bytes(have * cfg.blk, mask, cfg.blk)
+        return q_unit * n_q + max(0.0, kv)
 
     assign = np.arange(cfg.n_servers * cfg.nb) // cfg.nb
     masked_doc_of = np.where(lost, doc_of, -1)
@@ -205,12 +220,15 @@ def build_recovery_plan(cfg: CADConfig, segment_ids: np.ndarray, plan,
                                     if t > 0})
 
 
-def recovery_tasks(cfg: CADConfig, rec: RecoveryPlan) \
+def recovery_tasks(cfg: CADConfig, rec: RecoveryPlan,
+                   mask: Optional[MaskSpec] = None) \
         -> Dict[int, Tuple[Tuple[int, int], ...]]:
     """Per-survivor (q_tokens, kv_tokens) task shapes of a recovery
-    sub-plan — calibrator food and modeled-time input."""
+    sub-plan — calibrator food and modeled-time input.  With ``mask``
+    the kv lengths are the tasks' *live* kv tokens, matching the grid
+    cells masked primary serves calibrate (DESIGN.md §12)."""
     from repro.core.dispatch import iter_plan_tasks
     out: Dict[int, list] = {}
-    for s, _slot, qt, kvt in iter_plan_tasks(cfg, rec.plan):
+    for s, _slot, qt, kvt in iter_plan_tasks(cfg, rec.plan, mask):
         out.setdefault(s, []).append((qt, kvt))
     return {s: tuple(v) for s, v in out.items()}

@@ -15,12 +15,15 @@ import pytest
 
 from repro.cad import CADConfig, CADSession
 from repro.core.cost_model import CommModel, CostModel, GridCalibrator
-from repro.core.dispatch import CADContext, _global_sim
+from repro.core.dispatch import CADContext, _global_sim, iter_plan_tasks
+from repro.core.mask import MaskSpec
 from repro.core.plan import PlanCapacityError
-from repro.core.scheduler import check_exclude, layout_from_segments
+from repro.core.scheduler import (block_costs, check_exclude,
+                                  layout_from_segments)
 from repro.runtime import (ElasticExecutor, FaultEvent, FaultSchedule,
                            PoolExhaustedError, ServerPool,
-                           build_recovery_plan, lost_block_mask)
+                           assignment_of_plan, build_recovery_plan,
+                           lost_block_mask)
 
 BLK = 16
 
@@ -530,3 +533,127 @@ def test_elastic_recovery_benchmark_fast():
     assert r["deterministic_replay"]
     assert abs(r["steady_ratio"] - 1.0) < 0.1
     assert r["recovered_blocks"] > 0
+
+
+# ===================================================================
+# Mask-era pricing in the elastic paths (DESIGN.md §9 + §12)
+# ===================================================================
+
+SLIDING = MaskSpec(kind="sliding", window=2 * BLK, sink=0)
+
+
+def _sliding_segs(d=3, nb=16):
+    """The recovery-drift layout: the killed rank holds one deep doc
+    (area-heavy, mask-cheap under sliding) plus four shallow docs; the
+    survivors sit at staggered base loads chosen so dense-area pricing
+    funnels every shallow run onto the busier survivor while live
+    pricing alternates them — derived analytically from the sliding
+    live-cost profile l(n) = 3n - 3."""
+    segs = np.zeros((d, nb * BLK), np.int32)
+
+    def put(r, t0, nblocks, sid):
+        segs[r, t0 * BLK:(t0 + nblocks) * BLK] = sid
+        return t0 + nblocks
+
+    t = put(0, 0, 4, 1)                       # rank 0: live 9 + 1 = 10
+    put(0, t, 1, 2)
+    t = put(1, 0, 8, 3)                       # rank 1: live 21 + 4*3
+    for i in range(4):
+        t = put(1, t, 2, 4 + i)
+    put(2, 0, 11, 8)                          # rank 2: live 30
+    return segs
+
+
+def test_masked_recovery_balances_live_compute():
+    """Killing one of N under a sliding mask: recovery priced by live
+    blocks keeps the survivors' realized live-compute max/mean within
+    1.1 — the same layout priced by dense rectangle area (the pre-fix
+    drift) exceeds it, because area pricing deals deep mask-cheap runs
+    as if they were expensive."""
+    d, nb = 3, 16
+    cfg = make_cfg(d, nb)
+    segs = _sliding_segs(d, nb)
+    sess = make_session(d, nb, plan_policy="identity", mask=SLIDING)
+    plan, _ = sess.plan(segs)
+    docs, doc_of, bi_of = layout_from_segments(segs, BLK, d)
+    cost = block_costs(doc_of, bi_of, BLK, None, SLIDING)  # true compute
+    full = assignment_of_plan(cfg, plan)
+    surv = [0, 2]
+    base = {s: float(cost[(full == s) & (doc_of >= 0)].sum())
+            for s in surv}
+
+    def realized_ratio(pricing_mask):
+        rec = build_recovery_plan(cfg, segs, plan, (1,), allowed=surv,
+                                  base_loads=base, mask=pricing_mask)
+        final = np.where(rec.lost, rec.assign, full)
+        loads = np.array([cost[(final == s) & (doc_of >= 0)].sum()
+                          for s in surv])
+        return float(loads.max() / loads.mean())
+
+    assert realized_ratio(SLIDING) <= 1.1     # live pricing: balanced
+    assert realized_ratio(None) > 1.1         # area pricing: drifts
+
+
+def test_speculation_prices_masked_tasks_by_live_kv():
+    """The straggler deadline math consumes *live* kv lengths under a
+    mask: ``begin_step``'s task shapes equal ``iter_plan_tasks`` with
+    the session mask (strictly below the dense rectangle lengths), and
+    the per-server predictions it derives — the spread the speculation
+    deadline compares against — equal the live-kv cost-model sum, not
+    the rectangle one."""
+    d, nb = 3, 16
+    segs = _sliding_segs(d, nb)
+    sess = make_session(d, nb, mask=SLIDING)
+    ex = make_executor(sess)
+    q, k, v, pos = synth(ex, segs)
+    st = ex.begin_step(0, q, k, v, pos, segs)
+
+    live, rect = {}, {}
+    for s, _slot, qt, kvt in iter_plan_tasks(sess.cfg, st.plan,
+                                             sess.mask):
+        live.setdefault(s, []).append((qt, kvt))
+    for s, _slot, qt, kvt in iter_plan_tasks(sess.cfg, st.plan):
+        rect.setdefault(s, []).append((qt, kvt))
+    assert {s: t for s, t in st.tasks_by.items() if t} == live
+    assert live != rect                       # the mask genuinely trims
+    pl, pr = {}, {}
+    for s in live:
+        pl[s] = sum(float(st.cm.predict(qt, kvt))
+                    for qt, kvt in live[s]) / float(st.speeds[s])
+        pr[s] = sum(float(st.cm.predict(qt, kvt))
+                    for qt, kvt in rect[s]) / float(st.speeds[s])
+        assert st.preds[s] == pytest.approx(pl[s], rel=1e-12)
+        assert pl[s] <= pr[s]
+    assert sum(pl.values()) < sum(pr.values())   # trimming is real
+
+
+def test_executor_masked_kill_bit_identical_to_reduced_pool():
+    """The §9 acceptance property under a non-trivial mask: a masked
+    step with a mid-step kill merges to the bit-identical output of a
+    fault-free masked run on the reduced pool (and the fault-free full
+    pool matches the masked single-pool oracle, proving the mask
+    reached the serve)."""
+    d, nb = 3, 16
+    segs = _sliding_segs(d, nb)
+    sess = make_session(d, nb, mask=SLIDING)
+    ex_ref = make_executor(make_session(d, nb, mask=SLIDING))
+    ex = make_executor(sess, faults=FaultSchedule.parse("kill:1@0"))
+    q, k, v, pos = synth(ex, segs, seed=21)
+
+    ref, rep0 = ex_ref.run_step(0, q, k, v, pos, segs)
+    plan, _ = ex_ref.session.plan(segs)
+    cad = CADContext(cfg=sess.cfg, kernel=sess.kernel, jmax=sess.jmax,
+                     mask=SLIDING)
+    oracle = _global_sim(q, k, v, pos, jax.tree.map(jnp.asarray, plan),
+                         cad, 0.0, None)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(oracle))
+
+    out, rep = ex.run_step(0, q, k, v, pos, segs)
+    assert rep.failed == (1,) and rep.recovered_blocks > 0
+
+    pool_b = ServerPool(d)
+    pool_b.remove(1)
+    ex_b = make_executor(make_session(d, nb, mask=SLIDING)
+                         .with_pool(pool_b))
+    out_b, _ = ex_b.run_step(0, q, k, v, pos, segs)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_b))

@@ -1,0 +1,259 @@
+"""Ring-attention baseline (DESIGN.md §13).
+
+The differential discipline of PR 5 applied to the ring schedule:
+``ring_attention`` (decomposed per-endpoint dispatch) must match
+``ring_global_sim`` (single-pool oracle running the identical pass
+schedule through the fused vmapped orchestration) **bitwise**, forward
+and vjp, on dense-causal and doc-masked inputs; both must agree with
+the standard full serve to float tolerance.  Plus the host-side
+geometry invariants: contiguous shard ownership, per-pass cost
+conservation, and exact dead-pass skipping.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cad import CADConfig, get_planner
+from repro.core.dispatch import (CADContext, _global_sim, ring_attention,
+                                 ring_global_sim, ring_pass_geometry)
+from repro.core.mask import MaskSpec
+from repro.core.plan import ring_assignment
+from repro.core.scheduler import (block_costs, layout_from_segments,
+                                  ring_pass_costs, ring_shard_size)
+from repro.kernels.packed_flash import kernel as K
+from repro.kernels.packed_flash import ops as O
+
+BLK = 16
+
+MASKS = {
+    "dense": None,
+    "sliding": MaskSpec(kind="sliding", window=2 * BLK, sink=BLK),
+    "dilated": MaskSpec(kind="dilated", rate=2),
+}
+
+
+def make_cfg(d, nb):
+    return CADConfig(n_servers=d, blk=BLK, nb=nb, cq=nb, ckv=2 * nb,
+                     nkv=4 * nb)
+
+
+def make_layout(d, nb, seed=0, max_doc_blocks=4):
+    rng = np.random.default_rng(seed)
+    segs = np.zeros((d, nb * BLK), np.int32)
+    sid = 1
+    for r in range(d):
+        t = 0
+        while t < nb:
+            dbl = int(rng.integers(1, min(max_doc_blocks, nb - t) + 1))
+            segs[r, t * BLK:(t + dbl) * BLK] = sid
+            sid += 1
+            t += dbl
+    poss = np.broadcast_to(np.arange(nb * BLK), segs.shape)
+    return segs, np.where(segs > 0, poss, -1).astype(np.int32)
+
+
+def make_qkv(d, s_len, nh=2, hkv=2, dh=8, seed=0):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (d, s_len, nh, dh), jnp.float32)
+    k = jax.random.normal(kk, (d, s_len, hkv, dh), jnp.float32)
+    v = jax.random.normal(kv, (d, s_len, hkv, dh), jnp.float32)
+    return q, k, v
+
+
+def ring_setup(d=4, nb=8, seed=0, mask=None):
+    cfg = make_cfg(d, nb)
+    segs, pos = make_layout(d, nb, seed)
+    res = get_planner("ring")(cfg, segs, comm=None, mask=mask)
+    plan = jax.tree.map(jnp.asarray, res.plan)
+    q, k, v = make_qkv(d, nb * BLK, seed=seed)
+    cad = CADContext(cfg=cfg, plan=plan, kernel="xla", jmax=cfg.nkv,
+                     mask=mask)
+    return cfg, segs, jnp.asarray(pos), plan, q, k, v, cad
+
+
+def bitwise_equal(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return a.shape == b.shape and a.tobytes() == b.tobytes()
+
+
+# ===================================================================
+# host-side geometry invariants
+# ===================================================================
+
+def test_ring_assignment_contiguous_shards():
+    """Every document is cut into P contiguous shards of equal ceil
+    size, owned by the allowed servers in order — the DISTFLASHATTN
+    layout, independent of where the doc's home rank is."""
+    cfg = make_cfg(4, 8)
+    segs, _ = make_layout(4, 8, seed=3)
+    docs, doc_of, bi_of = layout_from_segments(segs, BLK, 4)
+    assign = ring_assignment(cfg, docs)
+    for doc in docs:
+        L = ring_shard_size(doc.n_blocks, 4)
+        owners = [assign[g] for g in doc.blocks()]
+        expect = [j // L for j in range(doc.n_blocks)]
+        assert owners == expect
+    # restricted pool: shards land on the allowed servers, in order
+    assign2 = ring_assignment(cfg, docs, servers=(1, 3))
+    for doc in docs:
+        L = ring_shard_size(doc.n_blocks, 2)
+        owners = {assign2[g] for g in doc.blocks()}
+        assert owners <= {1, 3}
+
+
+@pytest.mark.parametrize("mask_name", sorted(MASKS))
+def test_ring_pass_costs_conserve_loads(mask_name):
+    """Summing the [P, n_servers] per-pass cost table over passes gives
+    exactly the ring assignment's per-server live-block loads: the pass
+    decomposition neither drops nor double-counts work."""
+    mask = MASKS[mask_name]
+    cfg = make_cfg(4, 8)
+    segs, _ = make_layout(4, 8, seed=5)
+    docs, doc_of, bi_of = layout_from_segments(segs, BLK, 4)
+    table = ring_pass_costs(docs, BLK, 4, mask=mask)
+    assert table.shape == (4, 4)
+    cost = block_costs(doc_of, bi_of, BLK, None, mask)
+    assign = ring_assignment(cfg, docs)
+    loads = np.array([cost[assign == s].sum() for s in range(4)])
+    np.testing.assert_allclose(table.sum(axis=0), loads, rtol=1e-12)
+
+
+def test_ring_geometry_skips_dead_passes_exactly():
+    """Causal-dead (q shard strictly left of the rotated kv shard) and
+    mask-dead windows get kv_len 0; pass 0 (the diagonal) is always
+    live for every live task."""
+    cfg = make_cfg(4, 8)
+    segs, _ = make_layout(4, 8, seed=1)
+    res = get_planner("ring")(cfg, segs, comm=None)
+    pps = ring_pass_geometry(cfg, segs, res.plan)
+    assert len(pps) == 4
+    live0 = np.asarray(res.plan["task_kv_len"]) > 0
+    assert (pps[0]["task_kv_len"][live0] > 0).all()
+    # rotation covers each task's prefix exactly once across passes
+    total = sum(pp["task_kv_len"] for pp in pps)
+    np.testing.assert_array_equal(total, np.asarray(res.plan["task_kv_len"]))
+    # a masked geometry never serves more kv than the dense one
+    pps_m = ring_pass_geometry(cfg, segs, res.plan,
+                               mask=MASKS["sliding"])
+    for pp_d, pp_m in zip(pps, pps_m):
+        assert (pp_m["task_kv_len"] <= pp_d["task_kv_len"]).all()
+
+
+# ===================================================================
+# merge op: online-softmax partial combination
+# ===================================================================
+
+def test_merge_dead_partial_is_bitwise_noop():
+    """Merging a dead partial (finalized lse >= LSE_DEAD marker) into a
+    live one returns the live side bitwise — forward and gradient: the
+    dead side contributes exactly nothing, not epsilon."""
+    key = jax.random.PRNGKey(7)
+    ka, kb = jax.random.split(key)
+    out_a = jax.random.normal(ka, (3, 4, 2, 8))       # [b, blk, hq, dh]
+    lse_a = jax.random.normal(kb, (3, 2, 4))          # [b, hq, blk]
+    out_dead = jnp.zeros_like(out_a)
+    lse_dead = jnp.full_like(lse_a, K.LSE_DEAD)
+    o, l = O.merge_softmax_partials(out_a, lse_a, out_dead, lse_dead)
+    assert bitwise_equal(o, out_a) and bitwise_equal(l, lse_a)
+    o2, l2 = O.merge_softmax_partials(out_dead, lse_dead, out_a, lse_a)
+    assert bitwise_equal(o2, out_a) and bitwise_equal(l2, lse_a)
+
+    def loss(oa, la, ob, lb):
+        o, l = O.merge_softmax_partials(oa, la, ob, lb)
+        return jnp.sum(o * o) + jnp.sum(jnp.sin(l))
+
+    g = jax.grad(loss, argnums=(0, 1, 2, 3))(out_a, lse_a, out_dead,
+                                             lse_dead)
+    gr = jax.grad(lambda oa, la: jnp.sum(oa * oa) + jnp.sum(jnp.sin(la)))
+    ga, gl = gr(out_a, lse_a), jax.grad(
+        lambda la: jnp.sum(out_a * out_a) + jnp.sum(jnp.sin(la)))(lse_a)
+    assert bitwise_equal(g[0], ga) and bitwise_equal(g[1], gl)
+    assert not np.asarray(g[2]).any() and not np.asarray(g[3]).any()
+
+
+def test_merge_two_live_halves_match_whole():
+    """Splitting one softmax into two kv halves and merging the
+    finalized partials reproduces the unsplit attention to float
+    tolerance, and gradients flow through both halves."""
+    key = jax.random.PRNGKey(11)
+    kq, kk, kv = jax.random.split(key, 3)
+    T, H, dh, S = 4, 2, 8, 32
+    q = jax.random.normal(kq, (T, H, dh))
+    k = jax.random.normal(kk, (S, H, dh))
+    v = jax.random.normal(kv, (S, H, dh))
+
+    def soft(q, k, v):                                # dense reference
+        s = jnp.einsum("thd,shd->hts", q, k) / np.sqrt(dh)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("hts,shd->thd", p, v)
+
+    def half(q, k, v):                                # finalized partial
+        s = jnp.einsum("thd,shd->hts", q, k) / np.sqrt(dh)
+        lse = jax.nn.logsumexp(s, axis=-1)            # [H, T]
+        return jnp.einsum("hts,shd->thd", jnp.exp(s - lse[..., None]),
+                          v), lse
+
+    oa, la = half(q, k[:S // 2], v[:S // 2])
+    ob, lb = half(q, k[S // 2:], v[S // 2:])
+    o, _ = O.merge_softmax_partials(oa[None], la[None], ob[None],
+                                    lb[None])
+    np.testing.assert_allclose(np.asarray(o[0]), np.asarray(soft(q, k, v)),
+                               atol=1e-6)
+    g = jax.grad(lambda oa, ob: jnp.sum(
+        O.merge_softmax_partials(oa[None], la[None], ob[None],
+                                 lb[None])[0] ** 2))(oa, ob)
+    assert np.isfinite(np.asarray(g)).all() and np.asarray(g).any()
+
+
+# ===================================================================
+# differential: decomposed ring == single-pool oracle, bitwise
+# ===================================================================
+
+@pytest.mark.parametrize("mask_name", sorted(MASKS))
+def test_ring_bitwise_vs_oracle(mask_name):
+    """Decomposed per-endpoint ring execution is bit-identical —
+    forward AND vjp — to the fused single-pool oracle running the same
+    pass schedule (same ops, same order, different orchestration)."""
+    mask = MASKS[mask_name]
+    cfg, segs, pos, plan, q, k, v, cad = ring_setup(seed=2, mask=mask)
+
+    def f_ring(q, k, v):
+        return ring_attention(cad, plan, segs, q, k, v, pos)
+
+    def f_sim(q, k, v):
+        return ring_global_sim(q, k, v, pos, plan, cad, segs)
+
+    out_r = f_ring(q, k, v)
+    out_s = f_sim(q, k, v)
+    assert bitwise_equal(out_r, out_s)
+
+    def loss(f):
+        return lambda q, k, v: jnp.sum(jnp.abs(f(q, k, v)))
+
+    gr = jax.grad(loss(f_ring), argnums=(0, 1, 2))(q, k, v)
+    gs = jax.grad(loss(f_sim), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gr, gs):
+        assert bitwise_equal(a, b)
+
+
+@pytest.mark.parametrize("mask_name", sorted(MASKS))
+def test_ring_matches_full_serve(mask_name):
+    """The merged ring output (and its grads) agree with the standard
+    one-shot serve of the same plan to float32 tolerance — the ring
+    decomposition changes the reduction order, nothing else."""
+    mask = MASKS[mask_name]
+    cfg, segs, pos, plan, q, k, v, cad = ring_setup(seed=4, mask=mask)
+    out_r = ring_global_sim(q, k, v, pos, plan, cad, segs)
+    out_f = _global_sim(q, k, v, pos, plan, cad, 0.0, None)
+    np.testing.assert_allclose(np.asarray(out_r), np.asarray(out_f),
+                               atol=2e-6)
+    gr = jax.grad(lambda q, k, v: jnp.sum(jnp.abs(
+        ring_global_sim(q, k, v, pos, plan, cad, segs))),
+        argnums=(0, 1, 2))(q, k, v)
+    gf = jax.grad(lambda q, k, v: jnp.sum(jnp.abs(
+        _global_sim(q, k, v, pos, plan, cad, 0.0, None))),
+        argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gr, gf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-6)
