@@ -1,0 +1,202 @@
+"""Observability overhead: tracing must observe, never perturb.
+
+The acceptance experiment for DESIGN.md §14's overhead contract:
+
+  * the same fault-injected elastic run (kill one server mid-run)
+    executes twice — once with the global recorder disabled (the
+    production default) and once with tracing enabled into a live
+    ring recorder + fresh metrics registry;
+  * outputs must be **bit-identical**: recording writes spans and
+    counters, it never touches a tensor, an RNG stream or a planning
+    decision;
+  * the traced run must cost < 2% extra wall time per step (full mode;
+    fast mode reports the number without enforcing — CI smoke runners
+    are too noisy for a 2% wall assertion);
+  * the exported Chrome trace must be schema-valid (loadable by
+    Perfetto: thread-name metadata, complete events with ``dur``,
+    microsecond timestamps) and ``launch/trace_report.py`` must
+    attribute the kill step's max to the *correct* straggler — the
+    server the StepReports themselves say was slowest.
+
+Emits ``obs_overhead,<us>,...`` CSV rows and returns the
+machine-readable dict wired into ``benchmarks/run.py --json`` under
+``"obs"``.
+"""
+import hashlib
+import json
+import time
+import types
+
+import numpy as np
+
+from repro.cad import CADSession
+from repro.data.pipeline import PipelineConfig, raw_batches
+from repro.launch.trace_report import attribute_step, load_steps
+from repro.obs import (MetricsRegistry, TraceRecorder, get_registry,
+                       set_recorder, set_registry)
+from repro.runtime import ElasticExecutor, FaultSchedule, ServerPool
+
+HEADS = types.SimpleNamespace(n_heads=2, head_dim=16, n_kv_heads=2)
+
+
+def _digest(x) -> str:
+    return hashlib.sha1(np.ascontiguousarray(np.asarray(x))
+                        .tobytes()).hexdigest()
+
+
+def _batches(n_ranks, tokens_per_rank, max_doc, steps, seed):
+    pipe = PipelineConfig(distribution="pretrain", max_doc_len=max_doc,
+                          seq_len=tokens_per_rank, global_batch=n_ranks,
+                          n_ranks=n_ranks, seed=seed)
+    gen = raw_batches(pipe)
+    out = []
+    for _ in range(steps):
+        b = next(gen)
+        out.append((b["segment_ids"], b["positions"]))
+    return pipe, out
+
+
+def _run(pipe, batches, faults_spec, *, seed=0):
+    """One elastic run under the *current* global recorder/registry.
+    Returns (digests, reports, wall_seconds)."""
+    session = CADSession.for_pipeline(HEADS, pipe,
+                                      plan_policy="balanced", prefetch=0)
+    session = session.with_pool(ServerPool(session.cfg.n_servers))
+    ex = ElasticExecutor(session,
+                         faults=FaultSchedule.parse(faults_spec),
+                         feed_calibrator=False)
+    digests, reports = [], []
+    t0 = time.perf_counter()
+    for step, (segs, positions) in enumerate(batches):
+        q, k, v, pos = ex.synth_inputs(segs, positions, seed=seed + step)
+        out, rep = ex.run_step(step, q, k, v, pos, segs)
+        digests.append(_digest(out))
+        reports.append(rep)
+    return digests, reports, time.perf_counter() - t0
+
+
+def _trace_valid(trace: dict) -> bool:
+    """Perfetto-loadable: serializable, thread names declared, spans
+    carry microsecond ts + dur, instants carry a scope."""
+    try:
+        json.dumps(trace)
+    except (TypeError, ValueError):
+        return False
+    evs = trace.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        return False
+    tids = {e["tid"] for e in evs
+            if e.get("ph") == "M" and e.get("name") == "thread_name"}
+    if not tids:
+        return False
+    for e in evs:
+        if e.get("ph") == "M":
+            continue
+        if not {"ph", "name", "pid", "tid", "ts"} <= set(e):
+            return False
+        if e["tid"] not in tids:
+            return False
+        if e["ph"] == "X" and "dur" not in e:
+            return False
+        if e["ph"] == "i" and e.get("s") not in ("t", "p", "g"):
+            return False
+    return True
+
+
+def run(n_ranks=4, tokens_per_rank=2048, max_doc=1024, steps=10,
+        kill_step=4, victim=1, repeats=3, seed=0):
+    pipe, batches = _batches(n_ranks, tokens_per_rank, max_doc, steps,
+                             seed)
+    faults = f"kill:{victim}@{kill_step}"
+
+    # alternate untraced/traced repeats so slow time-varying machine
+    # drift (jit caches warming, CPU contention) cancels instead of
+    # loading onto whichever phase happened to run second; best-of-N
+    # mins then estimate each phase's true floor
+    prev_reg = get_registry()
+    rec = TraceRecorder(capacity=65536)
+    set_recorder(None)
+    _run(pipe, batches, faults, seed=seed)      # jit warm-up, untimed
+    untraced_walls, traced_walls = [], []
+    try:
+        for _ in range(max(1, repeats)):
+            # untraced: the production default — disabled no-op recorder
+            set_recorder(None)
+            set_registry(prev_reg)
+            base_d, base_r, wall = _run(pipe, batches, faults, seed=seed)
+            untraced_walls.append(wall)
+            # traced: live ring recorder + a fresh registry
+            rec.clear()
+            set_recorder(rec)
+            set_registry(MetricsRegistry())
+            traced_d, traced_r, wall = _run(pipe, batches, faults,
+                                            seed=seed)
+            traced_walls.append(wall)
+        trace = rec.to_chrome_trace()
+        steps_traced = get_registry().counter("cad_steps_total").value()
+    finally:
+        set_recorder(None)
+        set_registry(prev_reg)
+
+    bit_identical = base_d == traced_d
+    untraced_s = min(untraced_walls)         # best-of-N: least noise
+    traced_s = min(traced_walls)
+    overhead_pct = (traced_s - untraced_s) / max(untraced_s, 1e-12) * 100
+
+    trace_valid = _trace_valid(trace)
+    # straggler attribution vs ground truth: the reports' own slowest
+    # server at the kill step (serve + recovery seconds)
+    kill_rep = traced_r[kill_step]
+    totals = {s: kill_rep.server_seconds.get(s, 0.0)
+              + kill_rep.recovery_seconds.get(s, 0.0)
+              for s in set(kill_rep.server_seconds)
+              | set(kill_rep.recovery_seconds)}
+    expect = max(sorted(totals), key=lambda s: totals[s])
+    by_step = load_steps(trace)
+    attr = attribute_step(by_step[kill_step]) if kill_step in by_step \
+        else None
+    straggler_attributed = attr is not None \
+        and attr["server"] == expect \
+        and abs(attr["max_seconds"] - totals[expect]) \
+        <= 1e-9 + 1e-6 * totals[expect]
+
+    return {
+        "steps": steps,
+        "kill_step": kill_step,
+        "bit_identical": bool(bit_identical),
+        "trace_valid": bool(trace_valid),
+        "straggler_attributed": bool(straggler_attributed),
+        "events_recorded": len(rec),
+        "metric_steps_counted": steps_traced,
+        "untraced_us_per_step": untraced_s / steps * 1e6,
+        "traced_us_per_step": traced_s / steps * 1e6,
+        "overhead_pct": float(overhead_pct),
+    }
+
+
+def main(fast=False):
+    kw = dict(n_ranks=3, tokens_per_rank=1024, max_doc=512, steps=6,
+              kill_step=2, repeats=2) if fast else {}
+    r = run(**kw)
+    ok = r["bit_identical"] and r["trace_valid"] \
+        and r["straggler_attributed"]
+    if not fast:
+        # the §14 overhead contract is asserted only in full mode:
+        # smoke runners are too noisy for a 2% wall-clock bound
+        ok = ok and r["overhead_pct"] < 2.0
+    print(f"obs_overhead,{r['traced_us_per_step']:.2f},"
+          f"phase=traced;events={r['events_recorded']};"
+          f"steps={r['steps']}")
+    print(f"obs_overhead,{r['untraced_us_per_step']:.2f},"
+          f"phase=untraced;overhead_pct={r['overhead_pct']:.2f}")
+    print(f"obs_overhead,0.0,phase=verdict;"
+          f"bit_identical={r['bit_identical']};"
+          f"trace_valid={r['trace_valid']};"
+          f"straggler_attributed={r['straggler_attributed']};ok={ok}")
+    if not ok:
+        raise RuntimeError(f"obs overhead acceptance failed: {r}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

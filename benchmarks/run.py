@@ -37,6 +37,12 @@ Prints ``name,us_per_call,derived`` CSV (benchmarks/common.py format).
                                     step time (barrier-per-pass ring vs
                                     one fused serve), dense-causal and
                                     doc-masked workloads
+  obs_overhead          DESIGN §14 — tracing observes, never perturbs:
+                                    traced vs untraced fault-injected
+                                    elastic run, bit-identical outputs,
+                                    <2% wall overhead (full mode),
+                                    Perfetto-valid trace, trace_report
+                                    attributes the right straggler
   memory_pressure       DESIGN §11 — memory-aware planning + chunked KV
                                     streaming: a workload whose kv
                                     prefix overflows any endpoint
@@ -149,12 +155,16 @@ def prefetch_microbench(fast=False):
 
 
 # --------------------------------------------------------------- gate
-# (path regex, direction, relative threshold, needs --gate-times).
+# (path regex, direction, threshold, needs --gate-times).
 # "lower" = metric must not rise past base*(1+thr); "higher" = must not
-# fall below base*(1-thr).  Deterministic modeled ratios gate at 15%;
-# wall-clock-derived ratios get generous noise allowances; raw *_us
-# timings only gate under --gate-times (CI runners are too noisy).
+# fall below base*(1-thr); "lower_abs" = must not exceed base+thr (an
+# absolute delta — for metrics like overhead percentages whose baseline
+# sits near zero, where relative bounds degenerate).  Deterministic
+# modeled ratios gate at 15%; wall-clock-derived ratios get generous
+# noise allowances; raw *_us timings only gate under --gate-times (CI
+# runners are too noisy).
 GATE_RULES = (
+    (r"^obs\.overhead_pct$", "lower_abs", 2.0, True),
     (r"^fabric\.throughput_ratio$", "higher", 0.15, False),
     (r"^elastic\.steady_ratio$", "lower", 0.15, False),
     (r"^straggler\.(calibrated|declared)_max_over_mean$",
@@ -234,6 +244,10 @@ def check_gate(baseline_results, results, *, gate_times=False):
             if cval is None:
                 fails.append(f"{path}: metric disappeared "
                              f"(baseline {bval:.4g})")
+            elif direction == "lower_abs" and cval > bval + thr:
+                fails.append(f"{path}: {bval:.4g} -> {cval:.4g} "
+                             f"(+{cval - bval:.2f} absolute, "
+                             f"limit +{thr:.2f})")
             elif direction == "lower" and cval > bval * (1 + thr) \
                     and cval - bval > 1e-12:
                 fails.append(f"{path}: {bval:.4g} -> {cval:.4g} "
@@ -265,8 +279,8 @@ def main() -> None:
     from benchmarks import (cad_vs_ring, cp_overheads, dedicated_pool,
                             e2e_sim, elastic_recovery, fabric_mix,
                             imbalance, kernel_throughput,
-                            memory_pressure, overlap, pp_bubbles,
-                            serve_throughput, sparse_balance,
+                            memory_pressure, obs_overhead, overlap,
+                            pp_bubbles, serve_throughput, sparse_balance,
                             straggler_elim, table1_scaling,
                             tolerance_sweep)
     benches = {
@@ -287,6 +301,7 @@ def main() -> None:
         "elastic": lambda: elastic_recovery.main(fast=args.fast),
         "fabric": lambda: fabric_mix.main(fast=args.fast),
         "memory": lambda: memory_pressure.main(fast=args.fast),
+        "obs": lambda: obs_overhead.main(fast=args.fast),
         "sparse": lambda: sparse_balance.main(fast=args.fast),
         "ring": lambda: cad_vs_ring.main(fast=args.fast),
     }
@@ -296,7 +311,7 @@ def main() -> None:
     # trajectory
     json_keys = ("fig5", "kernel_bwd", "fig4", "prefetch", "straggler",
                  "serve", "elastic", "fabric", "memory", "sparse",
-                 "ring")
+                 "ring", "obs")
     results, failed = {}, 0
     for name, fn in benches.items():
         if args.only and name != args.only:

@@ -27,6 +27,9 @@ import queue
 import threading
 from typing import Any, Callable, Iterable, Iterator, Optional
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 _DONE = object()
 
 
@@ -75,16 +78,28 @@ class PlanPrefetcher:
         return False
 
     def _work(self) -> None:
+        rec = obs_trace.get_recorder()
         try:
             for raw in self._source:
                 if self._stop.is_set():
                     return
-                if not self._put(self._fn(raw)):
+                with rec.span("prefetch.plan", "prefetch"):
+                    item = self._fn(raw)
+                if not self._put(item):
                     return
+                self._depth_gauge()
         except BaseException as e:           # surfaced at the next pull
             self._exc = e
         finally:
             self._put(_DONE)
+
+    def _depth_gauge(self) -> None:
+        """Publish the current look-ahead occupancy (queue depth is
+        approximate by nature — a gauge, not an invariant)."""
+        obs_metrics.get_registry().gauge(
+            "cad_prefetch_queue_depth",
+            "planned batches waiting in the prefetch queue").set(
+            self._queue.qsize())
 
     # ----------------------------------------------------------- consumer
     def __iter__(self) -> Iterator[Any]:
@@ -110,9 +125,16 @@ class PlanPrefetcher:
                 # world that no longer exists (a dead pool epoch, a
                 # torn-down session) — drop it, never deliver it
                 raise StopIteration
+            self._depth_gauge()
             if self._is_stale is not None and self._is_stale(item):
-                item = self._refresh(item)
+                with obs_trace.get_recorder().span("prefetch.replan",
+                                                   "prefetch"):
+                    item = self._refresh(item)
                 self.stale_refreshes += 1
+                obs_metrics.get_registry().counter(
+                    "cad_prefetch_stale_refreshes_total",
+                    "prefetched plans re-planned at pull "
+                    "(stale epoch or drifted speeds)").inc()
             return item
 
     def close(self) -> None:

@@ -48,6 +48,8 @@ from repro.core.dispatch import CADContext, iter_plan_tasks, \
     probe_plan_times
 from repro.core.mask import MaskSpec, parse_mask, validate_mask_layout
 from repro.core.plan import CADConfig, PingPongPlan, StepPlan
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.parallel import ParallelContext, ShardingRules
 
 Plan = Union[StepPlan, PingPongPlan]
@@ -294,7 +296,7 @@ class CADSession:
         comm = self.comm or CommModel(1, 1, 1)
         plans = list(plan) if isinstance(plan, (tuple, list, PingPongPlan)) \
             else [plan]
-        for p in plans:
+        for i, p in enumerate(plans):
             # ping-pong halves may have been planned with a nano-batch
             # re-sized config; recover the geometry from the arrays
             nb = np.asarray(p["q_home_idx"]).shape[1]
@@ -302,10 +304,11 @@ class CADSession:
                 else dataclasses.replace(self.cfg, nb=nb)
             cad = CADContext(cfg=cfg, kernel=self.kernel, bwd=self.bwd,
                              jmax=self.jmax, mask=self.mask)
+            label = "probe" if len(plans) == 1 else f"probe/half{i}"
             for s, tasks, seconds in probe_plan_times(
                     cad, p, n_heads=comm.n_heads, head_dim=comm.head_dim,
                     n_kv_heads=comm.n_kv_heads, seed=seed,
-                    repeats=repeats):
+                    repeats=repeats, trace_label=label):
                 self.calibrator.observe_tasks(tasks, seconds, server=s)
 
     # ----------------------------------------------------------- planning
@@ -315,7 +318,31 @@ class CADSession:
         layout (T = tokens per rank; 2·nb·blk when ping-pong is on).
         With a calibrator attached, the whole step — both ping-pong
         halves — plans from ONE calibration snapshot, recorded in the
-        stats as ``calib_version`` (+ the per-server speeds used)."""
+        stats as ``calib_version`` (+ the per-server speeds used).
+
+        Each call is narrated to the observability layer (DESIGN.md
+        §14): a ``plan.build`` span on the ``planner`` track and the
+        plan-quality gauges — both no-ops unless tracing is enabled /
+        read."""
+        with obs_trace.get_recorder().span("plan.build", "planner",
+                                           args={"policy":
+                                                 self.plan_policy}):
+            plan, stats = self._plan_impl(segment_ids)
+        reg = obs_metrics.get_registry()
+        reg.gauge("cad_plan_load_max_over_mean",
+                  "planned per-server load max/mean").set(
+            stats.get("load_max_over_mean", 0.0))
+        if "calib_version" in stats:
+            reg.gauge("cad_calib_version",
+                      "calibration snapshot version planned from").set(
+                stats["calib_version"])
+        if "pool_epoch" in stats:
+            reg.gauge("cad_pool_epoch", "pool membership epoch").set(
+                stats["pool_epoch"])
+        return plan, stats
+
+    def _plan_impl(self, segment_ids: np.ndarray) \
+            -> Tuple[Plan, Dict[str, float]]:
         segs = np.asarray(segment_ids)
         planner = get_planner(self.plan_policy)
         if self.mask is not None:

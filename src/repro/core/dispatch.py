@@ -38,6 +38,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core.attention import NEG_INF, xla_flash_attention
 from repro.core.mask import live_block_mask, live_kv_len, mask_params
 from repro.core.plan import CADConfig, PingPongPlan
+from repro.obs import server_track
+from repro.obs import trace as obs_trace
 
 from repro.compat import shard_map as _shard_map
 
@@ -835,7 +837,7 @@ def ring_global_sim(q, k, v, pos, plan, cad: CADContext,
 def probe_plan_times(cad: CADContext, plan, *, n_heads: int = 1,
                      head_dim: int = 8, n_kv_heads: Optional[int] = None,
                      dtype=jnp.float32, seed: int = 0,
-                     repeats: int = 1) \
+                     repeats: int = 1, trace_label: str = "probe") \
         -> List[Tuple[int, List[Tuple[int, int]], float]]:
     """Time each server's fused CA-task batch for one plan, eagerly,
     with synthetic q/k/v — the per-task kernel-timing hook of the
@@ -873,6 +875,7 @@ def probe_plan_times(cad: CADContext, plan, *, n_heads: int = 1,
 
     results = []
     warm = False
+    rec = obs_trace.get_recorder()
     for s in range(d):
         q_tasks, qpos, k_buf, v_buf, kpos = inputs[s]
         args = (q_tasks, qpos, k_buf, v_buf, kpos,
@@ -880,11 +883,16 @@ def probe_plan_times(cad: CADContext, plan, *, n_heads: int = 1,
         if not warm:      # one compile for the shared shape
             jax.block_until_ready(serve(*args))
             warm = True
-        t0 = time.perf_counter()
-        for _ in range(max(1, repeats)):
-            out = serve(*args)
-        jax.block_until_ready(out)
-        seconds = (time.perf_counter() - t0) / max(1, repeats)
+        # the probe span lands on the server's own gantt track
+        # (``trace_label`` distinguishes ping-pong halves — §14)
+        with rec.span(trace_label, server_track(s),
+                      args={"repeats": max(1, repeats),
+                            "n_tasks": len(by_server[s])}):
+            t0 = time.perf_counter()
+            for _ in range(max(1, repeats)):
+                out = serve(*args)
+            jax.block_until_ready(out)
+            seconds = (time.perf_counter() - t0) / max(1, repeats)
         results.append((s, by_server[s], seconds))
     return results
 

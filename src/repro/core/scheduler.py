@@ -69,6 +69,8 @@ import numpy as np
 
 from repro.core.cost_model import CommModel, CostModel, MemoryModel
 from repro.core.mask import MaskSpec, live_block_mask, live_block_table
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -713,6 +715,20 @@ def schedule(segment_ids: np.ndarray, *, blk: int, n_servers: int,
         final_resident = assignment_resident_bytes(
             assign, doc_of, bi_of, blk, n_servers, mem,
             streamed=streamed, stream_chunk=stream_chunk)
+    # narrate the schedule-time prediction (DESIGN.md §14): the
+    # imbalance gauge is the planner's own claim about the step it just
+    # built — trace_report compares it against measured serve times
+    obs_metrics.get_registry().gauge(
+        "cad_schedule_imbalance",
+        "scheduled per-server load max/mean - 1 (straggler "
+        "overhang)").set(imbalance(loads))
+    rec = obs_trace.get_recorder()
+    if rec.enabled:
+        rec.instant("schedule", "planner",
+                    args={"imbalance": imbalance(loads),
+                          "n_moves": n_moves,
+                          "comm_bytes": float(comm_bytes),
+                          "excluded": sorted(exclude)})
     return Schedule(assign=assign, docs=docs, doc_of_block=doc_of,
                     bi_of_block=bi_of, n_servers=n_servers, nb=nb, blk=blk,
                     loads=loads, comm_bytes=comm_bytes, n_moves=n_moves,

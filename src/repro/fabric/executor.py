@@ -32,7 +32,6 @@ Per ``run_mixed_step`` (DESIGN.md §10):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -43,6 +42,7 @@ from repro.fabric.tenancy import (SERVE, TRAIN, AdmissionPolicy,
                                   AdmissionRound, ServeTaskReq,
                                   admit_serve)
 from repro.fabric.workload import ServeWorkload
+from repro.obs import server_track
 from repro.runtime.executor import ElasticExecutor, StepReport
 
 
@@ -87,11 +87,13 @@ class FabricExecutor(ElasticExecutor):
     def __init__(self, session, workload: ServeWorkload, *,
                  faults=None, policy: AdmissionPolicy = AdmissionPolicy(),
                  speculate_pct: float = 0.0, speculate_slack: float = 1.5,
-                 timer: str = "model", feed_calibrator: bool = False):
+                 timer: str = "model", feed_calibrator: bool = False,
+                 recorder=None, metrics=None, clock=None):
         super().__init__(session, faults=faults,
                          speculate_pct=speculate_pct,
                          speculate_slack=speculate_slack, timer=timer,
-                         feed_calibrator=feed_calibrator)
+                         feed_calibrator=feed_calibrator,
+                         recorder=recorder, metrics=metrics, clock=clock)
         if workload.blk != session.cfg.blk:
             raise ValueError(
                 f"workload blk {workload.blk} != pool blk "
@@ -136,6 +138,16 @@ class FabricExecutor(ElasticExecutor):
         rnd = admit_serve(tasks, busy, interval, snap, st.view,
                           policy=self.policy, candidates=candidates,
                           waits=self.workload.waits)
+        t_base = self._trace_t           # this step's timeline origin
+        self.recorder.instant(
+            "admission", "fabric", ts=t_base, step=step,
+            args={"admitted": rnd.n_admitted,
+                  "deferred": len(rnd.deferred),
+                  "forced": list(rnd.forced),
+                  "slo_misses": rnd.slo_misses,
+                  "spec_preempted": spec_preempted,
+                  "pool_epoch": rnd.pool_epoch,
+                  "calib_version": rnd.calib_version})
 
         train_out, trep = self.finish_step(st)
 
@@ -187,6 +199,9 @@ class FabricExecutor(ElasticExecutor):
                   + serve_secs.get(s, 0.0)
                   for s in set(candidates) | set(trep.server_seconds)]
         step_seconds = max([float(interval)] + totals)
+        self._record_mixed(step, t_base, float(step_seconds), rnd,
+                           trep, serve_secs, len(lost), readmitted,
+                           spec_preempted)
         rep = FabricStepReport(
             train=trep, pool_epoch=rnd.pool_epoch,
             calib_version=rnd.calib_version, interval=float(interval),
@@ -197,6 +212,50 @@ class FabricExecutor(ElasticExecutor):
             serve_seconds=dict(serve_secs), serve_tokens=tokens,
             step_seconds=float(step_seconds))
         return train_out, rep
+
+    # ----------------------------------------------------- observability
+    def _record_mixed(self, step: int, t_base: float,
+                      step_seconds: float, rnd: AdmissionRound,
+                      trep: StepReport, serve_secs: Dict[int, float],
+                      n_lost: int, readmitted: int,
+                      spec_preempted: bool) -> None:
+        """Narrate the serve tenant's half of the step (DESIGN.md §14).
+        ``finish_step`` already advanced the timeline by the train
+        completion; the fabric completes at ``max(interval, busiest)``,
+        so re-anchor the cumulative origin to the fabric's end."""
+        rec, mx = self.recorder, self.metrics
+        self._trace_t = t_base + step_seconds
+        if rec.enabled:
+            for s, secs in sorted(serve_secs.items()):
+                # backfill runs after the server's train tasks (and any
+                # recovery it absorbed) — same order as execution
+                start = t_base + trep.server_seconds.get(s, 0.0) \
+                    + trep.recovery_seconds.get(s, 0.0)
+                rec.add_span("serve.backfill", server_track(s), start,
+                             secs, step=step)
+        mx.counter("cad_serve_admitted_total",
+                   "serve tasks admitted").inc(rnd.n_admitted)
+        mx.counter("cad_serve_deferred_total",
+                   "serve tasks deferred to a later round").inc(
+            len(rnd.deferred))
+        mx.counter("cad_serve_forced_total",
+                   "starvation-forced admissions").inc(len(rnd.forced))
+        mx.counter("cad_serve_slo_misses_total",
+                   "admissions past their SLO").inc(rnd.slo_misses)
+        mx.counter("cad_serve_lost_total",
+                   "serve tasks lost to a mid-step kill").inc(n_lost)
+        mx.counter("cad_serve_readmitted_total",
+                   "lost serve tasks re-placed same round").inc(
+            readmitted)
+        mx.counter("cad_spec_preempted_total",
+                   "steps where serve reclaimed speculation slack").inc(
+            1 if spec_preempted else 0)
+        wait_h = mx.histogram(
+            "cad_serve_queue_wait_rounds",
+            "rounds a deferred serve task has waited",
+            buckets=(1, 2, 4, 8, 16, 32))
+        for t in rnd.deferred:
+            wait_h.observe(self.workload.waits.get(t.rid, 0))
 
     # ----------------------------------------------------------- serving
     def _run_serve(self, server: int, placed, snap, step: int) -> float:
@@ -210,10 +269,10 @@ class FabricExecutor(ElasticExecutor):
             group = placed[i:i + w.slots]
             inputs, plan = w.build_batch(group)
             if self.timer == "wall":
-                t0 = time.perf_counter()
+                t0 = self.clock.monotonic()
                 out = jax.block_until_ready(serve_task_batch(
                     self._serve_cad, inputs, plan))
-                secs += (time.perf_counter() - t0) * slow
+                secs += (self.clock.monotonic() - t0) * slow
             else:
                 out = serve_task_batch(self._serve_cad, inputs, plan)
                 secs += sum(float(snap.cost_model.predict(

@@ -14,7 +14,11 @@ Endpoints:
     with NDJSON lines ``{"token": t, "done": false}`` as tokens are
     sampled, closing with ``{"rid", "tokens", "done": true}``.
   * ``GET /health`` — ``{"status": "ok"|"draining"|"drained",
-    "active", "waiting", "done", "rounds"}``.
+    "active", "waiting", "done", "rounds", "pool_epoch",
+    "calib_version", "queue_depth"}`` (the last three read from the
+    same metrics registry ``GET /metrics`` exports).
+  * ``GET /metrics`` — Prometheus text exposition of the process
+    metrics registry (DESIGN.md §14).
   * ``POST /drain`` — stop admitting new work; in-flight requests run
     to completion (503 for later ``/generate`` calls).
 
@@ -44,6 +48,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.cost_model import GridCalibrator
 from repro.models import model as M
+from repro.obs import metrics as obs_metrics
 from repro.parallel import ParallelContext
 from repro.serve import Engine, ServeConfig
 from repro.serve.scheduler import DECODE, Request
@@ -132,8 +137,20 @@ class EngineDaemon:
                 status = "ok"
             else:
                 status = "drained" if active + waiting == 0 else "draining"
+            # pool_epoch / calib_version / queue_depth come from the
+            # same metrics registry GET /metrics serves, so the two
+            # endpoints can never disagree (DESIGN.md §14)
+            reg = obs_metrics.get_registry()
+
+            def gval(name, default):
+                v = reg.gauge(name).value()
+                return default if v is None else v
             return {"status": status, "active": active, "waiting": waiting,
-                    "done": done, "rounds": self.rounds}
+                    "done": done, "rounds": self.rounds,
+                    "pool_epoch": int(gval("cad_pool_epoch", 0)),
+                    "calib_version": int(gval("serve_calib_version", -1)),
+                    "queue_depth": int(gval("serve_queue_depth",
+                                            waiting))}
 
     # ------------------------------------------------------------ the worker
     def _on_token(self, rid, token, done):
@@ -189,6 +206,15 @@ def make_handler(daemon: EngineDaemon):
             self.wfile.write(body)
 
         def do_GET(self):
+            if self.path == "/metrics":
+                body = obs_metrics.get_registry().to_text().encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+                return
             if self.path != "/health":
                 return self._json(404, {"error": "unknown path"})
             self._json(200, daemon.stats())

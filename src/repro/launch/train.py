@@ -27,10 +27,12 @@ plans and flapped servers rejoin, DESIGN.md §9), --speculate-pct
 (straggler-speculation percentile for the elastic executor paths).
 """
 import argparse
+import json
 
 from repro.cad import CADSession, available_policies
 from repro.configs import get_config
 from repro.data.pipeline import PipelineConfig
+from repro.obs import enable_tracing, get_recorder, get_registry
 from repro.parallel import ParallelContext
 from repro.train.trainer import TrainConfig, train
 
@@ -88,7 +90,21 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "to this path (one track per attention server; "
+                         "load in ui.perfetto.dev — DESIGN.md §14)")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="trace ring-buffer capacity (oldest events "
+                         "are overwritten past it)")
+    ap.add_argument("--metrics", default="",
+                    help="write the metrics-registry JSON snapshot "
+                         "(counters/gauges/histograms) to this path "
+                         "at exit")
     args = ap.parse_args()
+
+    if args.trace:
+        enable_tracing(capacity=args.trace_capacity)
 
     cfg = get_config(args.arch)
     print(f"arch={cfg.arch_id} params={cfg.n_params()/1e6:.1f}M "
@@ -140,6 +156,15 @@ def main():
     res = train(cfg, pipe, tc, ctx=ctx, session=session)
     h = res["history"]
     print(f"done: loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}")
+    if args.trace:
+        rec = get_recorder()
+        rec.save(args.trace)
+        print(f"trace: {len(rec)} events -> {args.trace} "
+              f"({rec.n_dropped} dropped)")
+    if args.metrics:
+        with open(args.metrics, "w") as f:
+            json.dump(get_registry().to_dict(), f, indent=2)
+        print(f"metrics: -> {args.metrics}")
 
 
 if __name__ == "__main__":

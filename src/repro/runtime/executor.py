@@ -29,12 +29,20 @@ are predicted by the (calibrated) cost model, scaled by the fault
 schedule's slow factors; fully deterministic, the replay/benchmark
 default — or ``"wall"`` — real wall-clock serve times (slow factors
 still multiply), for live measurements.  Outputs are bit-identical
-under either timer; only the reported seconds differ.
+under either timer; only the reported seconds differ.  Wall reads go
+through an injectable :class:`~repro.obs.clock.Clock`, so tests script
+time instead of sleeping.
+
+Every step is additionally narrated to the observability layer
+(DESIGN.md §14): per-server serve/recovery spans on a cumulative
+step timeline (the Perfetto gantt, one track per server), kill /
+speculate / merge events, predicted-vs-measured calibration residual
+gauges, and step/failure/recovery counters.  Recording is a strict
+no-op when the global recorder is disabled and never touches outputs.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -47,6 +55,9 @@ from repro.core.dispatch import (CADContext, assemble_step_outputs,
                                  merge_recovered, serve_task_batch)
 from repro.core.scheduler import (assignment_resident_bytes,
                                   layout_from_segments, streamed_doc_ids)
+from repro.obs import MONOTONIC, server_track
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.runtime.faults import FaultSchedule
 from repro.runtime.pool import PoolExhaustedError, ServerPool
 from repro.runtime.recovery import assignment_of_plan, build_recovery_plan
@@ -128,7 +139,8 @@ class ElasticExecutor:
                  speculate_pct: float = 0.0,
                  speculate_slack: float = 1.5,
                  timer: str = "model",
-                 feed_calibrator: bool = True):
+                 feed_calibrator: bool = True,
+                 recorder=None, metrics=None, clock=None):
         if session.pool is None:
             raise ValueError("session has no ServerPool; use "
                              "session.with_pool(ServerPool(...))")
@@ -149,9 +161,26 @@ class ElasticExecutor:
         self.speculate_slack = float(speculate_slack)
         self.timer = timer
         self.feed_calibrator = feed_calibrator
+        # observability hooks: explicit instances pin the executor to a
+        # recorder/registry; None defers to the process-global ones at
+        # use time (so launch-flag enabling applies retroactively)
+        self._recorder = recorder
+        self._metrics = metrics
+        self.clock = clock if clock is not None else MONOTONIC
+        self._trace_t = 0.0        # cumulative step-timeline origin (s)
         self._cad = CADContext(cfg=session.cfg, kernel=session.kernel,
                                bwd=session.bwd, jmax=session.jmax,
                                mask=session.mask)
+
+    @property
+    def recorder(self) -> obs_trace.TraceRecorder:
+        return self._recorder if self._recorder is not None \
+            else obs_trace.get_recorder()
+
+    @property
+    def metrics(self) -> obs_metrics.MetricsRegistry:
+        return self._metrics if self._metrics is not None \
+            else obs_metrics.get_registry()
 
     # ------------------------------------------------------------ helpers
     def _cost_view(self):
@@ -219,7 +248,11 @@ class ElasticExecutor:
         events = list(self.faults.apply_pre_step(self.pool, step))
 
         segs = np.asarray(segment_ids).reshape(cfg.n_servers, -1)
-        plan, stats = self.session.plan(segs)
+        span_args = {"policy": self.session.plan_policy}
+        with self.recorder.span("step.plan", "planner", step=step,
+                                args=span_args):
+            plan, stats = self.session.plan(segs)
+            span_args["imbalance"] = stats.get("load_max_over_mean")
         view = self.pool.view()
 
         injected = {e.server for e in self.faults.failures_at(step)} \
@@ -234,6 +267,13 @@ class ElasticExecutor:
         cm, speeds = self._cost_view()
         preds = {s: self._predict_server(cm, speeds, tasks_by[s], s)
                  for s in view.active}
+        if preds:
+            vals = np.array([preds[s] for s in view.active])
+            self.metrics.gauge(
+                "cad_predicted_imbalance",
+                "predicted per-server serve time max/mean at "
+                "schedule time").set(
+                float(vals.max() / max(vals.mean(), 1e-30)))
         return StepState(step=step, q=q, k=k, v=v, pos=pos, segs=segs,
                          events=events, plan=plan, stats=stats,
                          view=view, injected=injected, tasks_by=tasks_by,
@@ -266,11 +306,11 @@ class ElasticExecutor:
             slow = self.faults.slow_factor(step, s)
             try:
                 if self.timer == "wall":
-                    t0 = time.perf_counter()
+                    t0 = self.clock.monotonic()
                     outs[s] = jax.block_until_ready(
                         serve_task_batch(self._cad, inputs[s],
                                          plans_r[s]))
-                    seconds[s] = (time.perf_counter() - t0) * slow
+                    seconds[s] = (self.clock.monotonic() - t0) * slow
                 else:
                     outs[s] = serve_task_batch(self._cad, inputs[s],
                                                plans_r[s])
@@ -336,10 +376,10 @@ class ElasticExecutor:
             for s, added in rec.added_time.items():
                 slow = self.faults.slow_factor(step, s)
                 if self.timer == "wall":
-                    t0 = time.perf_counter()
+                    t0 = self.clock.monotonic()
                     rec_outs[s] = jax.block_until_ready(serve_task_batch(
                         self._cad, rec_inputs[s], rec_plans[s]))
-                    rec_secs[s] = (time.perf_counter() - t0) * slow
+                    rec_secs[s] = (self.clock.monotonic() - t0) * slow
                 else:
                     rec_outs[s] = serve_task_batch(
                         self._cad, rec_inputs[s], rec_plans[s])
@@ -384,7 +424,69 @@ class ElasticExecutor:
             server_seconds=dict(seconds), recovery_seconds=rec_secs,
             step_seconds=float(step_seconds), deadline=float(deadline),
             plan_stats=dict(stats), events=tuple(events))
+        self._record_step(st, report, detect)
         return out, report
+
+    def _record_step(self, st: StepState, report: StepReport,
+                     detect: float) -> None:
+        """Narrate one finished step: per-server spans on the cumulative
+        step timeline (Perfetto gantt), fault/speculation instants, and
+        the step's counters/gauges.  Strictly write-only — outputs are
+        already merged by the time this runs (DESIGN.md §14)."""
+        rec, mx = self.recorder, self.metrics
+        t0, dur = self._trace_t, report.step_seconds
+        self._trace_t = t0 + dur
+        step = report.step
+        if rec.enabled:
+            rec.add_span("step", "step", t0, dur, step=step,
+                         args={"epoch": report.epoch,
+                               "failed": list(report.failed),
+                               "speculated": list(report.speculated),
+                               "recovered_blocks": report.recovered_blocks})
+            for s, sec in sorted(report.server_seconds.items()):
+                rec.add_span("serve", server_track(s), t0, sec, step=step,
+                             args={"predicted": st.preds.get(s, 0.0),
+                                   "n_tasks": len(st.tasks_by.get(s, ()))})
+            for s in report.failed:
+                name = "kill" if s in st.injected else "serve-error"
+                rec.instant(name, server_track(s), ts=t0, step=step)
+            for s in report.speculated:
+                rec.instant("speculate", server_track(s),
+                            ts=t0 + report.deadline, step=step,
+                            args={"deadline": report.deadline})
+            for s, rs in sorted(report.recovery_seconds.items()):
+                start = t0 + max(report.server_seconds.get(s, 0.0),
+                                 detect)
+                rec.add_span("recover", server_track(s), start, rs,
+                             step=step,
+                             args={"recovered_from":
+                                   list(report.failed)
+                                   + list(report.speculated)})
+            rec.instant("merge", "step", ts=t0 + dur, step=step,
+                        args={"blocks": report.recovered_blocks})
+        mx.counter("cad_steps_total", "elastic steps completed").inc()
+        mx.counter("cad_failures_total",
+                   "servers that lost tasks mid-step").inc(
+            len(report.failed))
+        mx.counter("cad_speculations_total",
+                   "straggler speculative re-executions").inc(
+            len(report.speculated))
+        mx.counter("cad_recovered_blocks_total",
+                   "q blocks re-dispatched by recovery").inc(
+            report.recovered_blocks)
+        mx.histogram("cad_step_seconds",
+                     "modeled/measured step completion seconds").observe(
+            report.step_seconds)
+        mx.gauge("cad_pool_epoch", "pool membership epoch").set(
+            report.epoch)
+        resid = mx.gauge(
+            "cad_calib_residual",
+            "|predicted - measured| / measured serve seconds",
+            labels=("server",))
+        for s, sec in report.server_seconds.items():
+            if st.tasks_by.get(s):
+                resid.set(abs(st.preds.get(s, 0.0) - sec)
+                          / max(sec, 1e-12), server=s)
 
     # ------------------------------------------------------ conveniences
     def synth_inputs(self, segment_ids: np.ndarray,

@@ -34,6 +34,9 @@ import dataclasses
 import threading
 from typing import Iterator, List, Optional, Tuple
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 ACTIVE = "active"
 DRAINING = "draining"
 DEAD = "dead"
@@ -144,6 +147,17 @@ class ServerPool:
     def _bump(self, event: str) -> int:
         self._epoch += 1
         self._log.append((self._epoch, event))
+        # narrate the membership change (DESIGN.md §14); the recorder
+        # and registry have their own locks and never call back into
+        # the pool, so recording under self._lock cannot deadlock
+        obs_trace.get_recorder().instant(
+            "pool." + event.split(" ", 1)[0], "pool",
+            args={"event": event, "epoch": self._epoch})
+        obs_metrics.get_registry().gauge(
+            "cad_pool_epoch", "pool membership epoch").set(self._epoch)
+        obs_metrics.get_registry().counter(
+            "cad_pool_events_total", "membership mutations",
+            labels=("kind",)).inc(kind=event.split(" ", 1)[0])
         return self._epoch
 
     def drain(self, slot: int) -> int:

@@ -31,6 +31,8 @@ from repro.core.mask import MaskSpec
 from repro.core.plan import CADConfig, StepPlan, plan_from_assignment
 from repro.core.scheduler import (block_costs, layout_from_segments,
                                   streamed_doc_ids)
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def assignment_of_plan(cfg: CADConfig, plan) -> np.ndarray:
@@ -215,9 +217,21 @@ def build_recovery_plan(cfg: CADConfig, segment_ids: np.ndarray, plan,
             kv_need[dst][dc] = max(kv_need[dst].get(dc, 0), p)
         g = h
     sub = plan_from_assignment(cfg, assign, masked_doc_of, bi_of, docs)
-    return RecoveryPlan(plan=sub, lost=lost, assign=assign,
-                        added_time={s: t for s, t in added.items()
-                                    if t > 0})
+    out = RecoveryPlan(plan=sub, lost=lost, assign=assign,
+                       added_time={s: t for s, t in added.items()
+                                   if t > 0})
+    # narrate the sub-plan itself (DESIGN.md §14): the executor times
+    # and spans its *execution*; this is the planning decision
+    obs_trace.get_recorder().instant(
+        "recovery.plan", "planner",
+        args={"failed": failed, "n_blocks": out.n_blocks,
+              "destinations": sorted(out.added_time)})
+    reg = obs_metrics.get_registry()
+    reg.counter("cad_recovery_plans_total",
+                "recovery sub-plans built").inc()
+    reg.counter("cad_recovery_blocks_planned_total",
+                "lost q blocks routed to survivors").inc(out.n_blocks)
+    return out
 
 
 def recovery_tasks(cfg: CADConfig, rec: RecoveryPlan,

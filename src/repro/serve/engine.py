@@ -35,6 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.scheduler import (DECODE, DONE, ContinuousScheduler,
                                    Request, SchedulerConfig)
 from repro.train.step import make_serve_chunk_step, make_serve_step
@@ -288,6 +290,16 @@ class Engine:
         and batch serving share one code path (and one trace order)."""
         if not sched.has_work():
             return False
+        obs_metrics.get_registry().counter(
+            "serve_rounds_total", "continuous-batching rounds").inc()
+        with obs_trace.get_recorder().span(
+                "serve.round", "serve",
+                args={"active": len(sched.active),
+                      "waiting": len(sched.waiting)}):
+            return self._serve_round_inner(sched, on_token)
+
+    def _serve_round_inner(self, sched: ContinuousScheduler,
+                           on_token) -> bool:
         newly = sched.admit()
         if newly:
             mask = np.zeros(self.batch_size, bool)

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core.cost_model import CalibrationSnapshot, CostModel
 from repro.data.packing import BLOCK
+from repro.obs import metrics as obs_metrics
 
 WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
 
@@ -220,6 +221,16 @@ class ContinuousScheduler:
             raise RuntimeError(
                 f"request {self.waiting[0].rid} can never be admitted "
                 f"under token_budget={self.cfg.token_budget}")
+        reg = obs_metrics.get_registry()
+        reg.counter("serve_admitted_total",
+                    "requests admitted into cache slots").inc(
+            len(admitted))
+        reg.gauge("serve_queue_depth",
+                  "requests waiting for a cache slot").set(
+            len(self.waiting))
+        reg.gauge("serve_calib_version",
+                  "calibration snapshot version admission priced "
+                  "with").set(self.last_calib_version)
         return admitted
 
     # ----------------------------------------------------------- eviction
@@ -246,6 +257,11 @@ class ContinuousScheduler:
             self.waiting.appendleft(req)
             self.trace.append(("evict", req.rid))
             evicted.append(req)
+        if evicted:
+            obs_metrics.get_registry().counter(
+                "serve_evictions_total",
+                "recompute preemptions (LIFO budget evictions)").inc(
+                len(evicted))
         return evicted
 
     # ------------------------------------------------------------ prefill
@@ -387,4 +403,6 @@ class ContinuousScheduler:
         self.free.sort()
         self.done.append(req)
         self.trace.append(("finish", req.rid))
+        obs_metrics.get_registry().counter(
+            "serve_finished_total", "requests run to completion").inc()
         return req

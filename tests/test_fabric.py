@@ -399,6 +399,17 @@ def test_daemon_http_roundtrip():
         with urllib.request.urlopen(base + "/health") as r:
             h = json.loads(r.read())
         assert h["status"] == "ok" and h["done"] == 2 and h["rounds"] > 0
+        # DESIGN.md §14: pool/queue fields come from the same registry
+        # /metrics exports, so the two endpoints can never disagree
+        assert h["queue_depth"] == 0 and h["pool_epoch"] >= 0
+        assert h["calib_version"] >= -1
+        with urllib.request.urlopen(base + "/metrics") as r:
+            assert r.headers["Content-Type"] \
+                == "text/plain; version=0.0.4"
+            text = r.read().decode()
+        assert "# TYPE serve_admitted_total counter" in text
+        assert "# TYPE serve_rounds_total counter" in text
+        assert "serve_queue_depth 0" in text
 
         with pytest.raises(urllib.error.HTTPError) as ei:
             post("/generate", {"prompt": []})

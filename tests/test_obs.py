@@ -1,0 +1,451 @@
+"""Observability: trace recorder, metrics registry, injectable clocks,
+straggler report (DESIGN.md §14).
+
+The contract under test is "observe, never perturb": a disabled
+recorder is a true no-op and a live one changes nothing about outputs;
+the ring stays bounded under concurrent writers; the Chrome-trace
+export is Perfetto's schema; Prometheus text and the JSON snapshot
+round-trip; executor timer reads go through the injectable clock so
+timing tests script time instead of sleeping; and trace_report's
+attribution matches hand-computed goldens.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.cad import CADConfig, CADSession
+from repro.core.cost_model import CommModel
+from repro.launch import trace_report
+from repro.obs import (DEFAULT_BUCKETS, MONOTONIC, Clock, FakeClock,
+                       MetricsRegistry, MonotonicClock, TraceRecorder,
+                       disable_tracing, enable_tracing, get_recorder,
+                       get_registry, server_track, set_recorder,
+                       set_registry)
+from repro.runtime import ElasticExecutor, FaultSchedule, ServerPool
+
+BLK = 16
+
+
+@pytest.fixture(autouse=True)
+def _isolate_globals():
+    """Every test runs against the default no-op recorder and a fresh
+    registry; whatever it installs is torn down after."""
+    prev_rec, prev_reg = get_recorder(), get_registry()
+    set_recorder(None)
+    set_registry(MetricsRegistry())
+    yield
+    set_recorder(prev_rec)
+    set_registry(prev_reg)
+
+
+def make_segs(d, nb, seed=0, max_doc_blocks=4):
+    rng = np.random.default_rng(seed)
+    segs = np.zeros((d, nb * BLK), np.int32)
+    sid = 1
+    for r in range(d):
+        t = 0
+        while t < nb:
+            dbl = int(rng.integers(1, min(max_doc_blocks, nb - t) + 1))
+            segs[r, t * BLK:(t + dbl) * BLK] = sid
+            sid += 1
+            t += dbl
+    return segs
+
+
+def make_executor(d=4, nb=8, *, faults=None, **kw):
+    cfg = CADConfig(n_servers=d, blk=BLK, nb=nb, cq=nb, ckv=2 * nb,
+                    nkv=4 * nb)
+    session = CADSession(cfg=cfg, comm=CommModel(2, 8, 2),
+                        tolerance=0.05, jmax=nb, prefetch=0)
+    session = session.with_pool(ServerPool(d))
+    return ElasticExecutor(session, faults=faults, **kw)
+
+
+def run_steps(ex, steps=3, d=4, nb=8, seed=0):
+    outs, reports = [], []
+    for step in range(steps):
+        segs = make_segs(d, nb, seed=seed + step)
+        pos = np.broadcast_to(np.arange(segs.shape[1]), segs.shape).copy()
+        q, k, v, p = ex.synth_inputs(segs, pos, seed=seed + step)
+        out, rep = ex.run_step(step, q, k, v, p, segs)
+        outs.append(np.asarray(out))
+        reports.append(rep)
+    return outs, reports
+
+
+# ===================================================================
+# Clocks
+# ===================================================================
+
+def test_fake_clock_tick_and_advance():
+    c = FakeClock(start=10.0, tick=0.5)
+    assert c.monotonic() == 10.0
+    assert c.monotonic() == 10.5         # auto-advanced by tick
+    assert c.reads == 2
+    assert c.advance(2.0) == 13.0
+    assert c.monotonic() == 13.0
+    with pytest.raises(ValueError):
+        c.advance(-1.0)
+    with pytest.raises(ValueError):
+        FakeClock(tick=-0.1)
+
+
+def test_fake_clock_is_deterministic_fixture():
+    a = [FakeClock(tick=0.25).monotonic() for _ in range(3)]
+    b = [FakeClock(tick=0.25).monotonic() for _ in range(3)]
+    assert a == b
+
+
+def test_clock_protocol():
+    assert isinstance(MONOTONIC, Clock)
+    assert isinstance(FakeClock(), Clock)
+    t0 = MonotonicClock().monotonic()
+    assert MonotonicClock().monotonic() >= t0
+
+
+# ===================================================================
+# TraceRecorder: no-op discipline, ring bounds, thread safety
+# ===================================================================
+
+def test_disabled_recorder_is_noop():
+    rec = TraceRecorder(capacity=4, enabled=False)
+    with rec.span("a", "t"):
+        pass
+    rec.add_span("b", "t", 0.0, 1.0)
+    rec.instant("c", "t")
+    assert len(rec) == 0 and rec.n_dropped == 0
+    assert rec.events() == ()
+    assert rec.to_chrome_trace()["traceEvents"] == []
+
+
+def test_global_default_is_disabled_noop():
+    rec = get_recorder()
+    assert not rec.enabled
+    rec.instant("x", "t")
+    assert len(rec) == 0
+
+
+def test_enable_disable_tracing_swaps_global():
+    live = enable_tracing(capacity=16)
+    assert get_recorder() is live and live.enabled
+    live.instant("x", "t")
+    assert len(get_recorder()) == 1
+    disable_tracing()
+    assert not get_recorder().enabled
+
+
+def test_ring_bounds_and_drop_accounting():
+    rec = TraceRecorder(capacity=8)
+    for i in range(20):
+        rec.instant(f"e{i}", "t", ts=float(i))
+    assert len(rec) == 8
+    assert rec.n_dropped == 12
+    # oldest retained first: events 12..19 survive
+    assert [e.name for e in rec.events()] == [f"e{i}"
+                                              for i in range(12, 20)]
+    assert rec.to_chrome_trace()["otherData"]["dropped_events"] == 12
+    rec.clear()
+    assert len(rec) == 0 and rec.n_dropped == 0
+    with pytest.raises(ValueError):
+        TraceRecorder(capacity=0)
+
+
+def test_recorder_thread_safety():
+    rec = TraceRecorder(capacity=1000)
+    n_threads, per = 8, 500
+
+    def work(t):
+        for i in range(per):
+            if i % 2:
+                rec.instant(f"i{t}.{i}", f"track/{t}", ts=float(i))
+            else:
+                rec.add_span(f"s{t}.{i}", f"track/{t}", float(i), 1.0)
+
+    threads = [threading.Thread(target=work, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert len(rec) == 1000
+    assert rec.n_dropped == n_threads * per - 1000
+    evs = rec.events()
+    assert len(evs) == 1000
+    assert all(e is not None and e.name and e.track for e in evs)
+
+
+def test_span_context_manager_measures_with_clock():
+    clock = FakeClock(start=5.0, tick=0.5)
+    rec = TraceRecorder(capacity=8, clock=clock)
+    with rec.span("work", "main", step=3, args={"k": 1}):
+        pass                             # enter + exit = two reads
+    (ev,) = rec.events()
+    assert ev.name == "work" and ev.track == "main"
+    assert ev.ts == 5.0 and ev.dur == pytest.approx(0.5)
+    assert ev.step == 3 and ev.args == {"k": 1}
+
+
+# ===================================================================
+# Chrome-trace export schema
+# ===================================================================
+
+def test_chrome_trace_schema(tmp_path):
+    rec = TraceRecorder(capacity=32)
+    rec.add_span("serve", server_track(0), 1.0, 0.25, step=0,
+                 args={"predicted": np.float64(0.3)})
+    rec.instant("kill", server_track(1), ts=1.5, step=0)
+    trace = rec.to_chrome_trace()
+    evs = trace["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    names = {e["tid"]: e["args"]["name"] for e in meta}
+    assert sorted(names.values()) == ["server/0", "server/1"]
+    span = next(e for e in evs if e["ph"] == "X")
+    assert span["ts"] == pytest.approx(1.0e6)      # microseconds
+    assert span["dur"] == pytest.approx(0.25e6)
+    assert span["args"]["step"] == 0
+    assert isinstance(span["args"]["predicted"], float)  # np -> float
+    assert names[span["tid"]] == "server/0"
+    inst = next(e for e in evs if e["ph"] == "i")
+    assert inst["s"] == "t" and inst["ts"] == pytest.approx(1.5e6)
+    # save() writes the same loadable JSON
+    p = tmp_path / "t.trace.json"
+    rec.save(str(p))
+    with open(p) as f:
+        assert json.load(f)["traceEvents"] == json.loads(
+            json.dumps(evs))
+
+
+# ===================================================================
+# MetricsRegistry
+# ===================================================================
+
+def test_counter_gauge_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("steps_total", "steps", labels=())
+    c.inc()
+    c.inc(2.0)
+    assert c.value() == 3.0
+    with pytest.raises(ValueError):
+        c.inc(-1.0)
+    g = reg.gauge("epoch", labels=("server",))
+    g.set(4, server=1)
+    assert g.value(server=1) == 4.0
+    assert g.value(server=2) is None     # never-set series
+    with pytest.raises(ValueError):
+        g.set(1.0, wrong="x")            # undeclared label
+    with pytest.raises(TypeError):
+        g.inc()                          # kind mismatch
+
+
+def test_family_registration_idempotent_and_conflicting():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total", "help", labels=("k",))
+    b = reg.counter("x_total", labels=("k",))
+    assert a is b
+    with pytest.raises(ValueError):
+        reg.gauge("x_total", labels=("k",))
+    with pytest.raises(ValueError):
+        reg.counter("x_total", labels=("other",))
+
+
+def test_histogram_buckets_and_text_exposition():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", "latency", buckets=(1.0, 2.0))
+    for v in (0.5, 1.0, 1.5, 3.0):
+        h.observe(v)
+    txt = reg.to_text()
+    # le is cumulative: <=1.0 catches 0.5 and the boundary 1.0
+    assert 'lat_bucket{le="1"} 2' in txt
+    assert 'lat_bucket{le="2"} 3' in txt
+    assert 'lat_bucket{le="+Inf"} 4' in txt
+    assert "lat_sum 6" in txt and "lat_count 4" in txt
+    assert "# TYPE lat histogram" in txt
+    assert "# HELP lat latency" in txt
+    assert h.value() == pytest.approx(6.0)   # histogram value = sum
+
+
+def test_text_exposition_labeled_series():
+    reg = MetricsRegistry()
+    c = reg.counter("req_total", "requests", labels=("code", "path"))
+    c.inc(3, code=200, path="/x")
+    c.inc(1, code=500, path="/x")
+    txt = reg.to_text()
+    assert '# TYPE req_total counter' in txt
+    assert 'req_total{code="200",path="/x"} 3' in txt
+    assert 'req_total{code="500",path="/x"} 1' in txt
+
+
+def test_json_round_trip_exact():
+    reg = MetricsRegistry()
+    reg.counter("a_total", "A").inc(5)
+    reg.gauge("b", "B", labels=("s",)).set(1.5, s=0)
+    h = reg.histogram("c_seconds", "C", buckets=DEFAULT_BUCKETS)
+    h.observe(0.01)
+    h.observe(2.0)
+    d = reg.to_dict()
+    json.dumps(d)                        # JSON-able
+    reg2 = MetricsRegistry.from_dict(d)
+    assert reg2.to_dict() == d
+    assert reg2.to_text() == reg.to_text()
+
+
+def test_set_registry_none_installs_fresh():
+    get_registry().counter("junk_total").inc()
+    fresh = set_registry(None)
+    assert fresh is get_registry()
+    assert fresh.counter("junk_total").value() is None
+
+
+# ===================================================================
+# Executor instrumentation: no-perturbation, trace content, residuals
+# ===================================================================
+
+def test_traced_run_bit_identical_to_untraced():
+    faults = FaultSchedule.parse("kill:1@1")
+    base, _ = run_steps(make_executor(faults=faults), steps=3)
+    rec = TraceRecorder(capacity=4096)
+    traced, _ = run_steps(
+        make_executor(faults=faults, recorder=rec,
+                      metrics=MetricsRegistry()), steps=3)
+    assert len(rec) > 0                  # it really did record
+    for a, b in zip(base, traced):
+        assert a.tobytes() == b.tobytes()
+
+
+def test_executor_trace_narrates_fault_and_recovery():
+    rec = TraceRecorder(capacity=4096)
+    mx = MetricsRegistry()
+    ex = make_executor(faults=FaultSchedule.parse("kill:1@1"),
+                       recorder=rec, metrics=mx)
+    _, reports = run_steps(ex, steps=3)
+    evs = rec.events()
+    kills = [e for e in evs if e.name == "kill"]
+    assert len(kills) == 1
+    assert kills[0].track == server_track(1) and kills[0].step == 1
+    recovers = [e for e in evs if e.name == "recover" and e.step == 1]
+    assert recovers and all(e.dur > 0 for e in recovers)
+    assert all(e.track != server_track(1) for e in recovers)
+    # cumulative step timeline: step n starts where step n-1 ended
+    steps = sorted((e for e in evs
+                    if e.name == "step" and e.track == "step"),
+                   key=lambda e: e.step)
+    assert len(steps) == 3
+    for prev, nxt in zip(steps, steps[1:]):
+        assert nxt.ts == pytest.approx(prev.ts + prev.dur)
+    assert steps[1].args["failed"] == [1]
+    # metrics tell the same story
+    assert mx.counter("cad_steps_total").value() == 3.0
+    assert mx.counter("cad_failures_total").value() == 1.0
+    assert mx.counter("cad_recovered_blocks_total").value() \
+        == float(sum(r.recovered_blocks for r in reports))
+    assert mx.gauge("cad_pool_epoch").value() == reports[-1].epoch
+
+
+def test_rigged_calibrator_residual_gauge():
+    # model timer: measured = predicted * slow, so a 2x-slowed server
+    # shows residual (2p - p)/2p = 0.5 and healthy servers exactly 0
+    mx = MetricsRegistry()
+    ex = make_executor(faults=FaultSchedule.parse("slow:1x2@0-9"),
+                       metrics=mx)
+    run_steps(ex, steps=2)
+    resid = mx.gauge("cad_calib_residual", labels=("server",))
+    assert resid.value(server=1) == pytest.approx(0.5)
+    assert resid.value(server=0) == pytest.approx(0.0)
+    assert resid.value(server=3) == pytest.approx(0.0)
+
+
+def test_wall_timer_reads_injectable_clock():
+    # satellite (a): the executor's wall timer goes through the clock;
+    # a FakeClock turns wall timing into a deterministic fixture
+    clock = FakeClock(tick=0.25)
+    ex = make_executor(timer="wall", clock=clock)
+    assert ex.clock is clock
+    _, (rep,) = run_steps(ex, steps=1)
+    assert clock.reads > 0
+    for s, sec in rep.server_seconds.items():
+        assert sec == pytest.approx(0.25)    # one tick per paired read
+
+
+def test_model_timer_never_reads_wall_clock():
+    clock = FakeClock(tick=1.0)
+    ex = make_executor(timer="model", clock=clock)
+    _, (rep,) = run_steps(ex, steps=1)
+    assert clock.reads == 0
+    assert all(sec > 0 for sec in rep.server_seconds.values())
+
+
+# ===================================================================
+# trace_report: straggler attribution goldens
+# ===================================================================
+
+def golden_trace():
+    rec = TraceRecorder(capacity=64)
+    rec.add_span("serve", server_track(0), 0.0, 2.0, step=0,
+                 args={"predicted": 1.9})
+    rec.add_span("serve", server_track(2), 0.0, 1.0, step=0,
+                 args={"predicted": 1.1})
+    rec.add_span("recover", server_track(0), 2.0, 0.5, step=0)
+    rec.instant("kill", server_track(1), ts=0.0, step=0)
+    rec.add_span("serve", server_track(1), 3.0, 4.0, step=1,
+                 args={"predicted": 4.2})
+    rec.add_span("serve.backfill", server_track(1), 7.0, 1.0, step=1)
+    return rec.to_chrome_trace()
+
+
+def test_trace_report_golden_attribution():
+    steps = trace_report.load_steps(golden_trace())
+    assert sorted(steps) == [0, 1]
+    a0 = trace_report.attribute_step(steps[0])
+    assert a0["server"] == 0
+    assert a0["max_seconds"] == pytest.approx(2.5)   # serve + recover
+    assert a0["mean_seconds"] == pytest.approx((2.5 + 1.0) / 2)
+    assert a0["predicted_seconds"] == pytest.approx(1.9)
+    assert a0["recovery_share"] == pytest.approx(0.5 / 2.5)
+    assert a0["events"] == ["kill"]
+    a1 = trace_report.attribute_step(steps[1])
+    assert a1["server"] == 1
+    assert a1["max_seconds"] == pytest.approx(5.0)   # serve + backfill
+    assert a1["recovery_share"] == 0.0
+    assert a1["events"] == []
+
+
+def test_trace_report_tie_breaks_lowest_slot():
+    servers = {3: {"serve": 1.0, "recover": 0.0, "predicted": 0.0,
+                   "events": []},
+               1: {"serve": 1.0, "recover": 0.0, "predicted": 0.0,
+                   "events": []}}
+    assert trace_report.attribute_step(servers)["server"] == 1
+
+
+def test_trace_report_lines_and_empty(capsys, tmp_path):
+    lines = trace_report.report_lines(golden_trace())
+    assert len(lines) == 3               # header + 2 steps
+    assert "kill" in lines[1] and lines[1].split()[0] == "0"
+    assert trace_report.report_lines({"traceEvents": []})[-1] \
+        == "(no per-step server events in trace)"
+    # CLI --json end-to-end over a saved file
+    p = tmp_path / "g.json"
+    with open(p, "w") as f:
+        json.dump(golden_trace(), f)
+    trace_report.main([str(p), "--json"])
+    out = json.loads(capsys.readouterr().out)
+    assert out["0"]["server"] == 0
+    assert out["1"]["max_seconds"] == pytest.approx(5.0)
+
+
+def test_executor_trace_feeds_trace_report():
+    rec = TraceRecorder(capacity=4096)
+    ex = make_executor(faults=FaultSchedule.parse("kill:1@1"),
+                       recorder=rec, metrics=MetricsRegistry())
+    _, reports = run_steps(ex, steps=2)
+    steps = trace_report.load_steps(rec.to_chrome_trace())
+    a = trace_report.attribute_step(steps[1])
+    totals = {s: reports[1].server_seconds.get(s, 0.0)
+              + reports[1].recovery_seconds.get(s, 0.0)
+              for s in reports[1].server_seconds}
+    want = max(sorted(totals), key=lambda s: totals[s])
+    assert a["server"] == want
+    assert a["max_seconds"] == pytest.approx(totals[want])
+    assert "kill" in a["events"]
